@@ -1,0 +1,41 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+QUICK = os.environ.get("BENCH_QUICK", "1") == "1"
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "bench")
+
+
+def out_path(name: str) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    path = out_path(name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+
+def lcv(load: np.ndarray) -> float:
+    a = load[load > 1e-12]
+    return float(a.std() / a.mean()) if a.size else 0.0

@@ -1,0 +1,63 @@
+"""Beyond-paper: Q-StaR on the TPU ICI fabric (DESIGN.md §3).
+
+Max/CV link load of decomposed collectives on the production meshes —
+completion time of a bandwidth-bound collective ∝ max link load.  Scenarios:
+balanced MoE all-to-all, hot-expert skew, and the multi-pod fabric with
+BiDOR-k (dimension-order choice over 3 axes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import bidor, bidor_k, multipod, torus
+from repro.core.bidor import greedy_refine
+from repro.dist.qstar_collectives import (alltoall_traffic, build_ici_plan,
+                                          ici_link_loads)
+from .common import write_csv
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def report(name, topo, t, k_orders=False):
+        n = topo.num_nodes
+        xy = bidor(topo, np.zeros(n)) if not k_orders else \
+            bidor_k(topo, np.zeros(n), orders=None)
+        nr, tab = build_ici_plan(topo, t, k_orders=k_orders)
+        tab_g = greedy_refine(topo, t, tab, sweeps=3)
+        l_xy = ici_link_loads(topo, t, xy)
+        l_bd = ici_link_loads(topo, t, tab)
+        l_g = ici_link_loads(topo, t, tab_g)
+        gain = (1 - l_bd["max"] / l_xy["max"]) * 100
+        gain_g = (1 - l_g["max"] / l_xy["max"]) * 100
+        rows.append([name, f"{l_xy['max']:.5f}", f"{l_bd['max']:.5f}",
+                     f"{gain:+.1f}%", f"{l_g['max']:.5f}",
+                     f"{gain_g:+.1f}%", f"{l_xy['cv']:.3f}",
+                     f"{l_bd['cv']:.3f}"])
+        print(f"linkload {name:26s} maxload XY={l_xy['max']:.5f} → "
+              f"BiDOR={l_bd['max']:.5f} ({gain:+.1f}%) → "
+              f"BiDOR-G={l_g['max']:.5f} ({gain_g:+.1f}%)")
+
+    pod = torus(16, 16)
+    report("pod16x16_uniform_a2a", pod, alltoall_traffic(pod))
+    skew = 1.0 + 4.0 * (rng.random(256) < 0.10)
+    report("pod16x16_hot_experts", pod, alltoall_traffic(pod, skew=skew))
+    hot2 = np.ones(256)
+    hot2[rng.choice(256, 16, replace=False)] = 8.0
+    report("pod16x16_8x_hotspots", pod, alltoall_traffic(pod, skew=hot2))
+
+    mp = multipod(2, 8, 8)
+    t = alltoall_traffic(mp, skew=1.0 + 4.0 * (rng.random(128) < 0.10))
+    report("multipod2x8x8_hot(bin)", mp, t)
+    report("multipod2x8x8_hot(k!)", mp, t, k_orders=True)
+
+    write_csv("linkload_ici.csv",
+              ["scenario", "max_xy", "max_bidor", "gain_bidor",
+               "max_bidor_g", "gain_bidor_g", "cv_xy", "cv_bidor"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

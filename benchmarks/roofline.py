@@ -1,0 +1,76 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+the per-(arch × shape × mesh) three-term roofline table with dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and roofline-implied MFU bound.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import write_csv
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh is None or r["mesh"] == mesh:
+            recs.append(r)
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --arch all --mesh "
+              "single,multi` first")
+        return []
+    rows = []
+    header = ["arch", "shape", "mesh", "kind", "compute_ms", "memory_ms",
+              "collective_ms", "dominant", "useful_flops", "mfu_bound",
+              "peak_GiB"]
+    print(f"{'arch':22s} {'shape':12s} {'mesh':6s} {'comp(ms)':>9s} "
+          f"{'mem(ms)':>9s} {'coll(ms)':>9s} {'dom':>6s} {'useful':>7s} "
+          f"{'MFU≤':>7s} {'GiB':>7s}")
+    for r in recs:
+        rl = r["roofline"]
+        row = [r["arch"], r["shape"], r["mesh"], r["kind"],
+               f"{rl['compute_s'] * 1e3:.1f}",
+               f"{rl['memory_s'] * 1e3:.1f}",
+               f"{rl['collective_s'] * 1e3:.1f}",
+               rl["dominant"],
+               f"{rl['useful_flops_ratio']:.3f}",
+               f"{rl['mfu_bound']:.4f}",
+               f"{r['memory']['peak_gb']:.2f}"]
+        rows.append(row)
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{row[4]:>9s} {row[5]:>9s} {row[6]:>9s} "
+              f"{rl['dominant'][:6]:>6s} {row[8]:>7s} {row[9]:>7s} "
+              f"{row[10]:>7s}")
+    write_csv("roofline.csv", header, rows)
+
+    singles = [r for r in recs if r["mesh"] == "single"]
+    if singles:
+        worst = min(singles, key=lambda r: r["roofline"]["mfu_bound"])
+        coll = max(singles, key=lambda r: (
+            r["roofline"]["collective_s"]
+            / max(max(r["roofline"]["compute_s"],
+                      r["roofline"]["memory_s"]), 1e-12)))
+        print(f"\nroofline: worst MFU-bound cell: {worst['arch']} × "
+              f"{worst['shape']} ({worst['roofline']['mfu_bound']:.4f})")
+        print(f"roofline: most collective-bound cell: {coll['arch']} × "
+              f"{coll['shape']} (coll {coll['roofline']['collective_s']*1e3:.1f} ms)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark orchestrator — one entry per paper table/figure + the
+beyond-paper ICI analyses.
+
+  fig1      paper Fig. 1  — load distribution vs N-Rank prediction
+  table1    paper Table 1 — LCV per algorithm × scenario
+  fig8      paper Fig. 8  — throughput/latency/reorder vs injection rate
+  fig9      paper Fig. 9  — realistic Clos-leaf workload
+  linkload  DESIGN §3     — Q-StaR on the TPU ICI fabric
+  roofline  deliverable g — per-(arch × shape × mesh) roofline table
+  nrank     offline cost  — N-Rank wall time (the quasi-static budget)
+
+Set BENCH_QUICK=0 for full-length simulations.  Run as
+``PYTHONPATH=src python -m benchmarks.run [names...]``.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def bench_nrank():
+    """Offline pipeline cost: N-Rank + BiDOR wall time per topology —
+    the 'ample time offline' budget of paper §3.1."""
+    from repro.core import build_plan, mesh2d, mesh2d_edge_io, torus, traffic
+    from .common import write_csv
+    rows = []
+    for name, topo in [("mesh5x5", mesh2d(5, 5)),
+                       ("edgeio5x5", mesh2d_edge_io(5, 5)),
+                       ("torus16x16", torus(16, 16))]:
+        t = traffic.uniform(topo)
+        t0 = time.time()
+        plan = build_plan(topo, t)
+        dt = time.time() - t0
+        rows.append([name, topo.num_nodes, f"{dt * 1e3:.1f}",
+                     plan.nrank.iterations])
+        print(f"nrank,{name},{dt * 1e6:.0f}us_per_call,"
+              f"iters={plan.nrank.iterations}")
+    write_csv("nrank_cost.csv", ["topology", "nodes", "ms", "iters"], rows)
+
+
+STAGES = ["fig1", "table1", "fig8", "fig9", "linkload", "roofline",
+          "nrank"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or STAGES
+    t_all = time.time()
+    for name in want:
+        print(f"\n================ {name} ================", flush=True)
+        t0 = time.time()
+        if name == "fig1":
+            from . import fig1_load
+            fig1_load.main()
+        elif name == "table1":
+            from . import table1_lcv
+            table1_lcv.main()
+        elif name == "fig8":
+            from . import fig8_synthetic
+            fig8_synthetic.main()
+        elif name == "fig9":
+            from . import fig9_realistic
+            fig9_realistic.main()
+        elif name == "linkload":
+            from . import linkload
+            linkload.main()
+        elif name == "roofline":
+            from . import roofline
+            roofline.main()
+        elif name == "nrank":
+            bench_nrank()
+        else:
+            raise SystemExit(f"unknown benchmark {name}")
+        print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
+    print(f"\nall benchmarks done in {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table 1: LCVs of routing algorithms across scenarios.
+
+Paper values for reference: 2DMesh+UN: XY .29 O1Turn .28 Valiant .35
+ROMM .46 BiDOR .20 | EdgeIO+UN: .28 .36 .33 .19 .08 | EdgeIO+OV: .36 .63
+.37 .30 .17.
+"""
+
+from __future__ import annotations
+
+from repro.core import build_plan, mesh2d, mesh2d_edge_io, traffic
+from repro.noc import Algo, SimConfig, run_sim
+from .common import QUICK, write_csv
+
+SCENARIOS = [
+    ("2DMesh+UN", mesh2d(5, 5), "uniform", 0.45),
+    ("EdgeIO+UN", mesh2d_edge_io(5, 5), "uniform", 0.4),
+    ("EdgeIO+OV", mesh2d_edge_io(5, 5), "overturn", 0.3),
+]
+ALGOS = [Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM, Algo.ODDEVEN,
+         Algo.BIDOR]
+
+
+def main():
+    cycles = 6000 if QUICK else 16000
+    rows = []
+    header = ["scenario"] + [a.name for a in ALGOS]
+    for name, topo, pattern, rate in SCENARIOS:
+        t = traffic.PATTERNS[pattern](topo)
+        plan = build_plan(topo, t)
+        row = [name]
+        for algo in ALGOS:
+            cfg = SimConfig(algo=algo, cycles=cycles, warmup=cycles // 3,
+                            injection_rate=rate)
+            r = run_sim(topo, t, cfg, bidor_table=plan.table)
+            row.append(f"{r.lcv:.3f}")
+        rows.append(row)
+        print("table1", " ".join(f"{h}={v}" for h, v in zip(header, row)))
+    write_csv("table1_lcv.csv", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

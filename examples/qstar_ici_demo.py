@@ -1,0 +1,44 @@
+"""Q-StaR scheduling a MoE expert all-to-all on the TPU ICI fabric.
+
+    PYTHONPATH=src python examples/qstar_ici_demo.py
+
+1. Models the 16×16 pod ICI torus as a Q-StaR topology.
+2. Builds the traffic matrix of an expert-parallel all-to-all with hot
+   experts (skewed routing).
+3. Runs N-Rank → BiDOR → BiDOR-G offline and reports the max-link-load
+   (collective completion-time bound) improvements.
+4. Validates the decomposed BiDOR all-to-all numerically on a 16-device
+   CPU mesh (see tests/_subproc_collectives.py for the shard_map demo).
+"""
+
+import numpy as np
+
+from repro.core import bidor, torus
+from repro.core.bidor import greedy_refine
+from repro.dist.qstar_collectives import (alltoall_traffic, build_ici_plan,
+                                          ici_link_loads)
+
+
+def main():
+    topo = torus(16, 16)                       # one v5e pod's ICI fabric
+    rng = np.random.default_rng(0)
+    skew = np.ones(256)
+    skew[rng.choice(256, 26, replace=False)] = 5.0   # hot experts
+    t = alltoall_traffic(topo, skew=skew)
+
+    xy = bidor(topo, np.zeros(256))            # baseline: all-XY routing
+    nr, tab = build_ici_plan(topo, t)          # paper-faithful Q-StaR
+    tab_g = greedy_refine(topo, t, tab)        # beyond-paper BiDOR-G
+
+    for name, table in [("XY (DOR)", xy), ("Q-StaR BiDOR", tab),
+                        ("Q-StaR BiDOR-G", tab_g)]:
+        ll = ici_link_loads(topo, t, table)
+        bound_us = ll["max"] * 64e6 / 50e9 * 1e6  # 64MB collective @50GB/s
+        print(f"{name:16s} max-link load {ll['max']:.5f}  cv {ll['cv']:.3f}"
+              f"  → completion bound ≈ {bound_us:7.1f} µs / 64 MiB")
+    print("\n(the YX-vs-XY per-pair choices are hard-coded bitmaps — "
+          "routing stays deterministic and in-order, paper §3.3)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving demo: prefill + greedy decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch minicpm3-4b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import registry
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke   # reduced config runs on CPU
+    params = registry.init(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg=cfg, params=params,
+                         max_len=args.prompt_len + args.tokens + 8)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    enc_out = None
+    if cfg.family == "encdec":
+        mod = registry.model_module(cfg)
+        frames = jax.random.normal(jax.random.PRNGKey(1),
+                                   (args.batch, cfg.enc_seq, cfg.d_model))
+        enc_out = mod.encode(cfg, params, frames)
+    t0 = time.time()
+    out = engine.generate(prompts, args.tokens, enc_out=enc_out)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} generated "
+          f"{out.shape[1]} tokens/seq in {dt:.1f}s "
+          f"({args.batch * out.shape[1] / dt:.1f} tok/s)")
+    print("sample:", out[0][:16])
+    # decode is deterministic greedy: same prompts → same continuation
+    out2 = engine.generate(prompts, args.tokens, enc_out=enc_out)
+    assert np.array_equal(out, out2)
+    print("determinism check passed")
+
+
+if __name__ == "__main__":
+    main()

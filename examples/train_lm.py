@@ -1,0 +1,90 @@
+"""End-to-end training driver: a ~100M-param LM with the full substrate —
+synthetic data pipeline, AdamW, checkpointing with auto-resume, preemption
+handling, straggler monitoring.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 30
+
+Kill it mid-run and start it again: it resumes from the last checkpoint.
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.fault_tolerance import (PreemptionHandler,
+                                         StragglerMonitor, resume_or_init)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+PRESETS = {
+    # ~10M — fast on CPU
+    "10m": ModelConfig(name="lm10m", family="dense", n_layers=4,
+                       d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                       vocab=8192, dtype="float32", remat=False,
+                       attn_q_chunk=128, attn_kv_chunk=128),
+    # ~100M — the assignment's end-to-end scale
+    "100m": ModelConfig(name="lm100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                        vocab=16384, dtype="float32", remat=False,
+                        attn_q_chunk=256, attn_kv_chunk=256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    from repro.models import registry
+    print(f"model: {cfg.name} "
+          f"({registry.count_params(cfg) / 1e6:.1f}M params)")
+    oc = OptConfig(peak_lr=3e-3, warmup_steps=20, decay_steps=args.steps)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch)
+    data = SyntheticLM(dc)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    fresh = init_train_state(cfg, oc, jax.random.PRNGKey(0))
+    state, start = resume_or_init(mgr, fresh)
+    if start:
+        print(f"resumed from step {start}")
+    step_fn = jax.jit(make_train_step(cfg, oc, grad_accum=2))
+    handler = PreemptionHandler()
+    mon = StragglerMonitor()
+
+    for step in range(start, args.steps):
+        mon.start()
+        batch = {k: jax.numpy.asarray(v)
+                 for k, v in data.get_batch(step).items()}
+        state, metrics = step_fn(state, batch)
+        straggler = mon.stop()
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"lr {float(metrics['lr']):.2e}"
+                  + ("  [straggler]" if straggler else ""))
+        if step and step % args.ckpt_every == 0:
+            mgr.save(step, state, async_=True)
+        if handler.should_stop:
+            print("preemption signal — checkpointing and exiting")
+            mgr.save(step, state)
+            return
+    mgr.save(args.steps, state)
+    print(f"done; final loss {float(metrics['loss']):.4f} "
+          f"(checkpoints in {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Assigned-architecture configuration registry."""
+
+from repro.configs.base import (ARCH_MODULES, SHAPES, ArchSpec, ShapeSpec,
+                                get_arch, list_archs)
+
+__all__ = ["ARCH_MODULES", "SHAPES", "ArchSpec", "ShapeSpec", "get_arch",
+           "list_archs"]

@@ -1,0 +1,107 @@
+"""Architecture × input-shape registry (the assignment's 40 cells).
+
+Every architecture exposes:
+  * ``full``  — the exact published configuration (dry-run only; parameters
+    are never materialized on CPU, see ``registry.abstract_params``);
+  * ``smoke`` — a reduced same-family configuration for CPU tests
+    (small widths, few experts, tiny vocab), exercised by
+    ``tests/test_arch_smoke.py``.
+
+Shapes (per the assignment):
+  train_4k     seq 4096,   global_batch 256   → train_step
+  prefill_32k  seq 32768,  global_batch 32    → prefill (serve)
+  decode_32k   KV 32768,   global_batch 128   → serve_step (1 new token)
+  long_500k    KV 524288,  global_batch 1     → serve_step; SSM/hybrid only
+                (quadratic-attention archs skip it — DESIGN.md §4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    full: ModelConfig
+    smoke: ModelConfig
+    shapes: tuple[str, ...]          # applicable shape names
+    skipped_shapes: tuple[str, ...]  # with reasons in DESIGN.md §4
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _REGISTRY:
+        _load_all()
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+ARCH_MODULES = [
+    "codeqwen1_5_7b", "internlm2_1_8b", "minicpm3_4b", "stablelm_3b",
+    "jamba_1_5_large", "whisper_base", "xlstm_1_3b", "dbrx_132b",
+    "qwen2_moe_a2_7b", "qwen2_vl_2b",
+]
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for m in ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _LOADED = True
+
+
+# common shape groups
+FULL_ATTN_SHAPES = ("train_4k", "prefill_32k", "decode_32k")
+SUBQUADRATIC_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+# ------------------------------------------------------------------ #
+# §Perf optimized variants (hillclimb results; baselines stay intact)
+# ------------------------------------------------------------------ #
+OPTIMIZED_OVERRIDES: dict[str, dict] = {
+    # A2: pad 60 routed experts to 64 ⇒ clean 16-way EP all-to-all
+    "qwen2-moe-a2.7b": dict(moe_pad_to=64),
+    # B1: 4× larger mLSTM chunks ⇒ 4× fewer (C, n) state round-trips
+    "xlstm-1.3b": dict(xlstm_chunk=256),
+}
+
+
+def optimized_config(arch_id: str):
+    spec = get_arch(arch_id)
+    over = OPTIMIZED_OVERRIDES.get(arch_id, {})
+    return spec.full.replace(**over) if over else spec.full

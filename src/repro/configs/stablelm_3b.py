@@ -1,0 +1,23 @@
+"""StableLM-3B [hf:stabilityai/stablelm-2-1_6b family] — dense."""
+
+from repro.models.common import ModelConfig
+from repro.configs.base import ArchSpec, FULL_ATTN_SHAPES, register
+
+FULL = ModelConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=6912, vocab=50304, head_dim=80, rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-3b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab=256, dtype="float32",
+    attn_q_chunk=16, attn_kv_chunk=16, remat=False,
+)
+
+register(ArchSpec(
+    arch_id="stablelm-3b", full=FULL, smoke=SMOKE,
+    shapes=FULL_ATTN_SHAPES, skipped_shapes=("long_500k",),
+    notes="pure full-attention arch: long_500k skipped",
+))

@@ -1,0 +1,17 @@
+"""Q-StaR core: the paper's contribution (N-Rank + BiDOR) in JAX/numpy."""
+
+from .topology import Topology, mesh2d, mesh2d_edge_io, torus, multipod
+from . import traffic
+from .nrank import NRankResult, nrank, nrank_channel, possibility_weights
+from .bidor import BiDORTable, bidor, bidor_k
+from .qstar import QStarPlan, build_plan, predicted_node_load, link_load
+from .routes import dimension_orders, route_nodes, next_port_table
+
+__all__ = [
+    "Topology", "mesh2d", "mesh2d_edge_io", "torus", "multipod",
+    "traffic",
+    "NRankResult", "nrank", "nrank_channel", "possibility_weights",
+    "BiDORTable", "bidor", "bidor_k",
+    "QStarPlan", "build_plan", "predicted_node_load", "link_load",
+    "dimension_orders", "route_nodes", "next_port_table",
+]

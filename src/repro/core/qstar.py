@@ -1,0 +1,132 @@
+"""Q-StaR facade: N-Rank + BiDOR (paper Fig. 3 workflow).
+
+``build_plan`` is the complete offline pipeline:
+
+    (topology, traffic distribution) ──N-Rank──▶ w_NR ──BiDOR──▶ bitmaps
+
+The returned :class:`QStarPlan` is everything a deployment needs: the
+NR-weights (diagnostics / Fig. 1 overlay), the per-source routing bitmaps,
+and the per-order next-port tables consumed by the simulator or by the
+ICI collective scheduler (:mod:`repro.dist.qstar_collectives`).
+
+Analysis helpers (``predicted_node_load``, ``link_load``) evaluate a routing
+choice against a traffic matrix without running the simulator — these drive
+the ICI link-load roofline work in §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .bidor import BiDORTable, bidor, bidor_k
+from .nrank import NRankResult, nrank, nrank_channel
+from .routes import dimension_orders, walk_routes
+from .topology import Topology
+
+__all__ = ["QStarPlan", "build_plan", "predicted_node_load", "link_load"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QStarPlan:
+    topology: Topology
+    traffic: np.ndarray
+    nrank: NRankResult
+    table: BiDORTable
+
+    @property
+    def w_nr(self) -> np.ndarray:
+        return self.nrank.w_nr
+
+    @property
+    def choice(self) -> np.ndarray:
+        return self.table.choice
+
+
+def build_plan(topo: Topology, traffic: np.ndarray, *,
+               k_orders: bool = False,
+               mode: str = "channel",
+               w_th: float = 0.01, iter_th: int = 100,
+               use_kernel: bool = False) -> QStarPlan:
+    """Offline Q-StaR pipeline.
+
+    Args:
+      k_orders: False → paper-faithful binary BiDOR (XY/YX); True → the
+        BiDOR-k generalization over all dimension orders (beyond-paper).
+      mode: "channel" (default) — channel-level evolution, the reading of
+        §3.2.2's no-detour assumption that reproduces the paper's reported
+        results; "node" — the literal node-level eq. (2)–(3) evolution
+        (kept as the paper-faithful baseline; see EXPERIMENTS.md §Fidelity).
+    """
+    if mode == "channel":
+        nr = nrank_channel(topo, traffic, w_th=w_th, iter_th=iter_th)
+    else:
+        nr = nrank(topo, traffic, w_th=w_th, iter_th=iter_th,
+                   use_kernel=use_kernel)
+    table = bidor_k(topo, nr.w_nr) if k_orders else bidor(topo, nr.w_nr)
+    return QStarPlan(topology=topo, traffic=np.asarray(traffic), nrank=nr,
+                     table=table)
+
+
+def _route_masks(topo: Topology, choice: np.ndarray,
+                 orders: tuple[tuple[int, ...], ...]):
+    """Yield (s, d, node_sequence) for all pairs under per-pair choices."""
+    seqs = [walk_routes(topo, o) for o in orders]  # each (N, N, L+1)
+    return seqs
+
+
+def predicted_node_load(topo: Topology, traffic: np.ndarray,
+                        table: BiDORTable) -> np.ndarray:
+    """Per-node forwarding load implied by a routing table: the static
+    analogue of the 'data forwarding rate' of Fig. 1.
+
+    load[n] = Σ_{s,d} T[s,d] · [n on route(s,d)]  (endpoints included).
+    """
+    n = topo.num_nodes
+    load = np.zeros(n, dtype=np.float64)
+    seqs = _route_masks(topo, table.choice, table.orders)
+    dst = np.broadcast_to(np.arange(n)[None, :], (n, n))
+    t = np.asarray(traffic, dtype=np.float64)
+    for oi, seq in enumerate(seqs):
+        sel = table.choice == oi  # (N, N)
+        w = np.where(sel, t, 0.0)
+        hops = seq.shape[-1]
+        prev = None
+        for h in range(hops):
+            nodes = seq[..., h]  # (N, N)
+            if prev is not None:
+                w_step = np.where(nodes != prev, w, 0.0)  # only while moving
+            else:
+                w_step = w
+            np.add.at(load, nodes.reshape(-1), w_step.reshape(-1))
+            prev = nodes
+    return load
+
+
+def link_load(topo: Topology, traffic: np.ndarray,
+              table: BiDORTable) -> np.ndarray:
+    """Per-channel load (bandwidth-normalized) implied by a routing table.
+
+    Used to score ICI collective schedules: completion time of a decomposed
+    collective ∝ max link load.
+    """
+    load = np.zeros(topo.num_channels, dtype=np.float64)
+    seqs = _route_masks(topo, table.choice, table.orders)
+    t = np.asarray(traffic, dtype=np.float64)
+    n = topo.num_nodes
+    chan_lut = np.full((n, n), -1, dtype=np.int64)
+    chan_lut[topo.channels[:, 0], topo.channels[:, 1]] = np.arange(
+        topo.num_channels)
+    for oi, seq in enumerate(seqs):
+        sel = table.choice == oi
+        w = np.where(sel, t, 0.0)
+        hops = seq.shape[-1]
+        for h in range(hops - 1):
+            a, b = seq[..., h], seq[..., h + 1]
+            moving = a != b
+            if not moving.any():
+                break
+            ids = chan_lut[a[moving], b[moving]]
+            np.add.at(load, ids, w[moving])
+    return load / topo.channel_bw

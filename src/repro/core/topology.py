@@ -1,0 +1,286 @@
+"""NoC / ICI topology graphs.
+
+A :class:`Topology` is the first of the two inputs of N-Rank (paper §3.2):
+it provides the *connection relationships* (each node's upstream set ``U^n``
+and downstream set ``D^n``) and, implicitly, the *spatial attributes* used by
+the possibility sets of eq. (4).
+
+The same abstraction covers
+
+* the paper's evaluation topologies — ``mesh2d`` (5×5 2DMesh, Fig. 1b) and
+  ``mesh2d_edge_io`` (2DMesh with I/O only at edge nodes, Fig. 1c/1d), and
+* the TPU-adaptation topologies — ``torus`` for a single-pod ICI fabric
+  (16×16) and ``multipod`` for the 2×16×16 production mesh, where the
+  inter-pod dimension has distinct (DCN) bandwidth.
+
+All construction is offline (numpy); the arrays are consumed by the jnp
+evolution loop in :mod:`repro.core.nrank` and by the simulator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "mesh2d",
+    "mesh2d_edge_io",
+    "torus",
+    "multipod",
+    "PORT_LOCAL",
+]
+
+# Port encoding used by the routers/simulator: for dimension k, port 2k is the
+# +k direction and port 2k+1 the −k direction; the final port is local
+# inject/eject.  (5-port router for a 2D mesh, as in paper §4.1.)
+PORT_LOCAL = -1  # resolved per-topology as ``2 * ndim``
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A directed channel graph with spatial coordinates.
+
+    Attributes:
+      name: human-readable identifier.
+      dims: per-dimension extents, e.g. ``(5, 5)`` for the paper's mesh
+        (dimension 0 is "x", the first dimension traversed by XY routing).
+      wrap: per-dimension wrap-around flags (True ⇒ torus links).
+      coords: ``(N, ndim)`` integer coordinates of each node.
+      channels: ``(C, 2)`` directed channels ``(u, n)`` — "u has a channel
+        towards n", so ``n ∈ D^u`` and ``u ∈ U^n``.
+      io_weights: ``(N,)`` traffic-endpoint weight of each node.  1 for every
+        node in a plain mesh; in the edge-I/O variant interior nodes get 0 and
+        corner nodes 2 (20 I/O ports over 16 edge nodes, paper §4.1).
+      channel_bw: ``(C,)`` relative bandwidth of each channel (1.0 = one flit
+        per cycle; inter-pod DCN links get < 1).
+    """
+
+    name: str
+    dims: tuple[int, ...]
+    wrap: tuple[bool, ...]
+    coords: np.ndarray
+    channels: np.ndarray
+    io_weights: np.ndarray
+    channel_bw: np.ndarray
+
+    # ------------------------------------------------------------------ #
+    # basic derived quantities
+    # ------------------------------------------------------------------ #
+    @property
+    def num_nodes(self) -> int:
+        return self.coords.shape[0]
+
+    @property
+    def num_channels(self) -> int:
+        return self.channels.shape[0]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.dims)
+
+    @property
+    def num_ports(self) -> int:
+        """Router ports: 2 per dimension + 1 local."""
+        return 2 * self.ndim + 1
+
+    @property
+    def port_local(self) -> int:
+        return 2 * self.ndim
+
+    def node_id(self, coord: Sequence[int]) -> int:
+        """Row-major in reversed-dim order: id = Σ coord[k] * stride[k], with
+        dimension 0 the fastest-varying (so a 5×5 mesh numbers nodes row by
+        row, matching Fig. 1/7 of the paper)."""
+        nid = 0
+        for k in reversed(range(self.ndim)):
+            nid = nid * self.dims[k] + int(coord[k])
+        return nid
+
+    @functools.cached_property
+    def chan_id(self) -> dict[tuple[int, int], int]:
+        """(u, n) → channel index."""
+        return {(int(u), int(n)): c for c, (u, n) in enumerate(self.channels)}
+
+    @functools.cached_property
+    def downstream(self) -> list[np.ndarray]:
+        """D^n for every node (paper §3.2)."""
+        out: list[list[int]] = [[] for _ in range(self.num_nodes)]
+        for u, n in self.channels:
+            out[int(u)].append(int(n))
+        return [np.array(sorted(v), dtype=np.int32) for v in out]
+
+    @functools.cached_property
+    def upstream(self) -> list[np.ndarray]:
+        """U^n for every node (paper §3.2)."""
+        out: list[list[int]] = [[] for _ in range(self.num_nodes)]
+        for u, n in self.channels:
+            out[int(n)].append(int(u))
+        return [np.array(sorted(v), dtype=np.int32) for v in out]
+
+    @functools.cached_property
+    def adjacency(self) -> np.ndarray:
+        """(N, N) boolean adjacency (directed)."""
+        a = np.zeros((self.num_nodes, self.num_nodes), dtype=bool)
+        a[self.channels[:, 0], self.channels[:, 1]] = True
+        return a
+
+    @functools.cached_property
+    def distances(self) -> np.ndarray:
+        """(N, N) hop distances via BFS (int32; unreachable ⇒ large)."""
+        n = self.num_nodes
+        dist = np.full((n, n), np.iinfo(np.int32).max // 4, dtype=np.int32)
+        np.fill_diagonal(dist, 0)
+        reach = np.eye(n, dtype=bool)
+        frontier = np.eye(n, dtype=bool)
+        adj = self.adjacency
+        d = 0
+        while frontier.any():
+            d += 1
+            nxt = (frontier @ adj) & ~reach
+            if not nxt.any():
+                break
+            dist[nxt] = d
+            reach |= nxt
+            frontier = nxt
+        return dist
+
+    @functools.cached_property
+    def channel_port(self) -> np.ndarray:
+        """(C,) output-port index at ``u`` of each channel (u, n)."""
+        ports = np.zeros(self.num_channels, dtype=np.int32)
+        for c, (u, n) in enumerate(self.channels):
+            cu, cn = self.coords[int(u)], self.coords[int(n)]
+            delta = cn - cu
+            nz = np.nonzero(delta)[0]
+            if len(nz) != 1:  # pragma: no cover - malformed channel
+                raise ValueError(f"channel {u}->{n} is not axis-aligned")
+            k = int(nz[0])
+            step = int(delta[k])
+            if self.wrap[k] and abs(step) == self.dims[k] - 1:
+                step = -np.sign(step)  # wrap link: +dim edge goes size-1 → 0
+            ports[c] = 2 * k if step > 0 else 2 * k + 1
+        return ports
+
+    @functools.cached_property
+    def neighbor_table(self) -> np.ndarray:
+        """(N, num_ports) neighbor node per output port; −1 if absent.
+
+        The local port maps to the node itself.
+        """
+        table = np.full((self.num_nodes, self.num_ports), -1, dtype=np.int32)
+        for c, (u, n) in enumerate(self.channels):
+            table[int(u), self.channel_port[c]] = int(n)
+        table[:, self.port_local] = np.arange(self.num_nodes)
+        return table
+
+    @functools.cached_property
+    def port_of_channel_at_receiver(self) -> np.ndarray:
+        """(C,) input-port index at ``n`` where channel (u, n) arrives.
+
+        A +k channel arrives at the receiver's −k port and vice versa.
+        """
+        p = self.channel_port
+        return np.where(p % 2 == 0, p + 1, p - 1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------- #
+# constructors
+# ---------------------------------------------------------------------- #
+def _grid(dims: Sequence[int], wrap: Sequence[bool], name: str,
+          io_weights: np.ndarray | None = None,
+          inter_dim_bw: dict[int, float] | None = None) -> Topology:
+    dims = tuple(int(d) for d in dims)
+    wrap = tuple(bool(w) for w in wrap)
+    ndim = len(dims)
+    n = int(np.prod(dims))
+    # coords with dimension 0 fastest-varying
+    grids = np.meshgrid(*[np.arange(d) for d in dims], indexing="ij")
+    coords = np.stack([g.reshape(-1) for g in grids], axis=-1)
+    # reorder so node_id = y*W + x for 2D (dim 0 fastest)
+    order = np.lexsort(tuple(coords[:, k] for k in range(ndim)))
+    coords = coords[order]
+
+    strides = np.ones(ndim, dtype=np.int64)
+    for k in range(1, ndim):
+        strides[k] = strides[k - 1] * dims[k - 1]
+
+    def nid(c):
+        return int((c * strides).sum())
+
+    chans: list[tuple[int, int]] = []
+    bws: list[float] = []
+    for i in range(n):
+        c = coords[i]
+        for k in range(ndim):
+            for step in (+1, -1):
+                cc = c.copy()
+                cc[k] += step
+                if 0 <= cc[k] < dims[k]:
+                    pass
+                elif wrap[k] and dims[k] > 2:
+                    cc[k] %= dims[k]
+                else:
+                    continue
+                chans.append((i, nid(cc)))
+                bw = 1.0
+                if inter_dim_bw and k in inter_dim_bw:
+                    bw = inter_dim_bw[k]
+                bws.append(bw)
+    channels = np.array(sorted(set(chans)), dtype=np.int32)
+    # re-derive bw aligned with the sorted/unique channel list
+    bw_map = {}
+    for ch, bw in zip(chans, bws):
+        bw_map[ch] = bw
+    channel_bw = np.array([bw_map[(int(u), int(v))] for u, v in channels])
+
+    if io_weights is None:
+        io_weights = np.ones(n, dtype=np.float64)
+    return Topology(name=name, dims=dims, wrap=wrap, coords=coords,
+                    channels=channels, io_weights=io_weights,
+                    channel_bw=channel_bw)
+
+
+def mesh2d(width: int, height: int) -> Topology:
+    """Plain 2D mesh; every node has one I/O port (Fig. 1b setting)."""
+    return _grid((width, height), (False, False), f"mesh2d_{width}x{height}")
+
+
+def mesh2d_edge_io(width: int, height: int) -> Topology:
+    """2D mesh where only edge nodes carry I/O ports (paper §4.1, Fig. 1c/d).
+
+    The paper's 5×5 NoC exposes 20 I/O ports, 5 per edge, over 16 distinct
+    edge nodes — corners therefore carry two ports and get weight 2.
+    """
+    topo = _grid((width, height), (False, False),
+                 f"mesh2d_edge_io_{width}x{height}")
+    x, y = topo.coords[:, 0], topo.coords[:, 1]
+    on_x_edge = (x == 0) | (x == width - 1)
+    on_y_edge = (y == 0) | (y == height - 1)
+    w = on_x_edge.astype(np.float64) + on_y_edge.astype(np.float64)
+    return dataclasses.replace(topo, io_weights=w)
+
+
+def torus(*dims: int, name: str | None = None) -> Topology:
+    """k-ary n-dimensional torus — the single-pod TPU ICI fabric."""
+    return _grid(dims, (True,) * len(dims),
+                 name or "torus_" + "x".join(map(str, dims)))
+
+
+def multipod(num_pods: int, pod_x: int, pod_y: int,
+             interpod_bw: float = 0.5) -> Topology:
+    """Multi-pod fabric: per-pod 2D ICI torus + a (non-wrapping) pod axis.
+
+    The pod axis models DCN/OCI connectivity between corresponding chips of
+    adjacent pods with reduced relative bandwidth ``interpod_bw``.
+    Dimension layout: (x, y, pod) so DOR orders generalize naturally.
+    """
+    return _grid(
+        (pod_x, pod_y, num_pods),
+        (True, True, False),
+        f"multipod_{num_pods}x{pod_x}x{pod_y}",
+        inter_dim_bw={2: interpod_bw},
+    )

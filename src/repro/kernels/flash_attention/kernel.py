@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention forward (causal / full, GQA-aware).
+
+Grid: (batch·heads, q blocks, kv blocks) — the kv axis is innermost, so the
+(m, l, acc) online-softmax state lives in VMEM scratch across kv visits and
+is flushed to the output block on the last kv step.  GQA is handled in the
+index maps: the K/V block for head ``h`` reads kv-head ``h // group``, so
+grouped keys are never materialized per-head in HBM.
+
+Block shapes default to (128, head_dim) — MXU-aligned (head_dim is a
+multiple of 128 for every assigned arch except whisper/minicpm (64); Pallas
+pads the lane dimension).  Causal blocks strictly above the diagonal are
+skipped with ``pl.when`` (no FLOPs, no VMEM traffic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, scale: float, kv_len: int, block_q: int,
+            block_kv: int, num_kv_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    if causal:
+        run = kj * block_kv <= (qi + 1) * block_q - 1
+    else:
+        run = kj >= 0
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)          # (bkv, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        kabs = kj * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        s = jnp.where(kabs < kv_len, s, NEG_INF)
+        if causal:
+            qabs = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, 1), 0)
+            s = jnp.where(kabs <= qabs, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _flush():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = True):
+    """q: (B, H, Sq, D); k/v: (B, KV, Skv, D) → (B, H, Sq, Dv)."""
+    b, h, sq, d = q.shape
+    _, kvh, skv, dv = v.shape
+    group = h // kvh
+    scale = d ** -0.5
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    nq = -(-sq // bq)
+    nk = -(-skv // bkv)
+    grid = (b * h, nq, nk)
+
+    def qmap(bh, qi, kj):
+        return (bh, qi, 0)
+
+    def kvmap(bh, qi, kj):
+        bi = bh // h
+        hi = bh % h
+        return (bi * kvh + hi // group, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, causal=causal, scale=scale, kv_len=skv,
+            block_q=bq, block_kv=bkv, num_kv_blocks=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), qmap),
+            pl.BlockSpec((1, bkv, d), kvmap),
+            pl.BlockSpec((1, bkv, dv), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), qmap),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq * bq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b * h, sq, d),
+      k.reshape(b * kvh, skv, d),
+      v.reshape(b * kvh, skv, dv))
+    return out[:, :sq].reshape(b, h, sq, dv)

@@ -1,0 +1,35 @@
+"""Jitted wrapper: padding, layout, GQA mapping, dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+
+def _pad(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(q, k, v, *, causal=True, mask_len=None,
+                    block_q=128, block_kv=128, interpret=True):
+    """Model-layer layout (B, S, H, D) / (B, S, KV, D) → (B, S, H, Dv).
+
+    ``mask_len`` falls back to the pure-jnp reference (serving path)."""
+    if mask_len is not None:
+        from repro.models.layers.attention import flash_attention_ref
+        return flash_attention_ref(q, k, v, causal=causal,
+                                   bias_mask_len=mask_len)
+    b, sq, h, d = q.shape
+    qt = _pad(q.transpose(0, 2, 1, 3), block_q, 2)
+    kt = _pad(k.transpose(0, 2, 1, 3), block_kv, 2)
+    vt = _pad(v.transpose(0, 2, 1, 3), block_kv, 2)
+    out = flash_attention_pallas(qt, kt, vt, causal=causal,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=interpret)
+    return out[:, :, :sq].transpose(0, 2, 1, 3)

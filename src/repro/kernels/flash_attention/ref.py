@@ -1,0 +1,14 @@
+"""Oracle: the chunked pure-jnp flash reference from the model layer
+(already itself validated against naive softmax attention)."""
+
+from __future__ import annotations
+
+from repro.models.layers.attention import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True):
+    """q: (B, H, S, D) kernel layout → reference in (B, S, H, D) layout."""
+    out = flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, q_chunk=128, kv_chunk=128)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: chunked selective scan (Mamba SSM inner loop).
+
+Grid: (batch, d_inner blocks, sequence chunks) — the chunk axis is
+innermost and sequential; the (di_blk, ds) hidden state lives in VMEM
+scratch across chunk visits, so HBM traffic is exactly the streamed
+inputs/outputs (the parallel-scan formulation would spill S×di×ds
+intermediates).  Within a chunk the recurrence runs as a fori loop over
+time steps on VMEM-resident tiles — d_state is tiny (16), so each step is
+VPU elementwise work on (di_blk, ds) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(delta_ref, a_ref, b_ref, c_ref, x_ref, y_ref, h_scr, *,
+            chunk: int):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...]                       # (di_blk, ds)
+    delta = delta_ref[0]                 # (chunk, di_blk)
+    x = x_ref[0]                         # (chunk, di_blk)
+    bmat = b_ref[0]                      # (chunk, ds)
+    cmat = c_ref[0]                      # (chunk, ds)
+
+    def step(t, carry):
+        h, ys = carry
+        ad = jnp.exp(delta[t][:, None] * a)              # (di_blk, ds)
+        h = ad * h + (delta[t] * x[t])[:, None] * bmat[t][None, :]
+        y = jnp.sum(h * cmat[t][None, :], axis=1)        # (di_blk,)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return h, ys
+
+    ys0 = jnp.zeros((chunk, delta.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk",
+                                             "interpret"))
+def selective_scan_pallas(delta, a, b, c, x, *, block_d: int = 512,
+                          chunk: int = 64, interpret: bool = True):
+    """Shapes as in ref.selective_scan; S must be a chunk multiple and Di a
+    block multiple (ops.py pads)."""
+    bs, s, di = x.shape
+    ds = a.shape[1]
+    bd = min(block_d, di)
+    ck = min(chunk, s)
+    grid = (bs, di // bd, s // ck)
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=ck),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ck, bd), lambda bi, dj, cj: (bi, cj, dj)),
+            pl.BlockSpec((bd, ds), lambda bi, dj, cj: (dj, 0)),
+            pl.BlockSpec((1, ck, ds), lambda bi, dj, cj: (bi, cj, 0)),
+            pl.BlockSpec((1, ck, ds), lambda bi, dj, cj: (bi, cj, 0)),
+            pl.BlockSpec((1, ck, bd), lambda bi, dj, cj: (bi, cj, dj)),
+        ],
+        out_specs=pl.BlockSpec((1, ck, bd), lambda bi, dj, cj: (bi, cj, dj)),
+        out_shape=jax.ShapeDtypeStruct((bs, s, di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(delta, a, b, c, x)
+    return y

@@ -1,0 +1,27 @@
+"""Jitted wrapper with padding for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import selective_scan_pallas
+
+
+def selective_scan(delta, a, b, c, x, *, block_d=512, chunk=64,
+                   interpret=True):
+    bs, s, di = x.shape
+    ck = min(chunk, s)
+    pad_s = (-s) % ck
+    bd = min(block_d, di)
+    pad_d = (-di) % bd
+    if pad_s or pad_d:
+        pw3 = ((0, 0), (0, pad_s), (0, pad_d))
+        pw2 = ((0, 0), (0, pad_s), (0, 0))
+        delta = jnp.pad(delta, pw3)
+        x = jnp.pad(x, pw3)
+        b = jnp.pad(b, pw2)
+        c = jnp.pad(c, pw2)
+        a = jnp.pad(a, ((0, pad_d), (0, 0)))
+    y = selective_scan_pallas(delta, a, b, c, x, block_d=bd, chunk=ck,
+                              interpret=interpret)
+    return y[:, :s, :di]

@@ -1,0 +1,27 @@
+"""Oracle: sequential selective-scan recurrence (pure jnp, O(S) scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan(delta, a, b, c, x, h0=None):
+    """h_t = exp(Δ_t A) ⊙ h_{t−1} + (Δ_t x_t) B_t;  y_t = h_t · C_t.
+
+    delta, x: (B, S, Di); a: (Di, Ds); b, c: (B, S, Ds).
+    Returns (y (B, S, Di), h_final (B, Di, Ds)).
+    """
+    bs, s, di = x.shape
+    ds = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bs, di, ds), jnp.float32)
+
+    def step(h, t):
+        ad = jnp.exp(delta[:, t, :, None] * a[None])
+        h = ad * h + (delta[:, t] * x[:, t])[..., None] * b[:, t, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.transpose(1, 0, 2), h

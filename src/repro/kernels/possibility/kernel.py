@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: N-Rank possibility weights (the O(C·N²) hot spot).
+
+Grid: (channel blocks, source blocks); destinations are reduced inside the
+kernel.  The W accumulator lives in the output block (revisited across the
+s-dimension of the grid — Pallas keeps the block in VMEM between visits
+because the index_map ignores the s axis).  All tiles are (128-multiple)
+MXU/VPU-aligned; compares and multiply-reduces are VPU work, so the kernel
+is HBM-bandwidth-bound — tiling T once per (c, s) block instead of the
+naive C passes over T is the win over the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(du_ref, dn_ref, dsn_ref, tn_ref, t_ref, dist_ref,
+            w_ref, wdrn_ref):
+    sb = pl.program_id(1)
+    du = du_ref[...]           # (BS, BC)
+    dn = dn_ref[...]           # (BC, N)
+    dist = dist_ref[...]       # (BS, N)
+    t = t_ref[...]             # (BS, N)
+    lhs = du.T[:, :, None] + 1 + dn[:, None, :]     # (BC, BS, N)
+    mask = (lhs == dist[None]).astype(t.dtype)
+    w_part = jnp.einsum("csd,sd->c", mask, t)       # (BC,)
+    drn = ((du + 1) == dsn_ref[...]).astype(t.dtype)
+    wdrn_part = jnp.sum(drn * tn_ref[...], axis=0)  # (BC,)
+
+    @pl.when(sb == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+        wdrn_ref[...] = jnp.zeros_like(wdrn_ref)
+
+    w_ref[...] += w_part
+    wdrn_ref[...] += wdrn_part
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_s",
+                                             "interpret"))
+def possibility_weights_pallas(du, dn, dsn, tn, traffic, dist,
+                               block_c: int = 128, block_s: int = 128,
+                               interpret: bool = True):
+    n, c = du.shape
+    bc = min(block_c, c)
+    bs = min(block_s, n)
+    grid = (-(-c // bc), -(-n // bs))
+    w, wdrn = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bc), lambda cb, sb: (sb, cb)),   # du
+            pl.BlockSpec((bc, n), lambda cb, sb: (cb, 0)),     # dn
+            pl.BlockSpec((bs, bc), lambda cb, sb: (sb, cb)),   # dsn
+            pl.BlockSpec((bs, bc), lambda cb, sb: (sb, cb)),   # tn
+            pl.BlockSpec((bs, n), lambda cb, sb: (sb, 0)),     # traffic
+            pl.BlockSpec((bs, n), lambda cb, sb: (sb, 0)),     # dist
+        ],
+        out_specs=[
+            pl.BlockSpec((bc,), lambda cb, sb: (cb,)),
+            pl.BlockSpec((bc,), lambda cb, sb: (cb,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), traffic.dtype),
+            jax.ShapeDtypeStruct((c,), traffic.dtype),
+        ],
+        interpret=interpret,
+    )(du, dn, dsn, tn, traffic, dist)
+    return w, wdrn

@@ -1,0 +1,31 @@
+"""Public op: possibility weights with host-side gather preparation."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernel import possibility_weights_pallas
+from .ref import possibility_weights_dense
+
+
+def _prepare(dist, traffic, channels):
+    us = channels[:, 0]
+    ns = channels[:, 1]
+    dist = np.asarray(dist, np.int32)
+    du = dist[:, us]                     # (N, C)
+    dn = dist[ns, :]                     # (C, N)
+    dsn = dist[:, ns]                    # (N, C)
+    t = np.asarray(traffic, np.float32)
+    tn = t[:, ns]                        # (N, C)
+    return (jnp.asarray(du), jnp.asarray(dn), jnp.asarray(dsn),
+            jnp.asarray(tn), jnp.asarray(t), jnp.asarray(dist))
+
+
+def possibility_weights(dist, traffic, channels, use_pallas: bool = True,
+                        interpret: bool = True):
+    du, dn, dsn, tn, t, d = _prepare(dist, traffic, channels)
+    if use_pallas:
+        return possibility_weights_pallas(du, dn, dsn, tn, t, d,
+                                          interpret=interpret)
+    return possibility_weights_dense(du, dn, dsn, tn, d, t)

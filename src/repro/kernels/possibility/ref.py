@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the possibility-weight kernel (N-Rank eq. 5/7).
+
+Dense reformulation used by both the oracle and the Pallas kernel:
+
+    W[c]     = Σ_{s,d} T[s,d] · [Du[s,c] + 1 + Dn[c,d] == D[s,d]]
+    W_drn[c] = Σ_s    Tn[s,c] · [Du[s,c] + 1 == Dsn[s,c]]
+
+with Du = dist[:, us], Dn = dist[ns, :], Dsn = dist[:, ns],
+Tn[s, c] = T[s, ns[c]] — all gathered once on the host.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def possibility_weights_dense(du, dn, dsn, tn, dist, traffic):
+    """du: (N, C) int32; dn: (C, N); dsn: (N, C); tn: (N, C) f32;
+    dist: (N, N) int32; traffic: (N, N) f32 → (W (C,), W_drn (C,))."""
+    lhs = du.T[:, :, None] + 1 + dn[:, None, :]           # (C, N, N)
+    mask = (lhs == dist[None]).astype(traffic.dtype)
+    w = jnp.einsum("csd,sd->c", mask, traffic)
+    drn = ((du + 1) == dsn).astype(traffic.dtype)         # (N, C)
+    w_drn = jnp.einsum("sc,sc->c", drn, tn)
+    return w, w_drn

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes and record memory/cost/roofline artifacts.
+
+The two lines above MUST precede any jax import (jax pins the device count
+at first init); that is why this module must not be imported from code that
+already initialized jax — run it as ``python -m repro.launch.dryrun``.
+
+Per cell this driver:
+  1. builds abstract (ShapeDtypeStruct) params/opt/batch/cache trees with
+     NamedShardings from ``repro.sharding.specs`` — no allocation;
+  2. ``jax.jit(step).lower(...).compile()`` — a sharding mismatch, compile
+     OOM, or unsupported collective here is a bug in the system;
+  3. prints ``compiled.memory_analysis()`` (fits-in-HBM proof) and derives
+     the three §Roofline terms from the post-SPMD HLO
+     (``repro.analysis.hlo`` — with while-trip-count-correct accounting);
+  4. writes a JSON artifact consumed by ``benchmarks/roofline.py``.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --mesh single,multi
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo_text, roofline_terms
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.sharding import specs as sh
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _sds(tree, mesh, spec_tree):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=jax.sharding.NamedSharding(mesh, p)),
+        tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct,
+                                         jax.sharding.PartitionSpec)))
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, variant: str = "base"):
+    """Abstract inputs for one cell: (step_kind, fn, args_sds, meta)."""
+    from repro.configs.base import optimized_config
+    spec = get_arch(arch_id)
+    cfg = optimized_config(arch_id) if variant == "opt" else spec.full
+    shp = SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    params_a = registry.abstract_params(cfg)
+    pspecs = sh.param_specs(cfg, mesh, params_a)
+    params_sds = _sds(params_a, mesh, pspecs)
+    mod = registry.model_module(cfg)
+    n_active = registry.count_params(cfg, active_only=True)
+
+    if shp.kind == "train":
+        opt_cfg = OptConfig(
+            moment_dtype="int8" if registry.count_params(cfg) > 5e10
+            else "float32")
+        grad_accum = {True: 16, False: 4}[registry.count_params(cfg) > 5e10]
+        opt_a = jax.eval_shape(lambda: init_opt_state(opt_cfg, params_a))
+        ospecs = sh.opt_specs(cfg, mesh, opt_a, pspecs)
+        state_sds = {"params": params_sds, "opt": _sds(opt_a, mesh, ospecs)}
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+        if cfg.family == "vlm":
+            batch["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        if cfg.family == "encdec":
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+        batch_sds = _sds(batch, mesh, sh.batch_specs(mesh, batch))
+        fn = make_train_step(cfg, opt_cfg, grad_accum=grad_accum)
+        model_flops = 6.0 * n_active * b * s
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        out_shardings = (
+            jax.tree.map(lambda x: x.sharding, state_sds),
+            {"loss": rep, "ce": rep, "aux": rep, "grad_norm": rep,
+             "lr": rep},
+        )
+        return "train", fn, (state_sds, batch_sds), dict(
+            donate=(0,), model_flops=model_flops, grad_accum=grad_accum,
+            out_shardings=out_shardings)
+
+    # serving shapes
+    cache_a = jax.eval_shape(
+        lambda: registry.init_cache(cfg, b, s))
+    seq_par = shape_name == "long_500k"
+    cspecs = sh.cache_specs(cfg, mesh, cache_a, seq_parallel=seq_par)
+    cache_sds = _sds(cache_a, mesh, cspecs)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    if shp.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32,
+            sharding=jax.sharding.NamedSharding(
+                mesh, sh.fit_spec(mesh, (b, s), (sh.DATA, None))))
+        extra = {}
+        if cfg.family == "encdec":
+            extra["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), cfg.jdtype,
+                sharding=jax.sharding.NamedSharding(
+                    mesh, sh.fit_spec(mesh, (b, cfg.enc_seq, cfg.d_model),
+                                      (sh.DATA, None, None))))
+
+        def prefill_fn(params, tokens, cache, **kw):
+            return mod.prefill(cfg, params, tokens, cache, **kw)
+
+        model_flops = 2.0 * n_active * b * s
+        return "prefill", prefill_fn, \
+            (params_sds, tokens, cache_sds), dict(
+                donate=(2,), model_flops=model_flops, extra=extra)
+
+    # decode: one new token against a KV/state cache of length s
+    tokens = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32,
+        sharding=jax.sharding.NamedSharding(
+            mesh, sh.fit_spec(mesh, (b, 1), (sh.DATA, None))))
+    index = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), cfg.jdtype,
+            sharding=jax.sharding.NamedSharding(
+                mesh, sh.fit_spec(mesh, (b, cfg.enc_seq, cfg.d_model),
+                                  (sh.DATA, None, None))))
+
+    def serve_fn(params, tokens, cache, index, **kw):
+        logits, cache = mod.decode_step(cfg, params, tokens, cache, index,
+                                        **kw)
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), cache
+
+    model_flops = 2.0 * n_active * b
+    return "decode", serve_fn, (params_sds, tokens, cache_sds, index), dict(
+        donate=(2,), model_flops=model_flops, extra=extra)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str,
+             out_dir: str | None = None, verbose: bool = True,
+             variant: str = "base"):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    kind, fn, args, meta = input_specs(arch_id, shape_name, mesh, variant)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, donate_argnums=meta.get("donate", ()),
+                         out_shardings=meta.get("out_shardings"))
+        if meta.get("extra"):
+            lowered = jitted.lower(*args, **meta["extra"])
+        else:
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    stats = analyze_hlo_text(compiled.as_text(), n_chips)
+    rl = roofline_terms(stats, n_chips, meta["model_flops"])
+    record = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "kind": kind, "num_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 2**30,
+            "output_gb": mem.output_size_in_bytes / 2**30,
+            "temp_gb": mem.temp_size_in_bytes / 2**30,
+            "alias_gb": mem.alias_size_in_bytes / 2**30,
+            "peak_gb": (mem.argument_size_in_bytes
+                        + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        - mem.alias_size_in_bytes) / 2**30,
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed")},
+        "per_device": {
+            "flops": stats.flops,
+            "hbm_bytes": stats.hbm_bytes,
+            "collective_bytes": stats.collective_bytes,
+            "collective_wire_bytes": stats.collective_wire_bytes,
+            "collective_counts": stats.collective_counts,
+        },
+        "roofline": {
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "dominant": rl.dominant,
+            "model_flops": rl.model_flops,
+            "useful_flops_ratio": rl.useful_flops_ratio,
+            "mfu_bound": rl.mfu_bound,
+        },
+        "grad_accum": meta.get("grad_accum"),
+    }
+    if verbose:
+        print(f"[{arch_id} × {shape_name} × {mesh_name} × {variant}] {kind}: "
+              f"compile {t_compile:.0f}s  peak/device "
+              f"{record['memory']['peak_gb']:.2f} GiB")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis(flops/device, body-once): "
+              f"{cost.get('flops', 0):.3e}")
+        print(f"  roofline: compute {rl.compute_s*1e3:.2f} ms | memory "
+              f"{rl.memory_s*1e3:.2f} ms | collective "
+              f"{rl.collective_s*1e3:.2f} ms → {rl.dominant}-bound, "
+              f"MFU bound {rl.mfu_bound:.2%}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if variant == "base" else f"__{variant}"
+        path = os.path.join(
+            out_dir, f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    help="comma list: single,multi")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    failures = []
+    for arch in archs:
+        spec = get_arch(arch)
+        shapes = (spec.shapes if args.shape == "all"
+                  else [s for s in args.shape.split(",")
+                        if s in spec.shapes])
+        for shape in shapes:
+            for mesh_name in args.mesh.split(","):
+                suffix = "" if args.variant == "base" else \
+                    f"__{args.variant}"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"skip {arch} × {shape} × {mesh_name}")
+                    continue
+                try:
+                    run_cell(arch, shape, mesh_name, out_dir=args.out,
+                             variant=args.variant)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    traceback.print_exc()
+                    failures.append((arch, shape, mesh_name, str(e)[:200]))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

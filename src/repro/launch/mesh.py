@@ -1,0 +1,56 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never initializes jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices; real deployments get the same mesh
+from actual TPU topology.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+PODS = 2
+POD_X = 16
+POD_Y = 16
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (PODS, POD_X, POD_Y) if multi_pod else (POD_X, POD_Y)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == need:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    # dry-run environment exposes 512 placeholder devices; the single-pod
+    # mesh uses the first 256 of them
+    use = np.array(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(use, axes)
+
+
+def make_mesh_for_devices(data: int, model: int, devices=None):
+    """Small-mesh helper for CPU tests (subprocess with N host devices)."""
+    devices = devices if devices is not None else jax.devices()
+    use = np.array(devices[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(use, ("data", "model"))
+
+
+def ici_topology(mesh) -> "object":
+    """The ICI torus graph underlying a mesh — Q-StaR's topology input.
+
+    Single-pod (16×16) → 2D torus; multi-pod → per-pod torus + pod axis
+    with reduced-bandwidth links (DCN), matching ``repro.core.multipod``.
+    """
+    from repro.core.topology import multipod, torus
+    if "pod" in mesh.shape:
+        return multipod(mesh.shape["pod"], mesh.shape["data"],
+                        mesh.shape["model"])
+    return torus(mesh.shape["data"], mesh.shape["model"])

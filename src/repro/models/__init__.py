@@ -1,0 +1,6 @@
+"""Architecture zoo: 10 assigned architectures as pure-function pytrees."""
+
+from repro.models.common import ModelConfig
+from repro.models import registry
+
+__all__ = ["ModelConfig", "registry"]

@@ -1,0 +1,148 @@
+"""Model configuration and shared utilities for the architecture zoo.
+
+One frozen dataclass covers all 10 assigned architectures; family-specific
+fields are simply unused elsewhere.  Models are pure-function pytrees:
+``init(cfg, key) -> params`` and ``forward(cfg, params, batch) -> logits``,
+with repeated layers stacked on a leading axis and driven by ``lax.scan``
+(keeps HLO size and 512-device compile times sane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 ⇒ d_model // n_heads
+
+    # --- MoE ----------------------------------------------------------- #
+    moe_experts: int = 0
+    moe_topk: int = 0
+    moe_shared: int = 0            # always-on shared experts (qwen2-moe)
+    moe_pad_to: int = 0            # pad expert dim (dummy experts) for EP
+    moe_period: int = 1            # every k-th layer is MoE (jamba: 2)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- MLA (minicpm3) ------------------------------------------------- #
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- hybrid (jamba): 1 attention layer per ``attn_period`` ---------- #
+    attn_period: int = 0           # 0 ⇒ pure attention stack
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # --- ssm (xlstm): 1 sLSTM block per ``slstm_period`` ---------------- #
+    slstm_period: int = 0          # 0 ⇒ no sLSTM blocks
+    xlstm_proj_factor: float = 2.0
+
+    # --- enc-dec (whisper) ---------------------------------------------- #
+    enc_layers: int = 0
+    enc_seq: int = 1500            # encoder frames (stub frontend output)
+
+    # --- vlm (qwen2-vl) -------------------------------------------------- #
+    mrope_sections: tuple[int, ...] = ()
+
+    # --- common ---------------------------------------------------------- #
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    use_pallas: bool = False       # Pallas TPU kernels (ref path if False)
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 512
+    mamba_chunk: int = 64
+    xlstm_chunk: int = 64
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def layer_is_moe(self, idx: int) -> bool:
+        return self.is_moe and (idx % self.moe_period == self.moe_period - 1)
+
+    def layer_is_attn(self, idx: int) -> bool:
+        """Hybrid stacks: layer 0 of every ``attn_period`` group is attn."""
+        if self.attn_period == 0:
+            return True
+        return idx % self.attn_period == 0
+
+    def layer_is_slstm(self, idx: int) -> bool:
+        return self.slstm_period > 0 and idx % self.slstm_period == 0
+
+    # ------------------------------------------------------------------ #
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline MODEL_FLOPS)."""
+        from repro.models.registry import count_params  # lazy, avoids cycle
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.registry import count_params
+        return count_params(self, active_only=True)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------- #
+# init helpers
+# ---------------------------------------------------------------------- #
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def stack_layer_init(init_fn, n: int, key):
+    """vmap an ``init_fn(key) -> params`` across ``n`` stacked layers."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def take_layer(stacked: Params, idx):
+    """Slice layer ``idx`` out of a stacked-params pytree (scan body)."""
+    return jax.tree.map(lambda x: x[idx], stacked)
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def param_count_tree(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

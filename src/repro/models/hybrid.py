@@ -1,0 +1,198 @@
+"""Hybrid Mamba+attention MoE stack (Jamba, arXiv:2403.19887).
+
+Layer pattern: one attention layer per ``attn_period`` (Jamba: 1:7), FFN
+after every mixer, MoE FFN every ``moe_period``-th layer (Jamba: 2).  The
+stack is organized as ``n_layers / attn_period`` *super-blocks* — each
+super-block is unrolled (1 attn + 7 mamba layers with alternating
+dense/MoE FFNs) and the super-blocks are scanned, which divides compiled
+HLO size by 9 for the 72-layer 398B config.
+
+Decode state per super-block: 1 KV cache + 7 (conv, ssm) mamba states —
+O(1) in sequence length for the mamba layers, which is what licenses the
+``long_500k`` shape for this architecture.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, stack_layer_init
+from repro.models.layers.basic import (
+    embed, embedding_init, head_init, rms_norm, rms_norm_init, unembed)
+from repro.models.layers.attention import gqa_apply, gqa_init
+from repro.models.layers.ffn import moe_apply, moe_init, swiglu, swiglu_init
+from repro.models.layers.recurrent import (
+    mamba_apply, mamba_init, mamba_init_state, mamba_step)
+from repro.models.layers.rope import rope_angles
+from repro.sharding.hints import hint_bsd
+
+
+def _superblock_layout(cfg: ModelConfig):
+    """Within one super-block of ``attn_period`` layers: layer 0 is attn,
+    the rest mamba; FFN j is MoE iff the global layer index is MoE —
+    alignment requires attn_period % moe_period == 0."""
+    ap = cfg.attn_period
+    assert ap > 0 and cfg.n_layers % ap == 0
+    moe_js = [j for j in range(ap)
+              if cfg.is_moe and j % cfg.moe_period == cfg.moe_period - 1]
+    dense_js = [j for j in range(ap) if j not in moe_js]
+    return ap, moe_js, dense_js
+
+
+def _superblock_init(cfg: ModelConfig, key):
+    ap, moe_js, dense_js = _superblock_layout(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn": gqa_init(cfg, ks[0]),
+        "attn_ln": rms_norm_init(cfg.d_model),
+        "mamba": stack_layer_init(lambda k: mamba_init(cfg, k), ap - 1, ks[1]),
+        "mamba_ln": stack_layer_init(
+            lambda k: rms_norm_init(cfg.d_model), ap - 1, ks[1]),
+        "ffn_ln": stack_layer_init(
+            lambda k: rms_norm_init(cfg.d_model), ap, ks[2]),
+    }
+    if dense_js:
+        p["ffn_dense"] = stack_layer_init(
+            lambda k: swiglu_init(cfg, k), len(dense_js), ks[2])
+    if moe_js:
+        p["ffn_moe"] = stack_layer_init(
+            lambda k: moe_init(cfg, k), len(moe_js), ks[3])
+    return p
+
+
+def _superblock_apply(cfg: ModelConfig, p, x, *, angles,
+                      state=None, cache_index=None):
+    """state: dict(kv=..., conv=(ap-1,...), ssm=(ap-1,...)) or None."""
+    ap, moe_js, dense_js = _superblock_layout(cfg)
+    x = hint_bsd(x)
+    aux = jnp.float32(0)
+    new_state = {} if state is not None else None
+    di, mi = 0, 0
+    for j in range(ap):
+        # ---- mixer ---- #
+        if j == 0:
+            h = rms_norm(p["attn_ln"], x, cfg.norm_eps)
+            cache = state["kv"] if state is not None else None
+            attn, new_kv = gqa_apply(cfg, p["attn"], h, angles=angles,
+                                     cache=cache, cache_index=cache_index)
+            if state is not None:
+                new_state["kv"] = new_kv
+            x = x + attn
+        else:
+            mp = jax.tree.map(lambda a: a[j - 1], p["mamba"])
+            ln = jax.tree.map(lambda a: a[j - 1], p["mamba_ln"])
+            h = rms_norm(ln, x, cfg.norm_eps)
+            if state is None:
+                x = x + mamba_apply(cfg, mp, h)
+            else:
+                st = {"conv": state["conv"][j - 1], "ssm": state["ssm"][j - 1]}
+                y, st2 = mamba_step(cfg, mp, h, st)
+                new_state.setdefault("conv", []).append(st2["conv"])
+                new_state.setdefault("ssm", []).append(st2["ssm"])
+                x = x + y
+        # ---- FFN ---- #
+        ln = jax.tree.map(lambda a: a[j], p["ffn_ln"])
+        h = rms_norm(ln, x, cfg.norm_eps)
+        if j in moe_js:
+            fp = jax.tree.map(lambda a: a[mi], p["ffn_moe"])
+            y, a = moe_apply(cfg, fp, h)
+            aux = aux + a
+            mi += 1
+        else:
+            fp = jax.tree.map(lambda a: a[di], p["ffn_dense"])
+            y = swiglu(fp, h)
+            di += 1
+        x = x + y
+    if new_state is not None:
+        new_state["conv"] = jnp.stack(new_state["conv"])
+        new_state["ssm"] = jnp.stack(new_state["ssm"])
+    return x, aux, new_state
+
+
+def init(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    nsb = cfg.n_layers // cfg.attn_period
+    p = {
+        "embed": embedding_init(k1, cfg.vocab, cfg.d_model, cfg.jdtype),
+        "blocks": stack_layer_init(
+            lambda k: _superblock_init(cfg, k), nsb, k2),
+        "ln_f": rms_norm_init(cfg.d_model),
+        "head": head_init(k3, cfg.vocab, cfg.d_model, cfg.jdtype),
+    }
+    return p
+
+
+def _run(cfg, params, x, angles, states=None, cache_index=None):
+    block = functools.partial(_superblock_apply, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, layer_in):
+        x, aux = carry
+        if states is None:
+            x, a, _ = block(layer_in, x, angles=angles)
+            return (x, aux + a), None
+        p, st = layer_in
+        x, a, st2 = block(p, x, angles=angles, state=st,
+                          cache_index=cache_index)
+        return (x, aux + a), st2
+
+    xs = params["blocks"] if states is None else (params["blocks"], states)
+    (x, aux), new_states = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, aux, new_states
+
+
+def forward(cfg: ModelConfig, params, tokens, positions=None, embeds=None):
+    x = embeds if embeds is not None else embed(params["embed"], tokens)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    x, aux, _ = _run(cfg, params, x, angles)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return unembed(params["embed"], params.get("head"), x,
+                   cfg.tie_embeddings), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.jdtype
+    nsb = cfg.n_layers // cfg.attn_period
+    ap = cfg.attn_period
+    from repro.models.layers.recurrent import _mamba_dims
+    di, _, ds, dc = _mamba_dims(cfg)
+    return {
+        "kv": {"k": jnp.zeros((nsb, batch, max_len, cfg.n_kv_heads,
+                               cfg.head_dim), dt),
+               "v": jnp.zeros((nsb, batch, max_len, cfg.n_kv_heads,
+                               cfg.head_dim), dt)},
+        "conv": jnp.zeros((nsb, ap - 1, batch, dc - 1, di), dt),
+        "ssm": jnp.zeros((nsb, ap - 1, batch, di, ds), jnp.float32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, index,
+                positions=None):
+    x = embed(params["embed"], tokens)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = index + jnp.arange(s, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(positions, (b, s))
+    angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    x, _, new_states = _run(cfg, params, x, angles, states=cache,
+                            cache_index=index)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], params.get("head"), x,
+                     cfg.tie_embeddings)
+    return logits, new_states
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, positions=None):
+    """Prefill is mamba-sequential; for simplicity we run the full forward
+    while filling caches via decode-style chunking is left to serve_step
+    (prefill uses the cached path with index 0)."""
+    return decode_step(cfg, params, tokens, cache, jnp.int32(0), positions)

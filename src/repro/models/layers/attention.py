@@ -1,0 +1,399 @@
+"""Attention: chunked flash-style reference + GQA / MLA / cross layers.
+
+``flash_attention_ref`` is the memory-bounded pure-jnp implementation used
+everywhere by default: it scans over (q-chunk, kv-chunk) block pairs with an
+online softmax, materializing only chunk-sized score blocks.  For causal
+attention the pair list is *triangular*, so the compiled HLO carries the
+exact causal FLOP count (no rectangular-mask waste) — this keeps the
+roofline's MODEL_FLOPS / HLO_FLOPS ratio honest and bounds compile-time temp
+memory at 32k-token prefill.  It is also the oracle for the Pallas flash
+kernel (``repro.kernels.flash_attention``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, dense_init
+from repro.sharding.hints import hint, hint_bshd, BATCH
+from .basic import rms_norm, rms_norm_init
+from .rope import apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool,
+                        q_chunk: int = 512, kv_chunk: int = 512,
+                        bias_mask_len=None, scale: float | None = None,
+                        return_lse: bool = False):
+    """Chunked online-softmax attention.
+
+    Args:
+      q: (B, Sq, H, Dk).  k: (B, Skv, KV, Dk).  v: (B, Skv, KV, Dv).
+        H must be a multiple of KV (GQA); H == KV is MHA.
+      causal: lower-triangular masking (assumes Sq == Skv alignment at the
+        *end*: query i attends keys ≤ i + (Skv − Sq)).
+      bias_mask_len: optional valid-key lengths — (B,) per batch row, or
+        (B, Sq) per query (used for causal prefill into a partially filled
+        KV cache: query t sees keys < len[b, t]).
+      scale: defaults to Dk^-1/2.
+
+    Returns: (B, Sq, H, Dv) in q.dtype.
+    """
+    b, sq, h, dk = q.shape
+    _, skv, kv, dv = v.shape
+    g = h // kv
+    scale = dk ** -0.5 if scale is None else scale
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    nq = -(-sq // qc)
+    nk = -(-skv // kc)
+    sq_p, skv_p = nq * qc, nk * kc
+    offset = skv - sq  # causal diagonal offset
+    qp = _pad_to(q, sq_p, 1).reshape(b, nq, qc, kv, g, dk)
+    kp = _pad_to(k, skv_p, 1).reshape(b, nk, kc, kv, dk)
+    vp = _pad_to(v, skv_p, 1).reshape(b, nk, kc, kv, dv)
+
+    if causal:
+        pairs = np.array([(i, j) for i in range(nq)
+                          for j in range(nk)
+                          if j * kc <= i * qc + offset + qc - 1],
+                         np.int32)
+    else:
+        pairs = np.array([(i, j) for i in range(nq) for j in range(nk)],
+                         np.int32)
+
+    acc = hint(jnp.zeros((b, nq, qc, kv, g, dv), jnp.float32),
+               BATCH, None, None, "model", None, None)
+    m = hint(jnp.full((b, nq, qc, kv, g), NEG_INF, jnp.float32),
+             BATCH, None, None, "model", None)
+    l = hint(jnp.zeros((b, nq, qc, kv, g), jnp.float32),
+             BATCH, None, None, "model", None)
+    q_pos = jnp.arange(qc)
+    k_pos = jnp.arange(kc)
+    mask2d = None
+    if bias_mask_len is not None and bias_mask_len.ndim == 2:
+        mask2d = _pad_to(bias_mask_len, sq_p, 1).reshape(b, nq, qc)
+
+    def body(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vp, j, 1, keepdims=False)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        # masks: causal, key padding, cache length
+        kabs = j * kc + k_pos  # (kc,)
+        neg = jnp.float32(NEG_INF)
+        if causal:
+            qabs = i * qc + q_pos + offset
+            s = jnp.where(kabs[None, None, None, None, :]
+                          <= qabs[None, :, None, None, None], s, neg)
+        s = jnp.where(kabs[None, None, None, None, :] < skv, s, neg)
+        if bias_mask_len is not None:
+            if mask2d is None:
+                ml = bias_mask_len[:, None, None, None, None]
+            else:
+                ml = jax.lax.dynamic_index_in_dim(
+                    mask2d, i, 1, keepdims=False)[:, :, None, None, None]
+            s = jnp.where(kabs[None, None, None, None, :] < ml, s, neg)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bqkgs,bskd->bqkgd", p, vj.astype(jnp.float32))
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc, m, l), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, sq_p, h, dv)[:, :sq].astype(q.dtype)
+    if return_lse:
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30)))
+        lse = lse.reshape(b, sq_p, kv, g)[:, :sq]
+        return out, lse
+    return out
+
+
+def _flash_fwd_lse(q, k, v, *, causal, q_chunk, kv_chunk, bias_mask_len):
+    """Forward that also returns the log-sum-exp (flash backward residual).
+
+    Mirrors :func:`flash_attention_ref` but keeps (m, l) to form
+    ``lse = m + log l`` — the only O(S) residual the backward needs.
+    """
+    out = flash_attention_ref(q, k, v, causal=causal, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk,
+                              bias_mask_len=bias_mask_len,
+                              return_lse=True)
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attention(q, k, v, causal, q_chunk, kv_chunk):
+    return flash_attention_ref(q, k, v, causal=causal, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk)
+
+
+def _flash_attn_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_lse(q, k, v, causal=causal, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk, bias_mask_len=None)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_attn_bwd(causal, q_chunk, kv_chunk, res, dout):
+    """True flash backward: recompute score blocks per (q, kv) chunk pair;
+    residual memory is O(B·S·H) for the lse instead of O(steps × acc)."""
+    q, k, v, out, lse = res
+    b, sq, h, dk = q.shape
+    _, skv, kv, dv = v.shape
+    g = h // kv
+    scale = dk ** -0.5
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    nq = -(-sq // qc)
+    nk = -(-skv // kc)
+    sq_p, skv_p = nq * qc, nk * kc
+    offset = skv - sq
+    f32 = jnp.float32
+    qp = _pad_to(q, sq_p, 1).reshape(b, nq, qc, kv, g, dk).astype(f32)
+    kp = _pad_to(k, skv_p, 1).reshape(b, nk, kc, kv, dk).astype(f32)
+    vp = _pad_to(v, skv_p, 1).reshape(b, nk, kc, kv, dv).astype(f32)
+    dop = _pad_to(dout, sq_p, 1).reshape(b, nq, qc, kv, g, dv).astype(f32)
+    op = _pad_to(out, sq_p, 1).reshape(b, nq, qc, kv, g, dv).astype(f32)
+    lsep = _pad_to(lse, sq_p, 1).reshape(b, nq, qc, kv, g)
+    # D = rowsum(dout ⊙ out)
+    dmat = (dop * op).sum(-1)  # (b, nq, qc, kv, g)
+
+    if causal:
+        pairs = np.array([(i, j) for i in range(nq) for j in range(nk)
+                          if j * kc <= i * qc + offset + qc - 1], np.int32)
+    else:
+        pairs = np.array([(i, j) for i in range(nq) for j in range(nk)],
+                         np.int32)
+
+    dq = hint(jnp.zeros_like(qp), BATCH, None, None, "model", None, None)
+    dk_ = hint(jnp.zeros_like(kp), BATCH, None, None, "model", None)
+    dv_ = hint(jnp.zeros_like(vp), BATCH, None, None, "model", None)
+    q_pos = jnp.arange(qc)
+    k_pos = jnp.arange(kc)
+
+    def body(carry, pair):
+        dq, dk_, dv_ = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vp, j, 1, keepdims=False)
+        doi = jax.lax.dynamic_index_in_dim(dop, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(lsep, i, 1, keepdims=False)
+        di = jax.lax.dynamic_index_in_dim(dmat, i, 1, keepdims=False)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qi, kj) * scale
+        kabs = j * kc + k_pos
+        neg = jnp.float32(NEG_INF)
+        if causal:
+            qabs = i * qc + q_pos + offset
+            s = jnp.where(kabs[None, None, None, None, :]
+                          <= qabs[None, :, None, None, None], s, neg)
+        s = jnp.where(kabs[None, None, None, None, :] < skv, s, neg)
+        p = jnp.exp(s - li[..., None])                 # (b,q,k,g,s)
+        dvj = jnp.einsum("bqkgs,bqkgd->bskd", p, doi)
+        dp = jnp.einsum("bqkgd,bskd->bqkgs", doi, vj)
+        ds = p * (dp - di[..., None]) * scale
+        dqi = jnp.einsum("bqkgs,bskd->bqkgd", ds, kj)
+        dkj = jnp.einsum("bqkgs,bqkgd->bskd", ds, qi)
+        dq = dq.at[:, i].add(dqi)
+        dk_ = dk_.at[:, j].add(dkj)
+        dv_ = dv_.at[:, j].add(dvj)
+        return (dq, dk_, dv_), None
+
+    (dq, dk_, dv_), _ = jax.lax.scan(body, (dq, dk_, dv_),
+                                     jnp.asarray(pairs))
+    dq = dq.reshape(b, sq_p, h, dk)[:, :sq].astype(q.dtype)
+    dk_ = dk_.reshape(b, skv_p, kv, dk)[:, :skv].astype(k.dtype)
+    dv_ = dv_.reshape(b, skv_p, kv, dv)[:, :skv].astype(v.dtype)
+    return dq, dk_, dv_
+
+
+_flash_attention.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def attention_op(cfg: ModelConfig, q, k, v, *, causal, mask_len=None):
+    """Dispatch: Pallas flash kernel on TPU, chunked reference otherwise.
+
+    The no-mask path (training) goes through the custom-VJP flash
+    implementation — O(B·S·H) residuals; the masked paths (serving) never
+    differentiate, so they use the plain reference.
+    """
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as _fops
+        return _fops.flash_attention(q, k, v, causal=causal,
+                                     mask_len=mask_len)
+    if mask_len is None:
+        return _flash_attention(q, k, v, causal, cfg.attn_q_chunk,
+                                cfg.attn_kv_chunk)
+    return flash_attention_ref(q, k, v, causal=causal,
+                               q_chunk=cfg.attn_q_chunk,
+                               kv_chunk=cfg.attn_kv_chunk,
+                               bias_mask_len=mask_len)
+
+
+# ---------------------------------------------------------------------- #
+# GQA attention layer
+# ---------------------------------------------------------------------- #
+def gqa_init(cfg: ModelConfig, key):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.jdtype
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, d), dt),
+    }
+
+
+def gqa_apply(cfg: ModelConfig, p, x, *, angles, causal=True,
+              cache=None, cache_index=None):
+    """x: (B, S, d).  ``cache``: optional dict(k, v, len) for decoding —
+    new K/V are written at ``cache_index`` and attention runs over the
+    cache; returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"]).reshape(b, s, kv, hd)
+    q, k, v = hint_bshd(q), hint_bshd(k), hint_bshd(v)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        k, v = ck, cv
+        # query t may see cache prefix + in-chunk keys ≤ its own position
+        mask_len = cache_index + jnp.arange(s, dtype=jnp.int32)[None] + 1
+        mask_len = jnp.broadcast_to(mask_len, (b, s))
+        out = attention_op(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
+                           causal=False, mask_len=mask_len)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        out = attention_op(cfg, q, k, v, causal=causal)
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, s, h * hd), p["wo"])
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------- #
+# cross attention (enc-dec)
+# ---------------------------------------------------------------------- #
+def cross_init(cfg: ModelConfig, key):
+    return gqa_init(cfg, key)
+
+
+def cross_apply(cfg: ModelConfig, p, x, enc_kv):
+    """enc_kv: dict(k, v) precomputed from the encoder output."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"]).reshape(b, s, h, hd)
+    out = attention_op(cfg, q, enc_kv["k"], enc_kv["v"], causal=False)
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, s, h * hd), p["wo"])
+    return out.astype(x.dtype)
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    b, se, d = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,df->bsf", enc_out, p["wk"]).reshape(b, se, kv, hd)
+    v = jnp.einsum("bsd,df->bsf", enc_out, p["wv"]).reshape(b, se, kv, hd)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------- #
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------- #
+def mla_init(cfg: ModelConfig, key):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dvh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    return {
+        "q_down": dense_init(ks[0], (d, qr), dt),
+        "q_norm": rms_norm_init(qr),
+        "q_up": dense_init(ks[1], (qr, h * (dn + dr)), dt),
+        "kv_down": dense_init(ks[2], (d, kvr + dr), dt),
+        "kv_norm": rms_norm_init(kvr),
+        "kv_up": dense_init(ks[3], (kvr, h * (dn + dvh)), dt),
+        "wo": dense_init(ks[4], (h * dvh, d), dt),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p, x, *, positions, causal=True,
+              cache=None, cache_index=None):
+    """MLA with compressed-latent KV cache: the cache stores only
+    (c_kv, k_rope) — ``kv_lora_rank + qk_rope_dim`` per token (§MiniCPM3).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dvh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q = jnp.einsum("bsd,dr->bsr", x, p["q_down"])
+    q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+    q = jnp.einsum("bsr,rf->bsf", q, p["q_up"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ang = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, ang)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["kv_down"])
+    c_kv, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    c_kv = rms_norm(p["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], ang)[:, :, 0]
+
+    mask_len = None
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_index, 1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            cache_index, 1)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        mask_len = cache_index + jnp.arange(s, dtype=jnp.int32)[None] + 1
+        mask_len = jnp.broadcast_to(mask_len, (b, s))
+        causal = False
+    else:
+        new_cache = None
+
+    # expand latents → per-head keys/values (absorbed-matmul variant is the
+    # documented §Perf optimization; this is the reference expansion)
+    skv = c_kv.shape[1]
+    kvu = jnp.einsum("bsr,rf->bsf", c_kv.astype(x.dtype),
+                     p["kv_up"]).reshape(b, skv, h, dn + dvh)
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :].astype(x.dtype),
+                                  (b, skv, h, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention_op(cfg, q_full, k, v, causal=causal, mask_len=mask_len)
+    out = jnp.einsum("bsf,fd->bsd", out.reshape(b, s, h * dvh), p["wo"])
+    return out.astype(x.dtype), new_cache

@@ -1,0 +1,69 @@
+"""Norms, embeddings, and dense projections (pure-function pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def rms_norm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps: float = 1e-5):
+    # stats in fp32, but the normalized activation never materializes in
+    # fp32 — (B,S,D) stays in model dtype (§Perf iteration B2: cuts the
+    # per-layer norm HBM round-trips roughly in half)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+def layer_norm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"table": dense_init(key, (vocab, d), dtype, scale=1.0)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p_emb, p_head, x, tie: bool):
+    """Project to vocabulary logits (optionally tied to the embedding)."""
+    w = p_emb["table"] if tie else p_head["w"]
+    return jnp.einsum("...d,vd->...v", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def head_init(key, vocab: int, d: int, dtype):
+    return {"w": dense_init(key, (vocab, d), dtype)}
+
+
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False):
+    p = {"w": dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = jnp.einsum("...d,df->...f", x, p["w"]).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"]
+    return y

@@ -1,0 +1,135 @@
+"""FFN layers: SwiGLU, GELU MLP, and scatter-based top-k MoE.
+
+The MoE dispatch avoids GShard's O(T·E·C) one-hot tensors: token→expert
+assignment is materialized as (expert, position) indices and moved with
+`.at[].add` scatters / `take` gathers, both of which XLA SPMD turns into the
+expert-parallel all-to-all this paper's ICI scheduler targets.  Capacity is
+``ceil(T/E · topk · capacity_factor)``; overflow tokens are dropped (their
+combine weight is zero), standard for capacity-based MoE.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.sharding.hints import hint, hint_bsf, hint_expert
+
+
+def swiglu_init(cfg: ModelConfig, key, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {
+        "w_gate": dense_init(ks[0], (d, f), dt),
+        "w_up": dense_init(ks[1], (d, f), dt),
+        "w_down": dense_init(ks[2], (f, d), dt),
+    }
+
+
+def swiglu(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(x.dtype)
+    if h.ndim == 3:
+        h = hint_bsf(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def gelu_mlp_init(cfg: ModelConfig, key, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 2)
+    dt = cfg.jdtype
+    return {"w_in": dense_init(ks[0], (d, f), dt),
+            "b_in": jnp.zeros((f,), dt),
+            "w_out": dense_init(ks[1], (f, d), dt),
+            "b_out": jnp.zeros((d,), dt)}
+
+
+def gelu_mlp(p, x):
+    h = jnp.einsum("...d,df->...f", x, p["w_in"]) + p["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    if h.ndim == 3:
+        h = hint_bsf(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"]) + p["b_out"]
+
+
+# ---------------------------------------------------------------------- #
+# MoE
+# ---------------------------------------------------------------------- #
+def moe_init(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ep = max(cfg.moe_pad_to, e) if cfg.moe_pad_to else e
+    ks = jax.random.split(key, 5)
+    dt = cfg.jdtype
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (ep, d, f), dt),
+        "w_up": dense_init(ks[2], (ep, d, f), dt),
+        "w_down": dense_init(ks[3], (ep, f, d), dt),
+    }
+    if cfg.moe_shared > 0:
+        p["shared"] = swiglu_init(cfg, ks[4], d_ff=cfg.moe_shared * f)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, d) → (y, aux_loss).
+
+    ``moe_pad_to`` (§Perf iteration A2): dummy experts pad E up to an
+    EP-divisible count — the router never selects them, but the expert
+    buffers become evenly shardable over the model axis, turning the
+    gather/all-reduce storm of ragged expert-TP into one clean all-to-all.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_topk
+    e_buf = max(cfg.moe_pad_to, e) if cfg.moe_pad_to else e
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, k)            # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch/GShard)
+    me = probs.mean(0)                                       # (E,)
+    one_hot = jax.nn.one_hot(experts, e, dtype=jnp.float32)  # (T, k, E)
+    ce = one_hot.sum(1).mean(0)                              # fraction routed
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    capacity = int(max(1, -(-t * k // e)) * cfg.capacity_factor)
+    e = e_buf  # buffers/compute below use the (padded) expert count
+    # position of each (token, slot) within its expert queue
+    flat_exp = experts.reshape(-1)                           # (T*k,)
+    eoh = jax.nn.one_hot(flat_exp, e, dtype=jnp.int32)       # (T*k, E)
+    pos = (jnp.cumsum(eoh, axis=0) - 1)                      # (T*k, E)
+    pos = jnp.take_along_axis(pos, flat_exp[:, None], 1)[:, 0]
+    keep = pos < capacity
+    slot = flat_exp * capacity + pos                         # (T*k,)
+    slot = jnp.where(keep, slot, e * capacity)               # drop overflow
+
+    buf = jnp.zeros((e * capacity, d), xt.dtype)
+    src = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+    buf = buf.at[slot].add(src, mode="drop")
+    buf = buf.reshape(e, capacity, d)
+    buf = hint_expert(buf)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+         ).astype(xt.dtype)
+    h = hint_expert(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = out.reshape(e * capacity, d)
+
+    gathered = jnp.take(out, jnp.minimum(slot, e * capacity - 1), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(t, k, d)
+         * gate_vals[..., None].astype(xt.dtype)).sum(1)
+
+    if cfg.moe_shared > 0:
+        y = y + swiglu(p["shared"], xt)
+    return y.reshape(b, s, d), aux

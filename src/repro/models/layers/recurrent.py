@@ -1,0 +1,353 @@
+"""Recurrent sequence mixers: Mamba (selective SSM) and xLSTM (mLSTM/sLSTM).
+
+All three expose the same contract as attention layers:
+
+* ``*_apply(cfg, p, x)``                 — full-sequence (train / prefill),
+  chunked so compiled temp memory stays bounded at long context;
+* ``*_step(cfg, p, x_t, state)``         — single-token decode with carried
+  recurrent state (this is what makes the ``long_500k`` shape sub-quadratic
+  and O(1)-state for the hybrid/ssm architectures);
+* ``*_init_state(cfg, batch)``           — zero state.
+
+Mamba follows arXiv:2312.00752 (conv → selective SSM → gate); the chunked
+scan uses an associative scan within chunks and a carried (d_inner, d_state)
+state across chunks — the same blocking the Pallas kernel
+(``repro.kernels.mamba_scan``) implements in VMEM.
+
+mLSTM/sLSTM follow arXiv:2405.04517: mLSTM in its chunkwise linear-attention
+form with exponential gating (matrix memory C, normalizer n), sLSTM as a
+true sequential scan with block-diagonal recurrent weights and the
+stabilizer state m.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.sharding.hints import hint, hint_bsf
+from .basic import rms_norm, rms_norm_init
+
+
+# ====================================================================== #
+# Mamba
+# ====================================================================== #
+def _mamba_dims(cfg: ModelConfig):
+    di = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, -(-cfg.d_model // 16))
+    return di, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def mamba_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    di, dtr, ds, dc = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (dc, di), dt, scale=dc ** -0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dt),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((di,), 0.01, jnp.float32))),  # softplus⁻¹(dt_init)
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _mamba_inner(cfg, p, xz, conv_state=None, ssm_state=None):
+    """Shared core: xz = (B, S, 2·di) post in_proj.
+
+    Returns (y, new_conv_state, new_ssm_state); states are None unless the
+    corresponding input state was provided (decode mode).
+    """
+    di, dtr, ds, dc = _mamba_dims(cfg)
+    xz = hint_bsf(xz)
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, S, di)
+    b, s, _ = x.shape
+
+    # depthwise causal conv along S
+    if conv_state is not None:
+        xin = jnp.concatenate([conv_state, x], axis=1)  # (B, dc-1+S, di)
+        new_conv = xin[:, -(dc - 1):]
+    else:
+        xin = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+        new_conv = None
+    wins = jnp.stack([xin[:, i:i + s] for i in range(dc)], axis=-1)
+    xc = jnp.einsum("bsdc,cd->bsd", wins.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bsd,df->bsf", xc, p["x_proj"])
+    dt_in, b_in, c_in = jnp.split(
+        proj.astype(jnp.float32), [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"])                                  # (B, S, di)
+    a = -jnp.exp(p["a_log"])                             # (di, ds)
+    ad = jnp.exp(delta[..., None] * a)                   # (B, S, di, ds)
+    bx = (delta * xc.astype(jnp.float32))[..., None] * b_in[:, :, None, :]
+
+    chunk = max(1, min(cfg.mamba_chunk, s))
+    npad = (-s) % chunk
+    if npad:
+        ad = jnp.pad(ad, ((0, 0), (0, npad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, npad), (0, 0), (0, 0)))
+    nchunks = (s + npad) // chunk
+    ad = ad.reshape(b, nchunks, chunk, di, ds)
+    bx = bx.reshape(b, nchunks, chunk, di, ds)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, br + ar * bl
+
+    def chunk_body(h, inp):
+        ad_c, bx_c = inp  # (B, chunk, di, ds)
+        cum_a, cum_b = jax.lax.associative_scan(combine, (ad_c, bx_c), axis=1)
+        hs = cum_a * h[:, None] + cum_b                  # (B, chunk, di, ds)
+        return hs[:, -1], hs
+
+    h0 = (ssm_state if ssm_state is not None
+          else hint(jnp.zeros((b, di, ds), jnp.float32),
+                    ("pod", "data"), "model", None))
+    h_last, hs = jax.lax.scan(chunk_body, h0,
+                              (ad.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1).reshape(b, nchunks * chunk, di, ds)[:, :s]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_in)            # (B, S, di)
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_ssm = h_last if ssm_state is not None else None
+    return y, new_conv, new_ssm
+
+
+def mamba_apply(cfg: ModelConfig, p, x):
+    xz = jnp.einsum("bsd,df->bsf", x, p["in_proj"])
+    y, _, _ = _mamba_inner(cfg, p, xz)
+    return jnp.einsum("bsf,fd->bsd", y, p["out_proj"]).astype(x.dtype)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, _, ds, dc = _mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, ds), jnp.float32)}
+
+
+def mamba_step(cfg: ModelConfig, p, x, state):
+    """x: (B, 1, d) single token; state: dict(conv, ssm)."""
+    xz = jnp.einsum("bsd,df->bsf", x, p["in_proj"])
+    y, new_conv, new_ssm = _mamba_inner(
+        cfg, p, xz, conv_state=state["conv"].astype(x.dtype),
+        ssm_state=state["ssm"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"]).astype(x.dtype)
+    return out, {"conv": new_conv.astype(state["conv"].dtype),
+                 "ssm": new_ssm}
+
+
+# ====================================================================== #
+# mLSTM (chunkwise linear-attention form)
+# ====================================================================== #
+def _mlstm_dims(cfg: ModelConfig):
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return dp, h, dp // h
+
+
+def mlstm_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    dp, h, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    return {
+        "up": dense_init(ks[0], (d, 2 * dp), dt),
+        "wq": dense_init(ks[1], (dp, dp), dt),
+        "wk": dense_init(ks[2], (dp, dp), dt),
+        "wv": dense_init(ks[3], (dp, dp), dt),
+        "wi": dense_init(ks[4], (dp, h), jnp.float32),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "wf": dense_init(ks[5], (dp, h), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),   # forget-gate bias > 0
+        "norm": rms_norm_init(dp),
+        "down": dense_init(ks[6], (dp, d), dt),
+    }
+
+
+def _mlstm_core(cfg, p, c_in, state):
+    """c_in: (B, S, dp).  state: (C, n) or None.  Chunked linear attention
+    with scalar-per-head exponential gates (unstabilized form, f32 inner).
+    """
+    dp, h, dh = _mlstm_dims(cfg)
+    b, s, _ = c_in.shape
+    q = jnp.einsum("bsd,df->bsf", c_in, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,df->bsf", c_in, p["wk"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bsd,df->bsf", c_in, p["wv"]).reshape(b, s, h, dh)
+    q = hint(q, ("pod", "data"), None, None, None)
+    k = hint(k, ("pod", "data"), None, None, None)
+    v = hint(v, ("pod", "data"), None, None, None)
+    q = q.astype(jnp.float32) * dh ** -0.5
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", c_in.astype(jnp.float32), p["wf"])
+        + p["bf"])                                     # (B, S, H) ≤ 0
+    logi = jnp.minimum(
+        jnp.einsum("bsd,dh->bsh", c_in.astype(jnp.float32), p["wi"])
+        + p["bi"], 8.0)
+
+    chunk = max(1, min(cfg.xlstm_chunk, s))
+    npad = (-s) % chunk
+    if npad:
+        pad = ((0, 0), (0, npad), (0, 0))
+        q = jnp.pad(q, pad + ((0, 0),))
+        k = jnp.pad(k, pad + ((0, 0),))
+        v = jnp.pad(v, pad + ((0, 0),))
+        logf = jnp.pad(logf, pad)
+        logi = jnp.pad(logi, pad, constant_values=-1e30)
+    nch = (s + npad) // chunk
+    shp = (b, nch, chunk, h)
+    qc = q.reshape(*shp, dh)
+    kc = k.reshape(*shp, dh)
+    vc = v.reshape(*shp, dh)
+    fc = logf.reshape(shp)
+    ic = logi.reshape(shp)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+    else:
+        c0, n0 = state["c"], state["n"]
+
+    def body(carry, inp):
+        cmat, nvec = carry
+        qx, kx, vx, fx, ix = inp              # (B, chunk, H, ·)
+        cf = jnp.cumsum(fx, axis=1)           # (B, chunk, H) inclusive
+        # intra-chunk: decay(t, s) = exp(cf_t − cf_s + i_s) for s ≤ t
+        dmat = cf[:, :, None, :] - cf[:, None, :, :] + ix[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -1e30)
+        w = jnp.exp(dmat)                     # (B, t, s, H)
+        scores = jnp.einsum("bthd,bshd->btsh", qx, kx) * w
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vx)
+        n_intra = jnp.einsum("btsh,bshd->bthd", w, kx)
+        # inter-chunk contribution
+        decay_t = jnp.exp(cf)                 # (B, chunk, H)
+        y_inter = jnp.einsum("bthd,bhde->bthe", qx, cmat) \
+            * decay_t[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qx, nvec) * decay_t
+        n_full = jnp.einsum("bthd,bthd->bth", qx, n_intra) + n_inter
+        y = (y_intra + y_inter) / jnp.maximum(jnp.abs(n_full), 1.0)[..., None]
+        # state update
+        rem = cf[:, -1:, :] - cf + ix         # exp weight to end of chunk
+        wk = jnp.exp(rem)[..., None] * kx     # (B, chunk, H, dh)
+        cmat = cmat * jnp.exp(cf[:, -1])[..., None, None] \
+            + jnp.einsum("bshd,bshe->bhde", wk, vx)
+        nvec = nvec * jnp.exp(cf[:, -1])[..., None] + wk.sum(1)
+        return (cmat, nvec), y
+
+    (c_f, n_f), ys = jax.lax.scan(
+        body, (c0, n0),
+        (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+         fc.swapaxes(0, 1), ic.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(b, nch * chunk, h, dh)[:, :s]
+    return y.reshape(b, s, dp), {"c": c_f, "n": n_f}
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, state=None, return_state=False):
+    dp, h, dh = _mlstm_dims(cfg)
+    u = jnp.einsum("bsd,df->bsf", x, p["up"])
+    c_in, gate = jnp.split(u, 2, axis=-1)
+    y, new_state = _mlstm_core(cfg, p, c_in, state)
+    y = rms_norm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, p["down"]).astype(x.dtype)
+    if return_state:
+        return out, new_state
+    return out
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    dp, h, dh = _mlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32)}
+
+
+def mlstm_step(cfg: ModelConfig, p, x, state):
+    return mlstm_apply(cfg, p, x, state=state, return_state=True)
+
+
+# ====================================================================== #
+# sLSTM (sequential scan, block-diagonal recurrence, stabilized exp gates)
+# ====================================================================== #
+def slstm_init(cfg: ModelConfig, key):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {
+        "w": dense_init(ks[0], (d, 4 * d), dt),           # z i f o
+        "r": dense_init(ks[1], (h, dh, 4 * dh), jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        "out": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z,
+            "m": jnp.zeros((batch, h, dh), jnp.float32)}
+
+
+def _slstm_cell(cfg, p, wx_t, st):
+    """One recurrence step.  wx_t: (B, 4d) precomputed input projection."""
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    b = wx_t.shape[0]
+    rh = jnp.einsum("bhd,hdf->bhf", st["h"], p["r"])      # (B, H, 4dh)
+    # wx packs (z i f o) in four d-wide blocks; rebuild per head
+    wx = wx_t.reshape(b, 4, d).transpose(0, 2, 1)          # (B, d, 4)
+    wx = wx.reshape(b, h, dh, 4)
+    rr = rh.reshape(b, h, dh, 4)
+    pre = wx + rr + p["b"].reshape(4, d).T.reshape(h, dh, 4)
+    z_t = jnp.tanh(pre[..., 0])
+    i_t = pre[..., 1]
+    f_t = pre[..., 2]
+    o_t = jax.nn.sigmoid(pre[..., 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + st["m"], i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(logf + st["m"] - m_new)
+    c_new = f_s * st["c"] + i_s * z_t
+    n_new = f_s * st["n"] + i_s
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(cfg: ModelConfig, p, x, state=None, return_state=False):
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,df->bsf", x, p["w"]).astype(jnp.float32)
+    st = state if state is not None else slstm_init_state(cfg, b)
+
+    def body(st, wx_t):
+        st = _slstm_cell(cfg, p, wx_t, st)
+        return st, st["h"]
+
+    st, hs = jax.lax.scan(body, st, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    out = jnp.einsum("bsd,df->bsf", y, p["out"]).astype(x.dtype)
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_step(cfg: ModelConfig, p, x, state):
+    return slstm_apply(cfg, p, x, state=state, return_state=True)

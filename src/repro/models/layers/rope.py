@@ -1,0 +1,51 @@
+"""Rotary position embeddings — standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE (arXiv:2409.12191) splits the head-dim rotary pairs into sections
+driven by (temporal, height, width) position ids; text tokens use identical
+t/h/w ids, so M-RoPE degenerates to RoPE on pure text.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (..., S) int → angles (..., S, head_dim/2)."""
+    return positions[..., None].astype(jnp.float32) * _freqs(head_dim, theta)
+
+
+def mrope_angles(positions_thw, head_dim: int, theta: float,
+                 sections: tuple[int, ...]):
+    """positions_thw: (3, B, S) → angles (B, S, head_dim/2).
+
+    ``sections`` gives the number of rotary *pairs* driven by each of
+    t/h/w (must sum to head_dim/2).
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = _freqs(head_dim, theta)  # (head_dim/2,)
+    ang = positions_thw[..., None].astype(jnp.float32) * freqs  # (3,B,S,hd/2)
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., off:off + sec])
+        off += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, D); angles: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)

@@ -1,0 +1,176 @@
+"""Decoder-only LM covering the dense / MoE / MLA / VLM families.
+
+Layers are homogeneous, stacked on a leading axis and driven by
+``lax.scan`` (+ optional ``jax.checkpoint`` remat per block).  The VLM
+(qwen2-vl) variant differs only in position handling (M-RoPE ids supplied by
+the stub frontend) and is selected by ``cfg.mrope_sections``.
+
+API:
+  init(cfg, key) -> params
+  forward(cfg, params, tokens, positions=None, embeds=None) -> (logits, aux)
+  init_cache(cfg, batch, max_len) -> cache pytree
+  prefill(cfg, params, tokens, cache, positions=None) -> (logits, cache)
+  decode_step(cfg, params, tokens, cache, index, positions=None)
+      -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, stack_layer_init
+from repro.models.layers.basic import (
+    embed, embedding_init, head_init, rms_norm, rms_norm_init, unembed)
+from repro.models.layers.attention import gqa_apply, gqa_init, mla_apply, mla_init
+from repro.models.layers.ffn import moe_apply, moe_init, swiglu, swiglu_init
+from repro.models.layers.rope import mrope_angles, rope_angles
+from repro.sharding.hints import hint_bsd
+
+
+def _uses_moe(cfg: ModelConfig) -> bool:
+    return cfg.is_moe and cfg.moe_period == 1
+
+
+def _block_init(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": rms_norm_init(cfg.d_model), "ln2": rms_norm_init(cfg.d_model)}
+    p["attn"] = mla_init(cfg, k1) if cfg.mla else gqa_init(cfg, k1)
+    p["ffn"] = moe_init(cfg, k2) if _uses_moe(cfg) else swiglu_init(cfg, k2)
+    return p
+
+
+def _block_apply(cfg: ModelConfig, p, x, *, angles, positions,
+                 cache=None, cache_index=None):
+    x = hint_bsd(x)
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        attn, new_cache = mla_apply(cfg, p["attn"], h, positions=positions,
+                                    cache=cache, cache_index=cache_index)
+    else:
+        attn, new_cache = gqa_apply(cfg, p["attn"], h, angles=angles,
+                                    cache=cache, cache_index=cache_index)
+    x = x + attn
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if _uses_moe(cfg):
+        y, aux = moe_apply(cfg, p["ffn"], h)
+    else:
+        y, aux = swiglu(p["ffn"], h), jnp.float32(0)
+    return x + y, new_cache, aux
+
+
+def init(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "embed": embedding_init(k1, cfg.vocab, cfg.d_model, cfg.jdtype),
+        "blocks": stack_layer_init(
+            lambda k: _block_init(cfg, k), cfg.n_layers, k2),
+        "ln_f": rms_norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = head_init(k3, cfg.vocab, cfg.d_model, cfg.jdtype)
+    return p
+
+
+def _angles_for(cfg: ModelConfig, positions):
+    """positions: (B, S) int or (3, B, S) for M-RoPE."""
+    if cfg.mla:
+        return None  # MLA applies rope internally on its rope sub-dims
+    if cfg.mrope_sections:
+        assert positions.ndim == 3, "vlm needs (3, B, S) position ids"
+        return mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                            cfg.mrope_sections)
+    if positions.ndim == 3:
+        positions = positions[0]
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _default_positions(cfg: ModelConfig, b, s, start=0):
+    pos = start + jnp.arange(s, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _run_blocks(cfg, params, x, angles, positions, caches=None,
+                cache_index=None):
+    block = functools.partial(_block_apply, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=())
+
+    def body(carry, layer_in):
+        x, aux = carry
+        if caches is None:
+            p = layer_in
+            x, _, a = block(p, x, angles=angles, positions=positions)
+            return (x, aux + a), None
+        p, c = layer_in
+        x, new_c, a = block(p, x, angles=angles, positions=positions,
+                            cache=c, cache_index=cache_index)
+        return (x, aux + a), new_c
+
+    xs = params["blocks"] if caches is None else (params["blocks"], caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, aux, new_caches
+
+
+def forward(cfg: ModelConfig, params, tokens, positions=None, embeds=None):
+    """tokens: (B, S) int32 — or ``embeds``: (B, S, d) from a stub modality
+    frontend (vlm); returns (logits f32, aux_loss)."""
+    x = embeds if embeds is not None else embed(params["embed"], tokens)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    angles = _angles_for(cfg, positions)
+    x, aux, _ = _run_blocks(cfg, params, x, angles, positions)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], params.get("head"), x,
+                     cfg.tie_embeddings)
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.jdtype
+    l = cfg.n_layers
+    if cfg.mla:
+        return {
+            "c_kv": jnp.zeros((l, batch, max_len, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((l, batch, max_len, cfg.qk_rope_dim), dt),
+        }
+    kvd = cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((l, batch, max_len, kvd, cfg.head_dim), dt),
+        "v": jnp.zeros((l, batch, max_len, kvd, cfg.head_dim), dt),
+    }
+
+
+def _apply_with_cache(cfg, params, tokens, cache, index, positions, embeds):
+    x = embeds if embeds is not None else embed(params["embed"], tokens)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, b, s, start=index)
+    angles = _angles_for(cfg, positions)
+    x, aux, new_caches = _run_blocks(cfg, params, x, angles, positions,
+                                     caches=cache, cache_index=index)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], params.get("head"), x,
+                     cfg.tie_embeddings)
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, positions=None,
+            embeds=None):
+    return _apply_with_cache(cfg, params, tokens, cache, 0, positions,
+                             embeds)
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, index,
+                positions=None):
+    """tokens: (B, 1); index: traced int32 current length."""
+    return _apply_with_cache(cfg, params, tokens, cache, index, positions,
+                             None)

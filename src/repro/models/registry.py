@@ -1,0 +1,60 @@
+"""Model registry: family dispatch + analytic parameter counting."""
+
+from __future__ import annotations
+
+from types import ModuleType
+
+import math
+
+import jax
+
+from repro.models.common import ModelConfig
+from repro.models import encdec, hybrid, lm, xlstm_model
+
+_FAMILY_MODULE: dict[str, ModuleType] = {
+    "dense": lm,
+    "moe": lm,
+    "vlm": lm,
+    "hybrid": hybrid,
+    "ssm": xlstm_model,
+    "encdec": encdec,
+}
+
+
+def model_module(cfg: ModelConfig) -> ModuleType:
+    return _FAMILY_MODULE[cfg.family]
+
+
+def init(cfg: ModelConfig, key):
+    return model_module(cfg).init(cfg, key)
+
+
+def forward(cfg: ModelConfig, params, tokens, positions=None, embeds=None):
+    return model_module(cfg).forward(cfg, params, tokens,
+                                     positions=positions, embeds=embeds)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    return model_module(cfg).init_cache(cfg, batch, max_len, dtype=dtype)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from abstract shapes; ``active_only`` counts
+    top-k routed + shared experts only (MoE MODEL_FLOPS)."""
+    shapes = abstract_params(cfg)
+    total = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    if not active_only or not cfg.is_moe:
+        return total
+    # subtract the inactive routed experts' parameters
+    d, f, e, k = cfg.d_model, cfg.d_ff, cfg.moe_experts, cfg.moe_topk
+    per_expert = 3 * d * f
+    n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                       if cfg.layer_is_moe(i))
+    inactive = n_moe_layers * (e - k) * per_expert
+    return total - inactive

@@ -1,0 +1,146 @@
+"""xLSTM language model (arXiv:2405.04517): mLSTM blocks with periodic
+sLSTM blocks (xLSTM[7:1] → ``slstm_period = 8``).
+
+``d_ff = 0`` in the assigned config: mLSTM blocks carry their own 2×
+up/down projection; sLSTM blocks are followed by a GLU FFN with projection
+factor 4/3 (paper's post-up structure).  Super-blocks of ``slstm_period``
+layers (1 sLSTM + 7 mLSTM) are scanned.
+
+Decode state: per mLSTM layer a (C: H×dh×dh, n: H×dh) matrix memory; per
+sLSTM layer (c, n, h, m) — all O(1) in sequence length (licenses
+``long_500k``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, stack_layer_init
+from repro.models.layers.basic import (
+    embed, embedding_init, head_init, rms_norm, rms_norm_init, unembed)
+from repro.models.layers.ffn import swiglu, swiglu_init
+from repro.sharding.hints import hint_bsd
+from repro.models.layers.recurrent import (
+    _mlstm_dims, mlstm_apply, mlstm_init, mlstm_init_state, mlstm_step,
+    slstm_apply, slstm_init, slstm_init_state, slstm_step)
+
+
+def _layout(cfg: ModelConfig):
+    sp = cfg.slstm_period if cfg.slstm_period > 0 else cfg.n_layers
+    assert cfg.n_layers % sp == 0
+    return sp
+
+
+def _superblock_init(cfg: ModelConfig, key):
+    sp = _layout(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "slstm": slstm_init(cfg, ks[0]),
+        "slstm_ln": rms_norm_init(cfg.d_model),
+        "slstm_ffn": swiglu_init(cfg, ks[1], d_ff=int(cfg.d_model * 4 / 3)),
+        "slstm_ffn_ln": rms_norm_init(cfg.d_model),
+        "mlstm": stack_layer_init(lambda k: mlstm_init(cfg, k), sp - 1, ks[2]),
+        "mlstm_ln": stack_layer_init(
+            lambda k: rms_norm_init(cfg.d_model), sp - 1, ks[3]),
+    }
+
+
+def _superblock_apply(cfg, p, x, state=None):
+    sp = _layout(cfg)
+    x = hint_bsd(x)
+    new_state = {} if state is not None else None
+    # sLSTM at position 0
+    h = rms_norm(p["slstm_ln"], x, cfg.norm_eps)
+    if state is None:
+        x = x + slstm_apply(cfg, p["slstm"], h)
+    else:
+        y, st = slstm_step(cfg, p["slstm"], h, state["slstm"])
+        new_state["slstm"] = st
+        x = x + y
+    h = rms_norm(p["slstm_ffn_ln"], x, cfg.norm_eps)
+    x = x + swiglu(p["slstm_ffn"], h)
+    # mLSTM blocks
+    ms = []
+    for j in range(sp - 1):
+        mp = jax.tree.map(lambda a: a[j], p["mlstm"])
+        ln = jax.tree.map(lambda a: a[j], p["mlstm_ln"])
+        h = rms_norm(ln, x, cfg.norm_eps)
+        if state is None:
+            x = x + mlstm_apply(cfg, mp, h)
+        else:
+            st = jax.tree.map(lambda a: a[j], state["mlstm"])
+            y, st2 = mlstm_step(cfg, mp, h, st)
+            ms.append(st2)
+            x = x + y
+    if state is not None:
+        new_state["mlstm"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+    return x, new_state
+
+
+def init(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    nsb = cfg.n_layers // _layout(cfg)
+    return {
+        "embed": embedding_init(k1, cfg.vocab, cfg.d_model, cfg.jdtype),
+        "blocks": stack_layer_init(
+            lambda k: _superblock_init(cfg, k), nsb, k2),
+        "ln_f": rms_norm_init(cfg.d_model),
+        "head": head_init(k3, cfg.vocab, cfg.d_model, cfg.jdtype),
+    }
+
+
+def _run(cfg, params, x, states=None):
+    block = functools.partial(_superblock_apply, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, layer_in):
+        if states is None:
+            x, _ = block(layer_in, x)
+            return x, None
+        p, st = layer_in
+        x, st2 = block(p, x, state=st)
+        return x, st2
+
+    xs = params["blocks"] if states is None else (params["blocks"], states)
+    x, new_states = jax.lax.scan(body, x, xs)
+    return x, new_states
+
+
+def forward(cfg: ModelConfig, params, tokens, positions=None, embeds=None):
+    x = embeds if embeds is not None else embed(params["embed"], tokens)
+    x, _ = _run(cfg, params, x)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return unembed(params["embed"], params.get("head"), x,
+                   cfg.tie_embeddings), jnp.float32(0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None):
+    """Recurrent state only — no sequence-length dimension at all."""
+    sp = _layout(cfg)
+    nsb = cfg.n_layers // sp
+    sl = slstm_init_state(cfg, batch)
+    ml = mlstm_init_state(cfg, batch)
+    return {
+        "slstm": jax.tree.map(lambda a: jnp.tile(a[None], (nsb,) + (1,) * a.ndim), sl),
+        "mlstm": jax.tree.map(
+            lambda a: jnp.tile(a[None, None], (nsb, sp - 1) + (1,) * a.ndim), ml),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, index,
+                positions=None):
+    x = embed(params["embed"], tokens)
+    x, new_states = _run(cfg, params, x, states=cache)
+    x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], params.get("head"), x,
+                     cfg.tie_embeddings)
+    return logits, new_states
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, positions=None):
+    return decode_step(cfg, params, tokens, cache, jnp.int32(0), positions)

@@ -1,0 +1,6 @@
+"""Flit-level NoC simulation substrate (the paper's BookSim2 role)."""
+
+from .simconfig import Algo, SimConfig, SimResult
+from .sim import run_sim
+
+__all__ = ["Algo", "SimConfig", "SimResult", "run_sim"]

@@ -1,0 +1,578 @@
+"""Vectorized flit-level NoC simulator (replaces BookSim2 for §4).
+
+Model (paper §4.1): input-queued wormhole routers, ``num_vcs`` virtual
+channels per input port with per-VC FIFOs, credit-based flow control
+(zero-delay credits — the synchronous global update reads receiver occupancy
+directly), one flit per channel per cycle, round-robin switch allocation,
+single-cycle routing.  The paper's 2-cycle base hop latency is realized as
+1 movement/cycle plus 1 extra cycle per hop charged in latency accounting —
+identical for every algorithm, so all relative comparisons are preserved.
+
+The whole per-cycle pipeline is pure jnp and runs under ``lax.scan``; one
+jit-compilation per (topology, algorithm, packet-length) triple.
+
+Routing algorithms (``Algo``): XY, YX, O1Turn, Valiant, ROMM (oblivious,
+two-phase XY with per-phase VCs), Odd-Even (minimal adaptive, turn model of
+Chiu [1]), and BiDOR (this paper: quasi-static XY/YX choice from N-Rank,
+VC0 = XY / VC1 = YX as in §3.3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bidor import BiDORTable
+from repro.core.routes import dimension_orders, next_port_table
+from repro.core.topology import Topology
+from .simconfig import Algo, SimConfig, SimResult
+
+_BIG = jnp.int32(1 << 30)
+
+
+class _Tables(NamedTuple):
+    """Static (trace-time constant) lookup tables."""
+
+    port: jnp.ndarray      # (2, N, N) int32: DOR out-port (order, cur, target)
+    choice: jnp.ndarray    # (N, N) int32: BiDOR order per (s, d)
+    neighbor: jnp.ndarray  # (N, P) int32
+    recv_port: jnp.ndarray  # (N, P) int32: input port at the neighbor
+    cdf: jnp.ndarray       # (N, N) float32 destination CDF per source
+    p_gen: jnp.ndarray     # (N,) float32 packet-generation probability @rate 1
+    coords: jnp.ndarray    # (N, 2) int32
+    n_of: jnp.ndarray      # (NIN,) node of each input
+    p_of: jnp.ndarray      # (NIN,) port of each input
+    v_of: jnp.ndarray      # (NIN,) vc of each input
+
+
+def _build_tables(topo: Topology, traffic: np.ndarray,
+                  bidor_choice: np.ndarray | None,
+                  num_vcs: int) -> tuple[_Tables, dict]:
+    if topo.ndim != 2:
+        raise ValueError("the flit simulator supports 2D topologies")
+    n, p, v = topo.num_nodes, topo.num_ports, num_vcs
+    orders = dimension_orders(2)
+    port = np.stack([next_port_table(topo, o) for o in orders]).astype(np.int32)
+    choice = (np.zeros((n, n), np.int32) if bidor_choice is None
+              else bidor_choice.astype(np.int32))
+    neighbor = topo.neighbor_table.astype(np.int32)
+    recv_port = np.full((n, p), 0, np.int32)
+    for c in range(topo.num_channels):
+        u = int(topo.channels[c, 0])
+        recv_port[u, topo.channel_port[c]] = topo.port_of_channel_at_receiver[c]
+    t = np.asarray(traffic, np.float64)
+    row = t.sum(1)
+    with np.errstate(invalid="ignore"):
+        cdf = np.cumsum(np.where(row[:, None] > 0, t / np.maximum(row, 1e-300)[:, None], 0), 1)
+    # p_gen (at rate=1 flit/cycle/port): node share ∝ its traffic row sum
+    total_ports = topo.io_weights.sum()
+    p_gen = row * total_ports  # × rate / packet_len at runtime
+    nin = n * p * v
+    idx = np.arange(nin)
+    tables = _Tables(
+        port=jnp.asarray(port), choice=jnp.asarray(choice),
+        neighbor=jnp.asarray(neighbor), recv_port=jnp.asarray(recv_port),
+        cdf=jnp.asarray(cdf, jnp.float32),
+        p_gen=jnp.asarray(p_gen, jnp.float32),
+        coords=jnp.asarray(topo.coords.astype(np.int32)),
+        n_of=jnp.asarray(idx // (p * v)),
+        p_of=jnp.asarray((idx // v) % p),
+        v_of=jnp.asarray(idx % v),
+    )
+    meta = dict(N=n, P=p, V=v, NIN=nin, P_LOCAL=topo.port_local,
+                W=int(topo.dims[0]))
+    return tables, meta
+
+
+def _fresh_state(meta: dict, cfg: SimConfig):
+    n, nin = meta["N"], meta["NIN"]
+    b, q = cfg.buf_per_vc, cfg.src_queue_pkts
+    i32 = jnp.int32
+    z = functools.partial(jnp.zeros, dtype=i32)
+    return dict(
+        # per-input-VC FIFOs (struct of arrays)
+        f_src=z((nin, b)), f_dst=z((nin, b)), f_inter=z((nin, b)),
+        f_seq=z((nin, b)), f_time=z((nin, b)), f_hops=z((nin, b)),
+        f_order=z((nin, b)),
+        f_head=jnp.zeros((nin, b), bool), f_tail=jnp.zeros((nin, b), bool),
+        f_phase=jnp.zeros((nin, b), bool),
+        fifo_start=z((nin,)), fifo_size=z((nin,)),
+        # wormhole locks
+        lock_op=jnp.full((nin,), -1, i32), lock_ov=jnp.full((nin,), -1, i32),
+        out_held=jnp.full((n, meta["P"], meta["V"]), -1, i32),
+        rr=z((n, meta["P"])),
+        # source queues (packets)
+        q_dst=z((n, q)), q_inter=z((n, q)), q_order=z((n, q)),
+        q_time=z((n, q)), q_seq=z((n, q)),
+        q_start=z((n,)), q_size=z((n,)), prog=z((n,)),
+        next_seq=z((n, n)),
+        # destination-side reorder tracking (paper §4.1 'Reorder Value')
+        exp_seq=z((n, n)), rbits=jnp.zeros((n, n), jnp.uint32),
+        # statistics
+        node_fwd=z((n,)), eject_flits=z((n,)),
+        lat_sum=z(()), lat_cnt=z(()), lat_max=z(()),
+        reorder_max=z(()), injected=z(()), offered=z(()), dropped=z(()),
+        eject_total=z(()),
+        rate=jnp.float32(0.0),
+        cycle0=jnp.int32(0),   # absolute-cycle offset (trace segments)
+        key=jax.random.PRNGKey(cfg.seed),
+    )
+
+
+def _popcount(x):
+    return jax.lax.population_count(x)
+
+
+def _make_step(meta: dict, cfg: SimConfig):
+    """Build the per-cycle transition function (tables traced, so all
+    traffic patterns and injection rates share one compilation per algo)."""
+    algo = Algo(cfg.algo)
+    n, p, v, nin = meta["N"], meta["P"], meta["V"], meta["NIN"]
+    p_local = meta["P_LOCAL"]
+    b, q, l = cfg.buf_per_vc, cfg.src_queue_pkts, cfg.packet_len
+    pv = p * v
+    n_arange = jnp.arange(n)
+    nin_arange = jnp.arange(nin)
+    two_phase = algo in (Algo.VALIANT, Algo.ROMM)
+
+    def fifo_push(state, idx, ok, fields):
+        """Append one flit to FIFO ``idx`` where ``ok`` (vector batch)."""
+        slot = (state["fifo_start"][idx] + state["fifo_size"][idx]) % b
+        safe_idx = jnp.where(ok, idx, nin)  # out of range ⇒ dropped
+        for name, val in fields.items():
+            state[f"f_{name}"] = state[f"f_{name}"].at[safe_idx, slot].set(
+                val, mode="drop")
+        state["fifo_size"] = state["fifo_size"].at[safe_idx].add(
+            1, mode="drop")
+        return state
+
+    def gen_metadata(t, key, src, dst):
+        """Per-algo packet metadata: (order, inter)."""
+        k1, k2, k3 = jax.random.split(key, 3)
+        if algo == Algo.XY:
+            order = jnp.zeros(n, jnp.int32)
+        elif algo == Algo.YX:
+            order = jnp.ones(n, jnp.int32)
+        elif algo == Algo.O1TURN:
+            order = jax.random.bernoulli(k1, 0.5, (n,)).astype(jnp.int32)
+        elif algo == Algo.BIDOR:
+            order = t.choice[src, dst]
+        else:
+            order = jnp.zeros(n, jnp.int32)
+        if algo == Algo.VALIANT:
+            inter = jax.random.randint(k2, (n,), 0, n)
+        elif algo == Algo.ROMM:
+            cs, cd = t.coords[src], t.coords[dst]
+            lo = jnp.minimum(cs, cd)
+            hi = jnp.maximum(cs, cd)
+            u = jax.random.uniform(k3, (n, 2))
+            ic = lo + (u * (hi - lo + 1)).astype(jnp.int32)
+            ic = jnp.clip(ic, lo, hi)
+            inter = ic[:, 1] * jnp.int32(meta["W"]) + ic[:, 0]
+        else:
+            inter = jnp.full((n,), -1, jnp.int32)
+        return order, inter
+
+    def oddeven_route(t, cur, src, target, free_by_port):
+        """Chiu's minimal adaptive odd-even ROUTE + credit-based selection.
+
+        Ports: 0=+x(E) 1=−x(W) 2=+y 3=−y.  Returns the chosen port.
+        """
+        cx = t.coords[cur, 0]
+        sx = t.coords[src, 0]
+        dx = t.coords[target, 0] - cx
+        dy = t.coords[target, 1] - t.coords[cur, 1]
+        y_port = jnp.where(dy > 0, 2, 3)
+        east_ok = (dx > 0) & ((dy == 0)
+                              | (t.coords[target, 0] % 2 == 1) | (dx != 1))
+        y_ok_east = (dx > 0) & (dy != 0) & ((cx % 2 == 1) | (cx == sx))
+        west_ok = dx < 0
+        y_ok_west = (dx < 0) & (dy != 0) & (cx % 2 == 0)
+        y_ok_straight = (dx == 0) & (dy != 0)
+        x_port = jnp.where(dx > 0, 0, 1)
+        x_ok = east_ok | west_ok
+        y_ok = y_ok_east | y_ok_west | y_ok_straight
+        fx = jnp.take_along_axis(free_by_port, x_port[:, None], 1)[:, 0]
+        fy = jnp.take_along_axis(free_by_port, y_port[:, None], 1)[:, 0]
+        prefer_y = y_ok & ((~x_ok) | (fy > fx))
+        return jnp.where(prefer_y, y_port, x_port), x_ok, y_ok
+
+    def step(t, state, cycle):
+        cycle = state["cycle0"] + cycle    # absolute cycle across segments
+        key, kg, kd, km, kv = jax.random.split(state["key"], 5)
+        state["key"] = key
+        measuring = cycle >= cfg.warmup
+
+        # ---------------- 1. packet generation (open loop) -------------- #
+        u = jax.random.uniform(kg, (n,))
+        gen = u < (t.p_gen * (state["rate"] / l))
+        ud = jax.random.uniform(kd, (n,))
+        dst = jnp.clip((t.cdf <= ud[:, None]).sum(1), 0, n - 1).astype(jnp.int32)
+        order, inter = gen_metadata(t, km, n_arange, dst)
+        space = state["q_size"] < q
+        push = gen & space
+        seq = state["next_seq"][n_arange, dst]
+        state["next_seq"] = state["next_seq"].at[n_arange, dst].add(
+            push.astype(jnp.int32))
+        slot = (state["q_start"] + state["q_size"]) % q
+        row = jnp.where(push, n_arange, n)  # drop when not pushing
+        for name, val in (("q_dst", dst), ("q_inter", inter),
+                          ("q_order", order), ("q_seq", seq),
+                          ("q_time", cycle * jnp.ones(n, jnp.int32))):
+            state[name] = state[name].at[row, slot].set(val, mode="drop")
+        state["q_size"] = state["q_size"] + push
+        state["offered"] += jnp.where(measuring, gen.sum(), 0)
+        state["dropped"] += jnp.where(measuring, (gen & ~space).sum(), 0)
+
+        # ---------------- 2. flit injection (1/cycle/node) -------------- #
+        hs = state["q_start"]
+        h_dst = state["q_dst"][n_arange, hs]
+        h_inter = state["q_inter"][n_arange, hs]
+        h_order = state["q_order"][n_arange, hs]
+        h_seq = state["q_seq"][n_arange, hs]
+        h_time = state["q_time"][n_arange, hs]
+        fl_head = state["prog"] == 0
+        fl_tail = state["prog"] == l - 1
+        phase0 = (h_inter < 0) | (h_inter == n_arange)
+        if algo in (Algo.XY, Algo.YX):
+            vc_in = (n_arange + h_dst) % v
+        elif algo in (Algo.O1TURN, Algo.BIDOR):
+            vc_in = h_order % v
+        elif two_phase:
+            vc_in = phase0.astype(jnp.int32) % v
+        else:  # ODDEVEN: local VC with more space
+            base = (n_arange * p + p_local) * v
+            sizes = jnp.stack([state["fifo_size"][base + k]
+                               for k in range(v)], 1)
+            vc_in = jnp.argmin(sizes, 1).astype(jnp.int32)
+        lf_idx = (n_arange * p + p_local) * v + vc_in
+        can = (state["q_size"] > 0) & (state["fifo_size"][lf_idx] < b)
+        state = fifo_push(state, lf_idx, can, dict(
+            src=n_arange, dst=h_dst, inter=h_inter, seq=h_seq, time=h_time,
+            hops=jnp.zeros(n, jnp.int32), order=h_order,
+            head=fl_head, tail=fl_tail, phase=phase0))
+        state["prog"] = jnp.where(can, state["prog"] + 1, state["prog"])
+        done = can & (state["prog"] >= l)
+        state["prog"] = jnp.where(done, 0, state["prog"])
+        state["q_start"] = jnp.where(done, (hs + 1) % q, hs)
+        state["q_size"] = state["q_size"] - done
+        state["injected"] += can.sum()
+
+        # ---------------- 3. head-of-line + routing --------------------- #
+        st_ = state["fifo_start"]
+        g = {name: state[f"f_{name}"][nin_arange, st_]
+             for name in ("src", "dst", "inter", "seq", "time", "hops",
+                          "order", "head", "tail", "phase")}
+        valid = state["fifo_size"] > 0
+        route_phase = g["phase"] | (g["inter"] < 0) | (g["inter"] == t.n_of)
+        target = jnp.where(route_phase, g["dst"], g["inter"])
+        target = jnp.clip(target, 0, n - 1)
+        at_dest = target == t.n_of
+        locked = state["lock_op"] >= 0
+
+        # receiver free space per (input, port): for adaptive selection
+        if algo == Algo.ODDEVEN:
+            recv_base = (t.neighbor * p + t.recv_port) * v  # (N, P)
+            free_pv = jnp.stack(
+                [b - state["fifo_size"][recv_base + k] for k in range(v)],
+                -1)  # (N, P, V)
+            free_port_total = free_pv.sum(-1)  # (N, P)
+            op_ad, _, _ = oddeven_route(
+                t, t.n_of, g["src"], target, free_port_total[t.n_of])
+            # VC choice: freer VC at the chosen port, must be un-held
+            held = state["out_held"][t.n_of, op_ad] >= 0  # (NIN, V)
+            f = free_pv[t.n_of, op_ad]  # (NIN, V)
+            f = jnp.where(held, -1, f)
+            ov_route = jnp.argmax(f, -1).astype(jnp.int32)
+            op_route = op_ad
+        else:
+            if algo == Algo.XY:
+                eff_order = jnp.zeros(nin, jnp.int32)
+            elif algo == Algo.YX:
+                eff_order = jnp.ones(nin, jnp.int32)
+            elif two_phase:
+                eff_order = jnp.zeros(nin, jnp.int32)
+            else:
+                eff_order = g["order"]
+            op_route = t.port[eff_order, t.n_of, target]
+            if algo in (Algo.XY, Algo.YX):
+                ov_route = t.v_of
+            elif two_phase:
+                ov_route = route_phase.astype(jnp.int32) % v
+            else:
+                ov_route = g["order"] % v
+        op = jnp.where(at_dest, p_local, op_route)
+        ov = jnp.where(at_dest, 0, ov_route)
+        op = jnp.where(locked, state["lock_op"], op)
+        ov = jnp.where(locked, state["lock_ov"], ov)
+
+        # ---------------- 4. eligibility -------------------------------- #
+        is_eject = op == p_local
+        nei = t.neighbor[t.n_of, jnp.clip(op, 0, p - 1)]
+        rp = t.recv_port[t.n_of, jnp.clip(op, 0, p - 1)]
+        recv_idx = (nei * p + rp) * v + ov
+        has_credit = is_eject | (state["fifo_size"][
+            jnp.clip(recv_idx, 0, nin - 1)] < b)
+        vc_free = state["out_held"][t.n_of, jnp.clip(op, 0, p - 1), ov] == -1
+        needs_alloc = g["head"] & ~locked & ~is_eject
+        elig = valid & has_credit & (vc_free | ~needs_alloc)
+
+        # ---------------- 5. switch allocation (round-robin) ------------ #
+        in_local = nin_arange % pv  # input index within its node
+        elig2 = elig.reshape(n, pv)
+        op2 = op.reshape(n, pv)
+        grants = jnp.full((n, p), -1, jnp.int32)
+        for po in range(p):
+            mask = elig2 & (op2 == po)
+            score = (jnp.arange(pv)[None, :] - state["rr"][:, po:po + 1]) % pv
+            score = jnp.where(mask, score, _BIG)
+            win = jnp.argmin(score, 1).astype(jnp.int32)
+            ok = jnp.take_along_axis(score, win[:, None], 1)[:, 0] < _BIG
+            grants = grants.at[:, po].set(jnp.where(ok, win, -1))
+            state["rr"] = state["rr"].at[:, po].set(
+                jnp.where(ok, (win + 1) % pv, state["rr"][:, po]))
+
+        # ---------------- 6. move granted flits ------------------------- #
+        granted = grants >= 0  # (N, P)
+        win_nin = jnp.where(granted,
+                            n_arange[:, None] * pv + grants, nin)  # drop idx
+        win_flat = jnp.clip(win_nin, 0, nin - 1)
+        w = {k: val[win_flat.reshape(-1)].reshape(n, p) for k, val in g.items()}
+        w_op = op[win_flat.reshape(-1)].reshape(n, p)
+        w_ov = ov[win_flat.reshape(-1)].reshape(n, p)
+        w_phase = route_phase[win_flat.reshape(-1)].reshape(n, p)
+        # pops
+        state["fifo_start"] = state["fifo_start"].at[
+            win_nin.reshape(-1)].add(1, mode="drop")
+        state["fifo_start"] = state["fifo_start"] % b
+        state["fifo_size"] = state["fifo_size"].at[
+            win_nin.reshape(-1)].add(-1, mode="drop")
+        # pushes (network ports only)
+        net = granted & (w_op != p_local)
+        dest_nei = t.neighbor[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
+        dest_rp = t.recv_port[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
+        dest_idx = (dest_nei * p + dest_rp) * v + w_ov
+        state = fifo_push(
+            state, dest_idx.reshape(-1), net.reshape(-1), dict(
+                src=w["src"].reshape(-1), dst=w["dst"].reshape(-1),
+                inter=w["inter"].reshape(-1), seq=w["seq"].reshape(-1),
+                time=w["time"].reshape(-1),
+                hops=(w["hops"] + 1).reshape(-1),
+                order=w["order"].reshape(-1),
+                head=w["head"].reshape(-1), tail=w["tail"].reshape(-1),
+                phase=w_phase.reshape(-1)))
+        # locks: set on head (non-tail), clear on tail
+        set_lock = granted & w["head"] & ~w["tail"]
+        clr_lock = granted & w["tail"]
+        li = jnp.where(set_lock | clr_lock, win_nin, nin).reshape(-1)
+        new_op = jnp.where(set_lock, w_op, -1).reshape(-1)
+        new_ov = jnp.where(set_lock, w_ov, -1).reshape(-1)
+        state["lock_op"] = state["lock_op"].at[li].set(new_op, mode="drop")
+        state["lock_ov"] = state["lock_ov"].at[li].set(new_ov, mode="drop")
+        # out_held bookkeeping (network ports only)
+        hold_set = set_lock & net
+        hold_clr = clr_lock & net
+        hn = jnp.where(hold_set | hold_clr, n_arange[:, None], n).reshape(-1)
+        hp = jnp.clip(w_op, 0, p - 1).reshape(-1)
+        hv = jnp.clip(w_ov, 0, v - 1).reshape(-1)
+        holder = jnp.where(hold_set, grants, -1).reshape(-1)
+        state["out_held"] = state["out_held"].at[hn, hp, hv].set(
+            holder, mode="drop")
+
+        # ---------------- 7. statistics --------------------------------- #
+        moved = granted.sum()
+        state["node_fwd"] = state["node_fwd"] + jnp.where(
+            measuring, granted.sum(1), 0)
+        ej = granted & (w_op == p_local)
+        state["eject_total"] += ej.sum()
+        state["eject_flits"] = state["eject_flits"] + jnp.where(
+            measuring, ej.sum(1), 0)
+        # latency at tail ejects, for packets generated after warmup
+        tail_ej = ej & w["tail"]
+        lat = (cycle - w["time"]) + w["hops"] + 1  # +1: eject traversal
+        lat_ok = tail_ej & (w["time"] >= cfg.warmup)
+        state["lat_sum"] += jnp.where(lat_ok, lat, 0).sum()
+        state["lat_cnt"] += lat_ok.sum()
+        state["lat_max"] = jnp.maximum(
+            state["lat_max"], jnp.where(lat_ok, lat, 0).max())
+        # reorder tracking (≤ 1 tail eject per node per cycle: the local port)
+        te = tail_ej.any(1)
+        col = jnp.argmax(tail_ej, 1)
+        src_v = w["src"][n_arange, col]
+        seq_v = w["seq"][n_arange, col]
+        src_safe = jnp.where(te, src_v, 0)
+        exp = state["exp_seq"][n_arange, src_safe]
+        bits = state["rbits"][n_arange, src_safe]
+        off = seq_v - exp
+        in_win = (off >= 0) & (off < 32)
+        off_c = jnp.clip(off, 0, 31).astype(jnp.uint32)
+        bits2 = jnp.where(te & in_win,
+                          bits | (jnp.uint32(1) << off_c),
+                          bits)
+        lowmask = (bits2 & ~(bits2 + 1))  # trailing ones
+        run = _popcount(lowmask)
+        advance = te & ((bits2 & 1) == 1)
+        exp2 = jnp.where(advance, exp + run, exp)
+        run_c = jnp.minimum(run, 31).astype(jnp.uint32)
+        bits3 = jnp.where(advance,
+                          jnp.where(run >= 32, jnp.uint32(0), bits2 >> run_c),
+                          bits2)
+        state["exp_seq"] = state["exp_seq"].at[n_arange, src_safe].set(
+            jnp.where(te, exp2, exp))
+        state["rbits"] = state["rbits"].at[n_arange, src_safe].set(
+            jnp.where(te, bits3, bits))
+        occ = _popcount(state["rbits"]).sum(1) * l
+        state["reorder_max"] = jnp.maximum(
+            state["reorder_max"],
+            jnp.where(measuring, occ.max(), 0).astype(jnp.int32))
+        return state, None
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _get_runner(meta_key: tuple, cfg_key: tuple):
+    """One jit compilation per (mesh size, algo, flow-control params);
+    vmapped over injection rates, shared across traffic patterns."""
+    meta = dict(meta_key)
+    cfg = SimConfig(**dict(cfg_key))
+    step = _make_step(meta, cfg)
+
+    def run(tables, state):
+        state, _ = jax.lax.scan(
+            lambda s, c: step(tables, s, c), state, jnp.arange(cfg.cycles))
+        return state
+
+    return jax.jit(jax.vmap(run, in_axes=(None, 0)))
+
+
+def _cfg_key(cfg: SimConfig) -> tuple:
+    return tuple(sorted(dict(
+        algo=int(cfg.algo), num_vcs=cfg.num_vcs, buf_per_vc=cfg.buf_per_vc,
+        packet_len=cfg.packet_len, src_queue_pkts=cfg.src_queue_pkts,
+        cycles=cfg.cycles, warmup=cfg.warmup, seed=cfg.seed).items()))
+
+
+def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
+              rates: list[float],
+              bidor_table: BiDORTable | None = None) -> list[SimResult]:
+    """Run a batch of simulations over injection rates (vmapped)."""
+    choice = None
+    if cfg.algo == Algo.BIDOR:
+        if bidor_table is None:
+            raise ValueError("BIDOR needs a BiDORTable")
+        choice = bidor_table.choice
+    tables, meta = _build_tables(topo, traffic, choice, cfg.num_vcs)
+    runner = _get_runner(tuple(sorted(meta.items())), _cfg_key(cfg))
+    states = []
+    for i, rate in enumerate(rates):
+        st = _fresh_state(meta, cfg)
+        st["rate"] = jnp.float32(rate)
+        st["key"] = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), i)
+        states.append(st)
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    out = jax.device_get(runner(tables, batched))
+    n = meta["N"]
+    meas_cycles = cfg.cycles - cfg.warmup
+    ports = float(topo.io_weights.sum())
+    results = []
+    for i, rate in enumerate(rates):
+        o = jax.tree.map(lambda x: x[i], out)
+        ejected = int(o["eject_flits"].sum())
+        load = o["node_fwd"].astype(np.float64) / meas_cycles
+        active = load[load > 1e-9]
+        lcv = float(active.std() / active.mean()) if active.size else 0.0
+        lat_cnt = max(int(o["lat_cnt"]), 1)
+        results.append(SimResult(
+            algo=Algo(cfg.algo), injection_rate=float(rate),
+            throughput=ejected / meas_cycles / ports,
+            offered=float(o["offered"]) / meas_cycles / ports,
+            avg_latency=float(o["lat_sum"]) / lat_cnt,
+            max_latency=float(o["lat_max"]),
+            node_load=load, lcv=lcv,
+            reorder_value=int(o["reorder_max"]),
+            ejected_flits=int(o["eject_total"]),
+            injected_flits=int(o["injected"]),
+            in_flight_flits=int(o["fifo_size"].sum()),
+        ))
+    return results
+
+
+def run_sim(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
+            bidor_table: BiDORTable | None = None) -> SimResult:
+    """Run one simulation and post-process statistics."""
+    return run_sweep(topo, traffic, cfg, [cfg.injection_rate],
+                     bidor_table)[0]
+
+
+def run_trace(topo: Topology, segments: list[tuple[np.ndarray, float]],
+              cfg: SimConfig,
+              bidor_table: BiDORTable | None = None):
+    """Trace-driven simulation: piecewise-constant traffic epochs.
+
+    Each segment is (traffic_matrix, injection_rate); the network state
+    (buffers, in-flight packets, reorder bookkeeping) carries across
+    segments.  Used for the paper's realistic-workload evaluation (§4.3),
+    where a leaf-switch port-pair trace is replayed as epochs.  BiDOR's
+    routing table stays fixed (built offline from the aggregate statistics),
+    while adaptive routing reacts per cycle — exactly the paper's contrast.
+
+    Returns (final SimResult over all measured cycles, per-segment LCVs).
+    """
+    choice = None
+    if cfg.algo == Algo.BIDOR:
+        if bidor_table is None:
+            raise ValueError("BIDOR needs a BiDORTable")
+        choice = bidor_table.choice
+    meta = None
+    state = None
+    lcvs = []
+    prev_fwd = None
+    agg = dict(eject=0, lat_sum=0, lat_cnt=0, lat_max=0, reorder=0,
+               injected=0, offered=0)
+    for si, (tm, rate) in enumerate(segments):
+        tables, meta = _build_tables(topo, tm, choice, cfg.num_vcs)
+        runner = _get_runner(tuple(sorted(meta.items())), _cfg_key(cfg))
+        if state is None:
+            state = _fresh_state(meta, cfg)
+            state["key"] = jax.random.fold_in(
+                jax.random.PRNGKey(cfg.seed), si)
+            prev_fwd = np.zeros(meta["N"], np.int64)
+        else:
+            state["cycle0"] = jnp.int32(si * cfg.cycles)
+        state["rate"] = jnp.float32(rate)
+        batched = jax.tree.map(lambda x: jnp.asarray(x)[None], state)
+        out = runner(tables, batched)
+        state = jax.tree.map(lambda x: x[0], out)
+        host = jax.device_get(state)
+        fwd = host["node_fwd"].astype(np.int64)
+        seg = fwd - prev_fwd
+        prev_fwd = fwd
+        active = seg[seg > 0]
+        if active.size:
+            lcvs.append(float(active.std() / active.mean()))
+    meas_cycles = (cfg.cycles - cfg.warmup) + cfg.cycles * (len(segments) - 1)
+    ports = float(topo.io_weights.sum())
+    o = jax.device_get(state)
+    lat_cnt = max(int(o["lat_cnt"]), 1)
+    load = o["node_fwd"].astype(np.float64) / meas_cycles
+    active = load[load > 1e-9]
+    res = SimResult(
+        algo=Algo(cfg.algo), injection_rate=float(np.mean(
+            [r for _, r in segments])),
+        throughput=int(o["eject_flits"].sum()) / meas_cycles / ports,
+        offered=float(o["offered"]) / meas_cycles / ports,
+        avg_latency=float(o["lat_sum"]) / lat_cnt,
+        max_latency=float(o["lat_max"]),
+        node_load=load,
+        lcv=float(active.std() / active.mean()) if active.size else 0.0,
+        reorder_value=int(o["reorder_max"]),
+        ejected_flits=int(o["eject_total"]),
+        injected_flits=int(o["injected"]),
+        in_flight_flits=int(o["fifo_size"].sum()),
+    )
+    return res, lcvs

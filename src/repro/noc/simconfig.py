@@ -1,0 +1,72 @@
+"""Simulator configuration (paper §4.1 defaults)."""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+class Algo(enum.IntEnum):
+    """Routing algorithms evaluated in the paper (§2.1 / §4.1)."""
+
+    XY = 0        # deterministic DOR
+    YX = 1        # deterministic DOR, reverse order
+    O1TURN = 2    # oblivious: random XY/YX per packet [17]
+    VALIANT = 3   # oblivious: random intermediate anywhere [20]
+    ROMM = 4      # oblivious: random intermediate in MinRect [15]
+    ODDEVEN = 5   # adaptive: odd-even turn model [1]
+    BIDOR = 6     # Q-StaR: N-Rank-guided XY/YX choice (this paper)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Cycle-level simulation parameters.
+
+    Defaults mirror the paper's setup (§4.1): input-queued routers, wormhole
+    flits, credit-based flow control, 2 VCs sharing a 64-flit input buffer,
+    and a 2-cycle base hop latency (realized as 1 movement/cycle + 1 extra
+    cycle per hop charged in latency accounting — identical across all
+    algorithms, preserving every relative comparison).
+    """
+
+    algo: Algo = Algo.XY
+    num_vcs: int = 2
+    buf_per_vc: int = 32          # 64-flit input buffer shared by 2 VCs
+    packet_len: int = 4           # flits per packet
+    src_queue_pkts: int = 64      # per-node source queue (open loop)
+    cycles: int = 12_000
+    warmup: int = 4_000
+    injection_rate: float = 0.1   # flits / cycle / I/O port
+    seed: int = 0
+    reorder_window: int = 32      # per-flow sequence tracking window
+
+    def replace(self, **kw) -> "SimConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Post-processed simulation statistics."""
+
+    algo: Algo
+    injection_rate: float
+    throughput: float           # accepted flits / cycle / I/O port
+    offered: float              # offered flits / cycle / I/O port
+    avg_latency: float
+    max_latency: float
+    node_load: np.ndarray       # (N,) forwarding rate per node
+    lcv: float                  # coefficient of variation of node loads
+    reorder_value: int          # max reorder-buffer occupancy (flits)
+    ejected_flits: int
+    injected_flits: int
+    in_flight_flits: int        # conservation check: injected = ejected + in flight
+
+    def summary(self) -> str:
+        return (f"{self.algo.name:8s} rate={self.injection_rate:.3f} "
+                f"thr={self.throughput:.4f} lat={self.avg_latency:.1f} "
+                f"maxlat={self.max_latency:.0f} lcv={self.lcv:.3f} "
+                f"reorder={self.reorder_value}")

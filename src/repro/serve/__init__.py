@@ -1,0 +1,5 @@
+"""Serving substrate: caches, prefill/decode steps, batch engine."""
+
+from repro.serve.engine import ServeEngine, make_prefill, make_serve_step
+
+__all__ = ["ServeEngine", "make_prefill", "make_serve_step"]

@@ -1,0 +1,71 @@
+"""Serving: prefill + decode steps and a simple batched continuous engine.
+
+``make_serve_step``/``make_prefill`` produce the jitted functions the
+dry-run lowers for the ``decode_*``/``prefill_*`` shapes.  ``ServeEngine``
+is the runnable example driver: static batch, greedy sampling, per-slot
+lengths — enough to serve batched requests end-to-end on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.models.common import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig):
+    mod = registry.model_module(cfg)
+
+    def prefill(params, tokens, cache, **kw):
+        return mod.prefill(cfg, params, tokens, cache, **kw)
+
+    return jax.jit(prefill)
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode for the whole batch (the dry-run ``serve_step``)."""
+    mod = registry.model_module(cfg)
+
+    def serve_step(params, tokens, cache, index, **kw):
+        logits, cache = mod.decode_step(cfg, params, tokens, cache, index,
+                                        **kw)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return jax.jit(serve_step)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Greedy batched decoding over a fixed slot batch."""
+
+    cfg: ModelConfig
+    params: object
+    max_len: int
+
+    def __post_init__(self):
+        self._prefill = make_prefill(self.cfg)
+        self._step = make_serve_step(self.cfg)
+
+    def generate(self, prompts: np.ndarray, num_tokens: int,
+                 enc_out=None) -> np.ndarray:
+        """prompts: (B, P) int32 → (B, num_tokens) generated ids."""
+        b, plen = prompts.shape
+        cache = registry.init_cache(self.cfg, b, self.max_len)
+        kw = {"enc_out": enc_out} if self.cfg.family == "encdec" else {}
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, **kw)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        index = plen
+        for _ in range(num_tokens - 1):
+            tok, cache = self._step(self.params, tok, cache,
+                                    jnp.int32(index), **kw)
+            out.append(np.asarray(tok))
+            index += 1
+        return np.concatenate(out, axis=1)

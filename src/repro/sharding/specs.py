@@ -1,0 +1,262 @@
+"""Sharding policies: DP / FSDP / TP / EP / SP as PartitionSpec rules.
+
+Strategy (MaxText-style, adapted per family):
+
+* **DP**: batch over ``("pod", "data")``.
+* **FSDP (ZeRO-3)**: weight matrices additionally sharded over ``data`` on
+  a non-TP dim; XLA SPMD inserts the just-in-time all-gathers.
+* **TP**: head/FFN/expert-hidden dims over ``model``.
+* **EP**: expert dim over ``model`` when ``E % model == 0`` (dbrx, jamba),
+  otherwise per-expert TP (qwen2-moe's 60 experts).
+* **SP**: for ``long_500k`` (batch 1) the KV-cache/sequence dim shards over
+  ``data`` — sequence-parallel decode.
+
+Every rule passes through :func:`fit_spec`, which drops an axis when the
+dim is not divisible by the axis size (e.g. whisper's 51865 vocab), so all
+40 (arch × shape) cells lower without manual exceptions.
+
+Leaves are matched by their *basename* in the params pytree; trailing-dim
+specs are left-padded with ``None`` for stacked-layer leading dims.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+Tree = Any
+
+DATA = ("pod", "data")  # batch axes (pod present only on multi-pod meshes)
+
+
+def _axes_in_mesh(mesh: Mesh, axes):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    present = tuple(a for a in axes if a in mesh.shape)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def fit_spec(mesh: Mesh, shape, spec) -> P:
+    """Drop sharding on dims that don't divide by the axis size; pad the
+    spec with leading Nones to the rank of ``shape``."""
+    spec = tuple(spec)
+    if len(spec) < len(shape):
+        spec = (None,) * (len(shape) - len(spec)) + spec
+    spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+    out = []
+    for dim, axes in zip(shape, spec):
+        axes = _axes_in_mesh(mesh, axes)
+        if axes is None or dim % _axis_size(mesh, axes) != 0:
+            out.append(None)
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------- #
+# parameter rules (by leaf basename; trailing dims)
+# ---------------------------------------------------------------------- #
+def _param_rules(cfg: ModelConfig, mesh: Mesh):
+    ep = (cfg.is_moe
+          and cfg.moe_experts % mesh.shape.get("model", 1) == 0)
+    # KV projections: TP over model only when kv-heads divide the axis —
+    # otherwise replicate KV (standard GQA practice; sharding partial heads
+    # forces per-chunk all-gathers inside the attention loop)
+    kv_tp = cfg.n_kv_heads % mesh.shape.get("model", 1) == 0
+    kv_spec = ("data", "model") if kv_tp else ("data", None)
+    rules: dict[tuple[str, int], tuple] = {
+        # (basename, trailing ndim) -> spec for trailing dims
+        # embed table: vocab dim replicated (gather-friendly), d on FSDP
+        ("table", 2): (None, "data"),
+        ("w", 2): ("model", "data"),            # lm head
+        ("wq", 2): ("data", "model"),
+        ("wk", 2): kv_spec,
+        ("wv", 2): kv_spec,
+        ("wo", 2): ("model", "data"),
+        ("w_gate", 2): ("data", "model"),
+        ("w_up", 2): ("data", "model"),
+        ("w_down", 2): ("model", "data"),
+        ("w_in", 2): ("data", "model"),
+        ("w_out", 2): ("model", "data"),
+        ("b_in", 1): ("model",),
+        ("q_down", 2): ("data", None),
+        ("q_up", 2): (None, "model"),
+        ("kv_down", 2): ("data", None),
+        ("kv_up", 2): (None, "model"),
+        ("in_proj", 2): ("data", "model"),
+        ("x_proj", 2): ("model", None),
+        ("dt_proj", 2): (None, "model"),
+        ("conv_w", 2): (None, "model"),
+        ("conv_b", 1): ("model",),
+        ("dt_bias", 1): ("model",),
+        ("d_skip", 1): ("model",),
+        ("a_log", 2): ("model", None),
+        ("out_proj", 2): ("model", "data"),
+        ("up", 2): ("data", "model"),
+        ("down", 2): ("model", "data"),
+        ("r", 3): (None, None, "model"),
+        ("out", 2): ("model", "data"),
+        ("pos", 2): (None, "data"),
+        # MoE expert tensors (trailing 3 dims: E, in, out)
+        ("w_gate", 3): ("model", "data", None) if ep else (None, "data", "model"),
+        ("w_up", 3): ("model", "data", None) if ep else (None, "data", "model"),
+        ("w_down", 3): ("model", None, "data") if ep else (None, "model", "data"),
+        ("router", 2): (None, None),
+    }
+    if cfg.family == "ssm":
+        # mLSTM: contraction dim of wq/wk/wv matches model-sharded dp acts
+        rules[("wq", 2)] = ("model", None)
+        rules[("wk", 2)] = ("model", None)
+        rules[("wv", 2)] = ("model", None)
+    return rules
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        name = getattr(k, "key", None)
+        if name is not None:
+            return str(name)
+    return ""
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_tree: Tree) -> Tree:
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS)."""
+    rules = _param_rules(cfg, mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        for nd in range(len(shape), 0, -1):
+            if (name, nd) in rules:
+                return fit_spec(mesh, shape, rules[(name, nd)])
+        return P()  # replicate (norm scales, biases, small tensors)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, opt_tree: Tree,
+              pspecs: Tree) -> Tree:
+    """Optimizer-state specs: fp32 moments mirror the params; int8
+    quantized blocks shard their flat block dim over (data×model)."""
+
+    rules = _param_rules(cfg, mesh)
+
+    def spec_for(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if names and names[0] == "step":
+            return P()
+        # int8 codes keep the param shape; scales drop the last-dim blocks.
+        # Both inherit the underlying parameter's rule so updates stay
+        # resharding-free (codes exactly; scale blocks are contiguous
+        # sub-ranges of the param's last-dim shards).
+        lookup = path
+        if names and names[-1] in ("q", "s"):
+            lookup = path[:-1]
+        sub = lookup[1:] if len(lookup) > 1 else lookup
+        name = _leaf_name(sub) or _leaf_name(lookup)
+        for nd in range(len(leaf.shape), 0, -1):
+            if (name, nd) in rules:
+                return fit_spec(mesh, leaf.shape, rules[(name, nd)])
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, opt_tree)
+
+
+# ---------------------------------------------------------------------- #
+# batch / cache rules
+# ---------------------------------------------------------------------- #
+def batch_specs(mesh: Mesh, batch_tree: Tree) -> Tree:
+    """tokens/labels/mask: batch over (pod, data); positions may lead with
+    the (3,) M-RoPE axis."""
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        if name == "positions" and len(shape) == 3:
+            return fit_spec(mesh, shape, (None, DATA, None))
+        if name == "embeds":
+            return fit_spec(mesh, shape, (DATA, None, None))
+        return fit_spec(mesh, shape, (DATA,) + (None,) * (len(shape) - 1))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_tree: Tree,
+                seq_parallel: bool) -> Tree:
+    """KV / recurrent-state cache sharding.
+
+    Default: batch over (pod, data), kv-heads (or head_dim fallback) over
+    model.  ``seq_parallel`` (long_500k, batch 1): sequence dim over data.
+    """
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("k", "v"):          # (L, B, S, KV, HD)
+            if seq_parallel:
+                spec = (None, None, "data", "model", None)
+                s = fit_spec(mesh, shape, spec)
+                if s[3] is None:        # kv not divisible → shard head_dim
+                    s = fit_spec(mesh, shape,
+                                 (None, None, "data", None, "model"))
+                return s
+            s = fit_spec(mesh, shape, (None, DATA, None, "model", None))
+            if s[3] is None:
+                s = fit_spec(mesh, shape, (None, DATA, None, None, "model"))
+            return s
+        if name in ("c_kv", "k_rope"):  # MLA latents (L, B, S, R)
+            if seq_parallel:
+                return fit_spec(mesh, shape, (None, None, "data", None))
+            return fit_spec(mesh, shape, (None, DATA, None, None))
+        if name == "conv":              # (SB, ap-1, B, dc-1, di)
+            return fit_spec(mesh, shape,
+                            (None, None, DATA, None, "model"))
+        if name == "ssm":               # (SB, ap-1, B, di, ds)
+            return fit_spec(mesh, shape,
+                            (None, None, DATA, "model", None))
+        if name == "c" and nd >= 4:     # mLSTM (SB, sp-1, B, H, dh, dh)
+            if seq_parallel:
+                return fit_spec(mesh, shape,
+                                (None, None, None, None, "data", "model"))
+            return fit_spec(mesh, shape,
+                            (None,) * (nd - 4) + (DATA, None, "model", None))
+        if name in ("n", "h", "m") or name == "c":
+            base = (None,) * (nd - 3) + (DATA, None, "model")
+            return fit_spec(mesh, shape, base)
+        return fit_spec(mesh, shape, (None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree: Tree) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_with_sharding(mesh: Mesh, shapes_tree: Tree,
+                           spec_tree: Tree) -> Tree:
+    """ShapeDtypeStructs with NamedShardings attached (dry-run inputs)."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        shapes_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))

@@ -1,0 +1,135 @@
+"""Fault tolerance for 1000+-node operation.
+
+Pieces (all exercised by tests on CPU; the multi-host paths degrade to
+no-ops at world size 1):
+
+* ``resume_or_init`` — auto-restart contract: restore the latest complete
+  checkpoint if one exists, else initialize fresh.  Combined with the
+  atomic-rename writer this gives at-least-once training progress across
+  preemptions.
+* ``PreemptionHandler`` — SIGTERM/SIGINT → finish the in-flight step, write
+  a final checkpoint, exit cleanly (the TPU-pod eviction pattern).
+* ``ElasticMesh`` — recompute the largest usable (data, model) mesh from
+  the currently-live device count and reshard a checkpointed state onto it
+  (lost-host resume).  Model parallel degree is preserved; the data axis
+  shrinks — per-chip batch grows, global batch is preserved by raising
+  gradient accumulation.
+* ``StragglerMonitor`` — EWMA of per-step wall time; flags steps slower
+  than ``threshold ×`` the moving average.  On real pods the flagged hosts
+  are the candidates for ``ElasticMesh`` eviction; here it drives tests and
+  logging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def resume_or_init(mgr: CheckpointManager, like_state):
+    """Restore latest checkpoint into ``like_state``'s structure, or return
+    (like_state, step=0) if none exists."""
+    if mgr.latest_step() is None:
+        return like_state, 0
+    state, step = mgr.restore(like_state)
+    return state, step
+
+
+class PreemptionHandler:
+    """SIGTERM-graceful checkpointing.
+
+    >>> handler = PreemptionHandler()
+    >>> while training:
+    ...     state = train_step(state)
+    ...     if handler.should_stop:
+    ...         mgr.save(step, state); break
+    """
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.should_stop = False
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handle)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _handle(self, signum, frame):
+        self.should_stop = True
+
+    def restore_handlers(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+@dataclasses.dataclass
+class ElasticMesh:
+    """Largest (data, model) mesh for the live device count.
+
+    ``model`` parallel degree is pinned (weights are laid out for it);
+    ``data`` shrinks to what remains — e.g. losing 2 of 16 hosts on a
+    (16, 16) mesh yields (14, 16).
+    """
+
+    model_degree: int
+
+    def build(self, devices=None):
+        devices = devices if devices is not None else jax.devices()
+        n = len(devices)
+        data = n // self.model_degree
+        if data < 1:
+            raise RuntimeError(
+                f"{n} devices cannot sustain model degree "
+                f"{self.model_degree}")
+        use = devices[: data * self.model_degree]
+        mesh_devs = np.array(use).reshape(data, self.model_degree)
+        return jax.sharding.Mesh(mesh_devs, ("data", "model"))
+
+    def grad_accum_for(self, global_batch: int, per_chip_batch: int,
+                       mesh) -> int:
+        """Keep the global batch constant as the data axis shrinks."""
+        data = mesh.shape["data"]
+        per_step = data * per_chip_batch
+        return max(1, -(-global_batch // per_step))
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker with threshold-based flagging."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma = None
+        self.count = 0
+        self.flagged: list[tuple[int, float]] = []
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> bool:
+        """Record one step; returns True if it was a straggler step."""
+        dt = time.monotonic() - self._t0
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = (self.count > self.warmup
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.flagged.append((self.count, dt))
+        else:
+            # stragglers don't poison the moving average
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
++ one train step on CPU, asserting output shapes and finiteness.
+
+The FULL configs are exercised only by the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.models import registry
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        batch["positions"] = jnp.broadcast_to(pos[None], (3, B, S))
+    if cfg.family == "encdec":
+        batch["embeds"] = jax.random.normal(
+            ks[2], (B, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+    return batch
+
+
+def test_all_ten_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_matches_assignment(arch):
+    cfg = get_arch(arch).full
+    assert cfg.n_layers > 0 and cfg.vocab > 1000
+    # every cell of the assignment is representable
+    for shape in get_arch(arch).shapes:
+        assert shape in SHAPES
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    key = jax.random.PRNGKey(0)
+    params = registry.init(cfg, key)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = registry.forward(
+        cfg, params, batch["tokens"],
+        positions=batch.get("positions"), embeds=batch.get("embeds"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    oc = OptConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=10)
+    state = init_train_state(cfg, oc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, oc))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    before = registry.init(cfg, jax.random.PRNGKey(0))
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        state["params"], before)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ["codeqwen1.5-7b", "minicpm3-4b",
+                                  "jamba-1.5-large-398b", "xlstm-1.3b",
+                                  "whisper-base"])
+def test_smoke_decode_step(arch):
+    """One-token decode with the reduced config (serve_step path)."""
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    mod = registry.model_module(cfg)
+    params = registry.init(cfg, jax.random.PRNGKey(0))
+    cache = registry.init_cache(cfg, B, S)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    kw = {}
+    if cfg.family == "encdec":
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.enc_seq, cfg.d_model))
+        kw["enc_out"] = mod.encode(cfg, params, frames)
+    logits, cache2 = mod.decode_step(cfg, params, tok, cache, jnp.int32(3),
+                                     **kw)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache structurally unchanged
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(cache2))

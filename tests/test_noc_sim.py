@@ -1,0 +1,131 @@
+"""Behavioural tests for the flit-level NoC simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import mesh2d, mesh2d_edge_io, traffic, build_plan
+from repro.noc import Algo, SimConfig, run_sim
+from repro.noc.sim import run_sweep, run_trace
+from repro.noc.workload import clos_leaf_trace
+
+TOPO = mesh2d(5, 5)
+UNI = traffic.uniform(TOPO)
+FAST = dict(cycles=2000, warmup=600)
+
+
+def _run(algo, rate=0.15, topo=TOPO, tm=UNI, **kw):
+    cfg = SimConfig(algo=algo, injection_rate=rate, **{**FAST, **kw})
+    table = None
+    if algo == Algo.BIDOR:
+        table = build_plan(topo, tm).table
+    return run_sim(topo, tm, cfg, bidor_table=table)
+
+
+@pytest.mark.parametrize("algo", list(Algo))
+def test_flit_conservation(algo):
+    """Injected flits are either ejected or still buffered — never lost."""
+    r = _run(algo)
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+    assert r.ejected_flits > 0
+
+
+@pytest.mark.parametrize("algo", [Algo.XY, Algo.YX, Algo.BIDOR])
+def test_deterministic_algos_have_zero_reorder(algo):
+    """§3.3.2: quasi-static routing is free from out-of-order transmission."""
+    r = _run(algo, rate=0.3)
+    assert r.reorder_value == 0
+
+
+def test_oblivious_algos_reorder_under_load():
+    r = _run(Algo.O1TURN, rate=0.45)
+    assert r.reorder_value > 0
+
+
+def test_throughput_tracks_offered_below_saturation():
+    for algo in [Algo.XY, Algo.BIDOR, Algo.ODDEVEN]:
+        r = _run(algo, rate=0.2)
+        assert abs(r.throughput - 0.2) < 0.035, (algo, r.throughput)
+
+
+def test_latency_at_least_distance_bound():
+    """Min avg latency ≥ 2·E[dist] (2-cycle hops) at very low load."""
+    r = _run(Algo.XY, rate=0.02)
+    d = TOPO.distances
+    mean_dist = (UNI * d).sum()
+    assert r.avg_latency >= 2 * mean_dist
+    # and not absurdly larger at near-zero load (queueing ≈ serialization)
+    assert r.avg_latency <= 2 * mean_dist + 4 * 4  # + packet serialization
+
+
+def test_throughput_monotone_then_saturates():
+    rs = run_sweep(TOPO, UNI, SimConfig(algo=Algo.XY, **FAST),
+                   [0.05, 0.2, 0.4])
+    thr = [r.throughput for r in rs]
+    assert thr[0] < thr[1] < thr[2]
+
+
+def test_yx_is_transpose_symmetric_to_xy():
+    """YX on uniform traffic ≈ XY (statistically): same mean latency ±10%."""
+    rx = _run(Algo.XY, rate=0.25)
+    ry = _run(Algo.YX, rate=0.25)
+    assert abs(rx.avg_latency - ry.avg_latency) / rx.avg_latency < 0.1
+
+
+def test_valiant_latency_higher_at_low_load():
+    """Valiant doubles path length — visible at low load."""
+    rv = _run(Algo.VALIANT, rate=0.05)
+    rx = _run(Algo.XY, rate=0.05)
+    assert rv.avg_latency > rx.avg_latency * 1.3
+
+
+def test_bidor_zero_table_routes_like_xy():
+    """With all-zero w_NR the BiDOR bitmap degenerates to pure XY."""
+    from repro.core.bidor import bidor
+    tab = bidor(TOPO, np.zeros(25))
+    cfg = SimConfig(algo=Algo.BIDOR, injection_rate=0.15, **FAST)
+    r = run_sim(TOPO, UNI, cfg, bidor_table=tab)
+    assert r.reorder_value == 0
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+
+
+def test_edge_io_only_edge_nodes_inject():
+    topo = mesh2d_edge_io(5, 5)
+    tm = traffic.uniform(topo)
+    r = _run(Algo.XY, rate=0.2, topo=topo, tm=tm)
+    # interior nodes forward but never source/sink traffic; with XY routing
+    # the center column/row still carries transit flits
+    assert r.ejected_flits > 0
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+
+
+def test_oddeven_adaptive_delivers_under_hotspot():
+    tm = traffic.hotspot(TOPO, hot_frac=0.4)
+    r = _run(Algo.ODDEVEN, rate=0.15, tm=tm)
+    assert r.ejected_flits > 0
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+
+
+def test_single_flit_packets():
+    r = _run(Algo.XY, rate=0.2, packet_len=1)
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+    assert r.throughput > 0.15
+
+
+def test_trace_driven_run():
+    topo = mesh2d_edge_io(5, 5)
+    segments, agg = clos_leaf_trace(topo, num_epochs=3, base_rate=0.15)
+    plan = build_plan(topo, agg)
+    cfg = SimConfig(algo=Algo.BIDOR, cycles=1500, warmup=400)
+    res, lcvs = run_trace(topo, segments, cfg, bidor_table=plan.table)
+    assert len(lcvs) == 3
+    assert res.ejected_flits > 0
+    assert res.reorder_value == 0  # quasi-static ⇒ in-order even on traces
+
+
+def test_no_deadlock_at_high_load():
+    """At 2× saturation every algorithm must keep making progress."""
+    for algo in [Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM,
+                 Algo.ODDEVEN, Algo.BIDOR]:
+        r = _run(algo, rate=1.5)
+        # sustained ejection in the measurement window
+        assert r.throughput > 0.1, (algo, r.throughput)

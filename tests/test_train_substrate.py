@@ -1,0 +1,220 @@
+"""Training substrate: optimizer, quantized moments, data determinism,
+checkpointing, fault tolerance."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.fault_tolerance import (
+    ElasticMesh, PreemptionHandler, StragglerMonitor, resume_or_init)
+from repro.train.optimizer import (
+    OptConfig, adamw_update, dequantize_i8, init_opt_state, quantize_i8,
+    schedule)
+
+
+# --------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------- #
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(peak_lr=1e-3, min_lr=1e-4, warmup_steps=10,
+                    decay_steps=100)
+    assert float(schedule(cfg, jnp.int32(0))) == 0.0
+    assert np.isclose(float(schedule(cfg, jnp.int32(10))), 1e-3)
+    assert np.isclose(float(schedule(cfg, jnp.int32(100))), 1e-4, rtol=0.01)
+    assert float(schedule(cfg, jnp.int32(5))) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([(7,), (3, 256), (4, 100), (2, 3, 512)]))
+def test_int8_quantization_roundtrip_error_bound(seed, shape):
+    """Property: |dequant(quant(x)) − x| ≤ blockmax/127 per element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32) * 10)
+    q, s = quantize_i8(x)
+    y = dequantize_i8(q, s, x.shape)
+    assert q.shape == x.shape
+    bound = np.repeat(np.asarray(s).reshape(np.asarray(s).shape),
+                      1).max() / 127 * 1.0001 + 1e-7
+    err = np.abs(np.asarray(y - x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-6
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=0, decay_steps=10_000,
+                    weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(cfg, params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_int8_matches_fp32_roughly():
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (4, 256))}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 256))}
+    outs = {}
+    for md in ("float32", "int8"):
+        cfg = OptConfig(peak_lr=1e-2, warmup_steps=0, weight_decay=0.0,
+                        moment_dtype=md)
+        p, o = dict(params), init_opt_state(cfg, params)
+        for _ in range(5):
+            p, o, _ = adamw_update(cfg, p, grads, o)
+        outs[md] = np.asarray(p["w"])
+    # int8 moments track fp32 closely but not exactly — compare update
+    # direction and magnitude, not elementwise equality
+    diff = np.abs(outs["float32"] - outs["int8"])
+    base = np.abs(outs["float32"] - np.asarray(params["w"])) + 1e-6
+    assert np.median(diff / base) < 0.5
+
+
+def test_grad_clipping_bounds_update():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=0, clip_norm=1.0,
+                    weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    opt = init_opt_state(cfg, params)
+    _, _, m = adamw_update(cfg, params, {"w": jnp.full(3, 1e6)}, opt)
+    assert float(m["grad_norm"]) > 1e5  # reported raw
+
+
+# --------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------- #
+def test_data_deterministic_and_sharded_consistently():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=8, seed=3)
+    d = SyntheticLM(cfg)
+    b1 = d.get_batch(5)
+    b2 = d.get_batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # sharded generation must tile the global batch exactly
+    parts = [d.get_batch(5, shard=i, num_shards=4)["tokens"]
+             for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b1["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    d = SyntheticLM(cfg)
+    b = d.get_batch(0)
+    assert b["tokens"].shape == (2, 8)
+    assert b["labels"].shape == (2, 8)
+    # labels[t] == tokens[t+1] within the same underlying stream
+    b_long = d._tokens(0, np.arange(2))
+    np.testing.assert_array_equal(b["labels"], b_long[:, 1:])
+
+
+def test_data_steps_differ():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=4)
+    d = SyntheticLM(cfg)
+    assert not np.array_equal(d.get_batch(0)["tokens"],
+                              d.get_batch(1)["tokens"])
+
+
+# --------------------------------------------------------------------- #
+# checkpointing + fault tolerance
+# --------------------------------------------------------------------- #
+def _tiny_state(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "b": jnp.zeros(8)},
+            "opt": {"m": jnp.ones((4, 8)), "step": jnp.int32(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _tiny_state()
+    mgr.save(100, state)
+    restored, step = mgr.restore(state)
+    assert step == 100
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = _tiny_state()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.latest_step() == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert "step_00000001" not in dirs and "step_00000004" in dirs
+    assert len([d for d in dirs if d.startswith("step_")]) == 2
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = _tiny_state()
+    mgr.save(5, state, async_=True)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_atomicity_no_partial_visible(tmp_path):
+    """A manifest only appears after the atomic rename."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    assert mgr.latest_step() is None
+    # a stray tmp dir must not be picked up
+    os.makedirs(tmp_path / "step_00000009.tmp0")
+    assert mgr.latest_step() is None
+
+
+def test_resume_or_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    fresh = _tiny_state()
+    state, step = resume_or_init(mgr, fresh)
+    assert step == 0
+    mgr.save(42, state)
+    state2, step2 = resume_or_init(mgr, fresh)
+    assert step2 == 42
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    em = ElasticMesh(model_degree=1)
+    mesh = em.build(jax.devices())  # 1 device → (1, 1)
+    assert mesh.shape["model"] == 1 and mesh.shape["data"] == 1
+    assert em.grad_accum_for(global_batch=64, per_chip_batch=4, mesh=mesh) \
+        == 16
+
+
+def test_elastic_mesh_rejects_insufficient_devices():
+    em = ElasticMesh(model_degree=64)
+    with pytest.raises(RuntimeError):
+        em.build(jax.devices())
+
+
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=2)
+    flags = [mon.observe(0.1) for _ in range(8)]
+    assert not any(flags)
+    assert mon.observe(0.5) is True      # 5× the EWMA
+    assert mon.observe(0.1) is False     # EWMA not poisoned
+    assert len(mon.flagged) == 1
+
+
+def test_preemption_handler():
+    h = PreemptionHandler(signals=())
+    assert h.should_stop is False
+    h._handle(None, None)
+    assert h.should_stop is True
+
+
+def test_checkpoint_restore_onto_new_topology(tmp_path):
+    """Elastic resume: restore with a different target sharding tree
+    (ShapeDtypeStructs carry the new shardings)."""
+    mgr = CheckpointManager(str(tmp_path))
+    state = _tiny_state()
+    mgr.save(9, state)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, step = mgr.restore(like)
+    assert step == 9
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
