@@ -1,51 +1,48 @@
 """Paper Fig. 8: throughput / latency / reorder vs injection rate under
-Uniform, Shuffle, Permutation, Overturn on the edge-I/O 5×5 NoC (§4.1)."""
+Uniform, Shuffle, Permutation, Overturn on the edge-I/O 5×5 NoC (§4.1).
+
+Implemented as ONE declarative campaign: the full
+(pattern × algorithm × rate) grid runs through
+:func:`repro.noc.campaign.run_campaign`; every (rate, seed) point of a
+cell executes inside a single jitted, vmapped call.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import build_plan, mesh2d_edge_io, traffic
-from repro.noc import Algo, SimConfig
-from repro.noc.sim import run_sweep
+from repro.core import mesh2d_edge_io
+from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
 from .common import QUICK, write_csv
 
-PATTERNS = ["uniform", "shuffle", "permutation", "overturn"]
-ALGOS = [Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM, Algo.ODDEVEN,
-         Algo.BIDOR]
+PATTERNS = ("uniform", "shuffle", "permutation", "overturn")
+ALGOS = (Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM, Algo.ODDEVEN,
+         Algo.BIDOR)
 
 
 def main():
     topo = mesh2d_edge_io(5, 5)
-    rates = ([0.2, 0.4, 0.55, 0.7] if QUICK
-             else [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.85, 1.0])
+    rates = ((0.2, 0.4, 0.55, 0.7) if QUICK
+             else (0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.85, 1.0))
     cycles = 6000 if QUICK else 14000
-    rows = []
-    summary = {}
+    spec = CampaignSpec(
+        topo=topo, algos=ALGOS, patterns=PATTERNS, rates=rates,
+        base=SimConfig(cycles=cycles, warmup=cycles // 3),
+        chunk=cycles // 4)
+    res = run_campaign(spec, verbose=True)
     for pattern in PATTERNS:
-        t = traffic.PATTERNS[pattern](topo)
-        plan = build_plan(topo, t)
         for algo in ALGOS:
-            cfg = SimConfig(algo=algo, cycles=cycles, warmup=cycles // 3)
-            rs = run_sweep(topo, t, cfg, rates, bidor_table=plan.table)
-            sat = max(r.throughput for r in rs)
-            summary[(pattern, algo.name)] = sat
-            for r in rs:
-                rows.append([pattern, algo.name, r.injection_rate,
-                             f"{r.throughput:.4f}", f"{r.avg_latency:.1f}",
-                             f"{r.max_latency:.0f}", r.reorder_value,
-                             f"{r.lcv:.3f}"])
+            sat = res.saturation_throughput(algo, pattern)
+            reorder = max(p.result.reorder_value
+                          for p in res.select(algo=algo, pattern=pattern))
             print(f"fig8 {pattern:12s} {algo.name:8s} sat={sat:.4f} "
-                  f"reorder@max={rs[-1].reorder_value}")
+                  f"reorder@max={reorder}")
     for pattern in PATTERNS:
-        xy = summary[(pattern, "XY")]
-        bd = summary[(pattern, "BIDOR")]
+        xy = res.saturation_throughput(Algo.XY, pattern)
+        bd = res.saturation_throughput(Algo.BIDOR, pattern)
         print(f"fig8 SUMMARY {pattern:12s}: BiDOR/XY saturation throughput "
               f"= {bd / xy:.3f} ({(bd / xy - 1) * 100:+.1f}%)")
-    write_csv("fig8_synthetic.csv",
-              ["pattern", "algo", "rate", "throughput", "avg_lat",
-               "max_lat", "reorder", "lcv"], rows)
-    return summary
+    print(res.summary())
+    write_csv("fig8_synthetic.csv", res.CSV_HEADER, res.to_rows())
+    return res
 
 
 if __name__ == "__main__":

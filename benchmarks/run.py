@@ -5,6 +5,7 @@ beyond-paper ICI analyses.
   table1    paper Table 1 — LCV per algorithm × scenario
   fig8      paper Fig. 8  — throughput/latency/reorder vs injection rate
   fig9      paper Fig. 9  — realistic Clos-leaf workload
+  campaign  scaling       — batched campaign vs sequential simulate calls
   linkload  DESIGN §3     — Q-StaR on the TPU ICI fabric
   roofline  deliverable g — per-(arch × shape × mesh) roofline table
   nrank     offline cost  — N-Rank wall time (the quasi-static budget)
@@ -15,10 +16,79 @@ Set BENCH_QUICK=0 for full-length simulations.  Run as
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 
+# Expose CPU cores as XLA devices so batched campaigns shard their lane
+# axis across them (repro.noc.sim.maybe_shard_states).  Must happen before
+# the first jax import; a user-provided device count wins.
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={os.cpu_count()}"
+    ).strip()
+
 import numpy as np
+
+
+def bench_campaign():
+    """Batched-campaign speedup: the SAME 8 (rate, seed) points on a 4×4
+    mesh, once as one jitted vmapped campaign call per algorithm and once
+    as 8 sequential ``run_sim``-style calls.  Compilation is warmed for
+    BOTH paths first, so the ratio is pure execution wall-clock."""
+    from repro.core import build_plan, mesh2d, traffic
+    from repro.noc import (Algo, CampaignSpec, SimConfig, run_campaign)
+    from repro.noc.sim import run_sweep
+    from .common import write_csv
+
+    topo = mesh2d(4, 4)
+    tm = traffic.uniform(topo)
+    rates, seeds = (0.1, 0.25, 0.4, 0.6), (0, 1)
+    cycles = 3000
+    base = SimConfig(cycles=cycles, warmup=cycles // 3, drain=200)
+    plan = build_plan(topo, tm)
+    points = [(r, s) for r in rates for s in seeds]
+    rows = []
+    for algo in (Algo.XY, Algo.BIDOR):
+        cfg = base.replace(algo=algo)
+        table = plan.table if algo == Algo.BIDOR else None
+
+        def sequential():
+            out = []
+            for r, s in points:
+                out.extend(run_sweep(topo, tm, cfg, [r],
+                                     bidor_table=table, seeds=[s]))
+            return out
+
+        spec = CampaignSpec(topo=topo, algos=(algo,),
+                            patterns=(("uniform", tm),), rates=rates,
+                            seeds=seeds, base=base, chunk=0)
+
+        def batched():
+            return run_campaign(
+                spec, bidor_tables={"uniform": plan.table.choice})
+
+        sequential(); batched()          # warm both compile caches
+        t0 = time.time(); seq = sequential(); t_seq = time.time() - t0
+        t0 = time.time(); res = batched(); t_bat = time.time() - t0
+        speedup = t_seq / t_bat
+        # same RNG streams -> identical statistics, batched or not
+        bat = [p.result for p in res.points]
+        match = all(a.injected_flits == b.injected_flits
+                    and a.ejected_flits == b.ejected_flits
+                    for a, b in zip(seq, bat))
+        print(f"campaign {algo.name:6s} {len(points)} (rate,seed) points "
+              f"x {cycles} cycles: sequential {t_seq:.2f}s, "
+              f"one vmapped call {t_bat:.2f}s -> {speedup:.1f}x speedup "
+              f"(stats identical: {match})")
+        rows.append([algo.name, len(points), f"{t_seq:.3f}",
+                     f"{t_bat:.3f}", f"{speedup:.2f}", int(match)])
+        assert match, "batched campaign diverged from sequential runs"
+    write_csv("campaign_speedup.csv",
+              ["algo", "points", "sequential_s", "batched_s", "speedup",
+               "stats_identical"], rows)
 
 
 def bench_nrank():
@@ -41,8 +111,8 @@ def bench_nrank():
     write_csv("nrank_cost.csv", ["topology", "nodes", "ms", "iters"], rows)
 
 
-STAGES = ["fig1", "table1", "fig8", "fig9", "linkload", "roofline",
-          "nrank"]
+STAGES = ["fig1", "table1", "fig8", "fig9", "campaign", "linkload",
+          "roofline", "nrank"]
 
 
 def main() -> None:
@@ -63,6 +133,8 @@ def main() -> None:
         elif name == "fig9":
             from . import fig9_realistic
             fig9_realistic.main()
+        elif name == "campaign":
+            bench_campaign()
         elif name == "linkload":
             from . import linkload
             linkload.main()

@@ -365,6 +365,16 @@ def _called_by_fusion(comps) -> set[str]:
     return fused
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: older
+    releases return a one-element list of per-program dicts, newer ones the
+    dict itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyze_hlo_text(text: str, num_devices: int = 1) -> HloStats:
     comps = parse_hlo(text)
     entry = None

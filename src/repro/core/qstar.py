@@ -69,11 +69,13 @@ def build_plan(topo: Topology, traffic: np.ndarray, *,
                      table=table)
 
 
-def _route_masks(topo: Topology, choice: np.ndarray,
-                 orders: tuple[tuple[int, ...], ...]):
-    """Yield (s, d, node_sequence) for all pairs under per-pair choices."""
-    seqs = [walk_routes(topo, o) for o in orders]  # each (N, N, L+1)
-    return seqs
+def _route_seqs(topo: Topology,
+                orders: tuple[tuple[int, ...], ...]) -> list[np.ndarray]:
+    """Node sequences of every DOR route, one ``(N, N, L+1)`` array per
+    order (L = diameter; routes are padded by repeating the destination).
+    Per-pair order selection is applied by the callers via the BiDOR
+    ``choice`` table."""
+    return [walk_routes(topo, o) for o in orders]
 
 
 def predicted_node_load(topo: Topology, traffic: np.ndarray,
@@ -85,8 +87,7 @@ def predicted_node_load(topo: Topology, traffic: np.ndarray,
     """
     n = topo.num_nodes
     load = np.zeros(n, dtype=np.float64)
-    seqs = _route_masks(topo, table.choice, table.orders)
-    dst = np.broadcast_to(np.arange(n)[None, :], (n, n))
+    seqs = _route_seqs(topo, table.orders)
     t = np.asarray(traffic, dtype=np.float64)
     for oi, seq in enumerate(seqs):
         sel = table.choice == oi  # (N, N)
@@ -112,7 +113,7 @@ def link_load(topo: Topology, traffic: np.ndarray,
     collective ∝ max link load.
     """
     load = np.zeros(topo.num_channels, dtype=np.float64)
-    seqs = _route_masks(topo, table.choice, table.orders)
+    seqs = _route_seqs(topo, table.orders)
     t = np.asarray(traffic, dtype=np.float64)
     n = topo.num_nodes
     chan_lut = np.full((n, n), -1, dtype=np.int64)

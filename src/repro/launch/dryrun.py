@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import hlo
 from repro.analysis.hlo import analyze_hlo_text, roofline_terms
 from repro.configs import SHAPES, get_arch, list_archs
 from repro.launch.mesh import make_production_mesh
@@ -169,7 +170,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str,
         compiled = lowered.compile()
     t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo.xla_cost_analysis(compiled)
     stats = analyze_hlo_text(compiled.as_text(), n_chips)
     rl = roofline_terms(stats, n_chips, meta["model_flops"])
     record = {

@@ -1,6 +1,10 @@
 """Flit-level NoC simulation substrate (the paper's BookSim2 role)."""
 
 from .simconfig import Algo, SimConfig, SimResult
-from .sim import run_sim
+from .sim import run_sim, run_sweep, run_trace, run_trace_sweep
+from .campaign import (CampaignPoint, CampaignResult, CampaignSpec,
+                       run_campaign)
 
-__all__ = ["Algo", "SimConfig", "SimResult", "run_sim"]
+__all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
+           "run_trace", "run_trace_sweep", "CampaignSpec", "CampaignPoint",
+           "CampaignResult", "run_campaign"]

@@ -33,6 +33,16 @@ from .simconfig import Algo, SimConfig, SimResult
 
 _BIG = jnp.int32(1 << 30)
 
+# Packed flit-record layout: one (NIN, BUF, NF) int32 array instead of ten
+# (NIN, BUF) arrays — FIFO pushes/pops become a single scatter/gather with
+# a contiguous NF-word payload (the dominant per-cycle cost on CPU/TPU).
+NF = 10
+(F_SRC, F_DST, F_INTER, F_SEQ, F_TIME,
+ F_HOPS, F_ORDER, F_HEAD, F_TAIL, F_PHASE) = range(NF)
+# Packed source-queue packet records: (N, Q, NQ) int32.
+NQ = 5
+(Q_DST, Q_INTER, Q_ORDER, Q_TIME, Q_SEQ) = range(NQ)
+
 
 class _Tables(NamedTuple):
     """Static (trace-time constant) lookup tables."""
@@ -47,11 +57,13 @@ class _Tables(NamedTuple):
     n_of: jnp.ndarray      # (NIN,) node of each input
     p_of: jnp.ndarray      # (NIN,) port of each input
     v_of: jnp.ndarray      # (NIN,) vc of each input
+    chan_src_n: jnp.ndarray  # (C,) source node of each channel
+    chan_src_p: jnp.ndarray  # (C,) output port of each channel at its source
 
 
-def _build_tables(topo: Topology, traffic: np.ndarray,
-                  bidor_choice: np.ndarray | None,
-                  num_vcs: int) -> tuple[_Tables, dict]:
+def build_tables(topo: Topology, traffic: np.ndarray,
+                 bidor_choice: np.ndarray | None,
+                 num_vcs: int) -> tuple[_Tables, dict]:
     if topo.ndim != 2:
         raise ValueError("the flit simulator supports 2D topologies")
     n, p, v = topo.num_nodes, topo.num_ports, num_vcs
@@ -82,43 +94,48 @@ def _build_tables(topo: Topology, traffic: np.ndarray,
         n_of=jnp.asarray(idx // (p * v)),
         p_of=jnp.asarray((idx // v) % p),
         v_of=jnp.asarray(idx % v),
+        chan_src_n=jnp.asarray(topo.channels[:, 0].astype(np.int32)),
+        chan_src_p=jnp.asarray(topo.channel_port.astype(np.int32)),
     )
     meta = dict(N=n, P=p, V=v, NIN=nin, P_LOCAL=topo.port_local,
-                W=int(topo.dims[0]))
+                W=int(topo.dims[0]), C=topo.num_channels)
     return tables, meta
 
 
-def _fresh_state(meta: dict, cfg: SimConfig):
+def fresh_state(meta: dict, cfg: SimConfig):
+    """Per-run dynamic state — a flat dict of arrays, hence a pytree that
+    can be stacked/vmapped over a leading batch axis (one lane per
+    (rate, seed) campaign point)."""
     n, nin = meta["N"], meta["NIN"]
     b, q = cfg.buf_per_vc, cfg.src_queue_pkts
     i32 = jnp.int32
     z = functools.partial(jnp.zeros, dtype=i32)
     return dict(
-        # per-input-VC FIFOs (struct of arrays)
-        f_src=z((nin, b)), f_dst=z((nin, b)), f_inter=z((nin, b)),
-        f_seq=z((nin, b)), f_time=z((nin, b)), f_hops=z((nin, b)),
-        f_order=z((nin, b)),
-        f_head=jnp.zeros((nin, b), bool), f_tail=jnp.zeros((nin, b), bool),
-        f_phase=jnp.zeros((nin, b), bool),
+        # per-input-VC FIFOs: packed flit records (see NF layout above)
+        flits=z((nin, b, NF)),
         fifo_start=z((nin,)), fifo_size=z((nin,)),
         # wormhole locks
         lock_op=jnp.full((nin,), -1, i32), lock_ov=jnp.full((nin,), -1, i32),
         out_held=jnp.full((n, meta["P"], meta["V"]), -1, i32),
         rr=z((n, meta["P"])),
-        # source queues (packets)
-        q_dst=z((n, q)), q_inter=z((n, q)), q_order=z((n, q)),
-        q_time=z((n, q)), q_seq=z((n, q)),
+        # source queues: packed packet records (see NQ layout above)
+        qpkts=z((n, q, NQ)),
         q_start=z((n,)), q_size=z((n,)), prog=z((n,)),
         next_seq=z((n, n)),
         # destination-side reorder tracking (paper §4.1 'Reorder Value')
         exp_seq=z((n, n)), rbits=jnp.zeros((n, n), jnp.uint32),
         # statistics
-        node_fwd=z((n,)), eject_flits=z((n,)),
+        node_fwd=z((n,)), eject_flits=z((n,)), chan_fwd=z((meta["C"],)),
         lat_sum=z(()), lat_cnt=z(()), lat_max=z(()),
+        lat_hist=z((cfg.lat_bins,)),
         reorder_max=z(()), injected=z(()), offered=z(()), dropped=z(()),
-        eject_total=z(()),
+        eject_total=z(()), meas_cnt=z(()),
         rate=jnp.float32(0.0),
-        cycle0=jnp.int32(0),   # absolute-cycle offset (trace segments)
+        cycle0=jnp.int32(0),   # absolute-cycle offset (chunks / segments)
+        # phase boundaries (dynamic, per run): injection and measurement
+        # stop at these absolute cycles; the tail is the drain phase.
+        inject_until=jnp.int32(cfg.cycles - cfg.drain),
+        measure_until=jnp.int32(cfg.cycles - cfg.drain),
         key=jax.random.PRNGKey(cfg.seed),
     )
 
@@ -139,13 +156,13 @@ def _make_step(meta: dict, cfg: SimConfig):
     nin_arange = jnp.arange(nin)
     two_phase = algo in (Algo.VALIANT, Algo.ROMM)
 
-    def fifo_push(state, idx, ok, fields):
-        """Append one flit to FIFO ``idx`` where ``ok`` (vector batch)."""
+    def fifo_push(state, idx, ok, records):
+        """Append packed flit ``records`` (K, NF) to FIFOs ``idx`` where
+        ``ok`` — ONE scatter with a contiguous NF-word payload."""
         slot = (state["fifo_start"][idx] + state["fifo_size"][idx]) % b
         safe_idx = jnp.where(ok, idx, nin)  # out of range ⇒ dropped
-        for name, val in fields.items():
-            state[f"f_{name}"] = state[f"f_{name}"].at[safe_idx, slot].set(
-                val, mode="drop")
+        state["flits"] = state["flits"].at[safe_idx, slot].set(
+            records, mode="drop")
         state["fifo_size"] = state["fifo_size"].at[safe_idx].add(
             1, mode="drop")
         return state
@@ -205,36 +222,41 @@ def _make_step(meta: dict, cfg: SimConfig):
         cycle = state["cycle0"] + cycle    # absolute cycle across segments
         key, kg, kd, km, kv = jax.random.split(state["key"], 5)
         state["key"] = key
-        measuring = cycle >= cfg.warmup
+        # warmup → measure → drain phasing: statistics only inside the
+        # measurement window, no new packets once the drain phase starts.
+        measuring = (cycle >= cfg.warmup) & (cycle < state["measure_until"])
+        state["meas_cnt"] += measuring.astype(jnp.int32)
 
         # ---------------- 1. packet generation (open loop) -------------- #
         u = jax.random.uniform(kg, (n,))
-        gen = u < (t.p_gen * (state["rate"] / l))
+        gen = (u < (t.p_gen * (state["rate"] / l))) \
+            & (cycle < state["inject_until"])
         ud = jax.random.uniform(kd, (n,))
         dst = jnp.clip((t.cdf <= ud[:, None]).sum(1), 0, n - 1).astype(jnp.int32)
         order, inter = gen_metadata(t, km, n_arange, dst)
         space = state["q_size"] < q
         push = gen & space
         seq = state["next_seq"][n_arange, dst]
-        state["next_seq"] = state["next_seq"].at[n_arange, dst].add(
-            push.astype(jnp.int32))
+        # dense one-hot update: row s bumps column dst[s] (rows distinct)
+        state["next_seq"] = state["next_seq"] + (
+            push[:, None] & (n_arange[None, :] == dst[:, None]))
         slot = (state["q_start"] + state["q_size"]) % q
         row = jnp.where(push, n_arange, n)  # drop when not pushing
-        for name, val in (("q_dst", dst), ("q_inter", inter),
-                          ("q_order", order), ("q_seq", seq),
-                          ("q_time", cycle * jnp.ones(n, jnp.int32))):
-            state[name] = state[name].at[row, slot].set(val, mode="drop")
+        qrec = jnp.stack(
+            [dst, inter, order, jnp.full((n,), cycle, jnp.int32), seq], -1)
+        state["qpkts"] = state["qpkts"].at[row, slot].set(qrec, mode="drop")
         state["q_size"] = state["q_size"] + push
         state["offered"] += jnp.where(measuring, gen.sum(), 0)
         state["dropped"] += jnp.where(measuring, (gen & ~space).sum(), 0)
 
         # ---------------- 2. flit injection (1/cycle/node) -------------- #
         hs = state["q_start"]
-        h_dst = state["q_dst"][n_arange, hs]
-        h_inter = state["q_inter"][n_arange, hs]
-        h_order = state["q_order"][n_arange, hs]
-        h_seq = state["q_seq"][n_arange, hs]
-        h_time = state["q_time"][n_arange, hs]
+        hpkt = state["qpkts"][n_arange, hs]  # (N, NQ)
+        h_dst = hpkt[:, Q_DST]
+        h_inter = hpkt[:, Q_INTER]
+        h_order = hpkt[:, Q_ORDER]
+        h_seq = hpkt[:, Q_SEQ]
+        h_time = hpkt[:, Q_TIME]
         fl_head = state["prog"] == 0
         fl_tail = state["prog"] == l - 1
         phase0 = (h_inter < 0) | (h_inter == n_arange)
@@ -251,10 +273,11 @@ def _make_step(meta: dict, cfg: SimConfig):
             vc_in = jnp.argmin(sizes, 1).astype(jnp.int32)
         lf_idx = (n_arange * p + p_local) * v + vc_in
         can = (state["q_size"] > 0) & (state["fifo_size"][lf_idx] < b)
-        state = fifo_push(state, lf_idx, can, dict(
-            src=n_arange, dst=h_dst, inter=h_inter, seq=h_seq, time=h_time,
-            hops=jnp.zeros(n, jnp.int32), order=h_order,
-            head=fl_head, tail=fl_tail, phase=phase0))
+        inj_rec = jnp.stack(
+            [n_arange, h_dst, h_inter, h_seq, h_time,
+             jnp.zeros(n, jnp.int32), h_order, fl_head.astype(jnp.int32),
+             fl_tail.astype(jnp.int32), phase0.astype(jnp.int32)], -1)
+        state = fifo_push(state, lf_idx, can, inj_rec)
         state["prog"] = jnp.where(can, state["prog"] + 1, state["prog"])
         done = can & (state["prog"] >= l)
         state["prog"] = jnp.where(done, 0, state["prog"])
@@ -264,9 +287,12 @@ def _make_step(meta: dict, cfg: SimConfig):
 
         # ---------------- 3. head-of-line + routing --------------------- #
         st_ = state["fifo_start"]
-        g = {name: state[f"f_{name}"][nin_arange, st_]
-             for name in ("src", "dst", "inter", "seq", "time", "hops",
-                          "order", "head", "tail", "phase")}
+        g_all = state["flits"][nin_arange, st_]  # (NIN, NF) one gather
+        g = dict(src=g_all[:, F_SRC], dst=g_all[:, F_DST],
+                 inter=g_all[:, F_INTER], seq=g_all[:, F_SEQ],
+                 time=g_all[:, F_TIME], hops=g_all[:, F_HOPS],
+                 order=g_all[:, F_ORDER], head=g_all[:, F_HEAD] != 0,
+                 tail=g_all[:, F_TAIL] != 0, phase=g_all[:, F_PHASE] != 0)
         valid = state["fifo_size"] > 0
         route_phase = g["phase"] | (g["inter"] < 0) | (g["inter"] == t.n_of)
         target = jnp.where(route_phase, g["dst"], g["inter"])
@@ -322,88 +348,99 @@ def _make_step(meta: dict, cfg: SimConfig):
         elig = valid & has_credit & (vc_free | ~needs_alloc)
 
         # ---------------- 5. switch allocation (round-robin) ------------ #
+        # all output ports allocated at once: score (N, PV, P), winner per
+        # (node, port) column — ports are independent, so this is exactly
+        # the per-port round-robin pick
         in_local = nin_arange % pv  # input index within its node
         elig2 = elig.reshape(n, pv)
         op2 = op.reshape(n, pv)
-        grants = jnp.full((n, p), -1, jnp.int32)
-        for po in range(p):
-            mask = elig2 & (op2 == po)
-            score = (jnp.arange(pv)[None, :] - state["rr"][:, po:po + 1]) % pv
-            score = jnp.where(mask, score, _BIG)
-            win = jnp.argmin(score, 1).astype(jnp.int32)
-            ok = jnp.take_along_axis(score, win[:, None], 1)[:, 0] < _BIG
-            grants = grants.at[:, po].set(jnp.where(ok, win, -1))
-            state["rr"] = state["rr"].at[:, po].set(
-                jnp.where(ok, (win + 1) % pv, state["rr"][:, po]))
+        mask_po = elig2[:, :, None] & (op2[:, :, None]
+                                       == jnp.arange(p)[None, None, :])
+        score = (jnp.arange(pv)[None, :, None]
+                 - state["rr"][:, None, :]) % pv
+        score = jnp.where(mask_po, score, _BIG)
+        win = jnp.argmin(score, 1).astype(jnp.int32)      # (N, P)
+        ok = score.min(1) < _BIG
+        grants = jnp.where(ok, win, -1)
+        state["rr"] = jnp.where(ok, (win + 1) % pv, state["rr"])
 
         # ---------------- 6. move granted flits ------------------------- #
         granted = grants >= 0  # (N, P)
+        # input-centric pop flag: input i moved iff it won its output port
+        popped = elig & (grants[t.n_of, jnp.clip(op, 0, p - 1)] == in_local)
         win_nin = jnp.where(granted,
                             n_arange[:, None] * pv + grants, nin)  # drop idx
-        win_flat = jnp.clip(win_nin, 0, nin - 1)
-        w = {k: val[win_flat.reshape(-1)].reshape(n, p) for k, val in g.items()}
-        w_op = op[win_flat.reshape(-1)].reshape(n, p)
-        w_ov = ov[win_flat.reshape(-1)].reshape(n, p)
-        w_phase = route_phase[win_flat.reshape(-1)].reshape(n, p)
-        # pops
-        state["fifo_start"] = state["fifo_start"].at[
-            win_nin.reshape(-1)].add(1, mode="drop")
-        state["fifo_start"] = state["fifo_start"] % b
-        state["fifo_size"] = state["fifo_size"].at[
-            win_nin.reshape(-1)].add(-1, mode="drop")
-        # pushes (network ports only)
+        win_flat = jnp.clip(win_nin, 0, nin - 1).reshape(-1)
+        # winner records + routing decision, ONE gather of NF+3 words
+        g_ext = jnp.concatenate(
+            [g_all, op[:, None], ov[:, None],
+             route_phase.astype(jnp.int32)[:, None]], -1)
+        w_ext = g_ext[win_flat].reshape(n, p, NF + 3)
+        w_all = w_ext[..., :NF]
+        w_op = w_ext[..., NF]
+        w_ov = w_ext[..., NF + 1]
+        w_phase = w_ext[..., NF + 2]
+        w = dict(head=w_all[..., F_HEAD] != 0, tail=w_all[..., F_TAIL] != 0)
+        # pops (elementwise — ``popped`` marks at most one flit per input)
+        state["fifo_start"] = jnp.where(popped, (st_ + 1) % b, st_)
+        state["fifo_size"] = state["fifo_size"] - popped
+        # pushes (network ports only): one packed scatter
         net = granted & (w_op != p_local)
         dest_nei = t.neighbor[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
         dest_rp = t.recv_port[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
         dest_idx = (dest_nei * p + dest_rp) * v + w_ov
-        state = fifo_push(
-            state, dest_idx.reshape(-1), net.reshape(-1), dict(
-                src=w["src"].reshape(-1), dst=w["dst"].reshape(-1),
-                inter=w["inter"].reshape(-1), seq=w["seq"].reshape(-1),
-                time=w["time"].reshape(-1),
-                hops=(w["hops"] + 1).reshape(-1),
-                order=w["order"].reshape(-1),
-                head=w["head"].reshape(-1), tail=w["tail"].reshape(-1),
-                phase=w_phase.reshape(-1)))
-        # locks: set on head (non-tail), clear on tail
-        set_lock = granted & w["head"] & ~w["tail"]
-        clr_lock = granted & w["tail"]
-        li = jnp.where(set_lock | clr_lock, win_nin, nin).reshape(-1)
-        new_op = jnp.where(set_lock, w_op, -1).reshape(-1)
-        new_ov = jnp.where(set_lock, w_ov, -1).reshape(-1)
-        state["lock_op"] = state["lock_op"].at[li].set(new_op, mode="drop")
-        state["lock_ov"] = state["lock_ov"].at[li].set(new_ov, mode="drop")
-        # out_held bookkeeping (network ports only)
-        hold_set = set_lock & net
-        hold_clr = clr_lock & net
-        hn = jnp.where(hold_set | hold_clr, n_arange[:, None], n).reshape(-1)
-        hp = jnp.clip(w_op, 0, p - 1).reshape(-1)
-        hv = jnp.clip(w_ov, 0, v - 1).reshape(-1)
-        holder = jnp.where(hold_set, grants, -1).reshape(-1)
-        state["out_held"] = state["out_held"].at[hn, hp, hv].set(
-            holder, mode="drop")
+        push_rec = w_all.at[..., F_HOPS].add(1)
+        push_rec = push_rec.at[..., F_PHASE].set(w_phase.astype(jnp.int32))
+        state = fifo_push(state, dest_idx.reshape(-1), net.reshape(-1),
+                          push_rec.reshape(-1, NF))
+        # wormhole locks (elementwise): set on head (non-tail), clear on tail
+        set_lock_i = popped & g["head"] & ~g["tail"]
+        clr_lock_i = popped & g["tail"]
+        state["lock_op"] = jnp.where(
+            set_lock_i, op, jnp.where(clr_lock_i, -1, state["lock_op"]))
+        state["lock_ov"] = jnp.where(
+            set_lock_i, ov, jnp.where(clr_lock_i, -1, state["lock_ov"]))
+        # out_held bookkeeping (elementwise over (N, P, V); net ports only)
+        hold_set = granted & w["head"] & ~w["tail"] & net
+        hold_clr = granted & w["tail"] & net
+        vmask = ((hold_set | hold_clr)[..., None]
+                 & (jnp.arange(v)[None, None, :] == w_ov[..., None]))
+        hold_val = jnp.where(hold_set, grants, -1)
+        state["out_held"] = jnp.where(vmask, hold_val[..., None],
+                                      state["out_held"])
 
         # ---------------- 7. statistics --------------------------------- #
-        moved = granted.sum()
         state["node_fwd"] = state["node_fwd"] + jnp.where(
             measuring, granted.sum(1), 0)
-        ej = granted & (w_op == p_local)
-        state["eject_total"] += ej.sum()
+        # per-channel forwarded flits (link loads / max-link-load roofline):
+        # channel c moved a flit iff its source (node, port) granted a
+        # network move — a gather at compile-time-constant indices
+        state["chan_fwd"] = state["chan_fwd"] + (
+            net & measuring)[t.chan_src_n, t.chan_src_p]
+        # ejects only ever leave through the local output port, so all
+        # eject/latency/reorder statistics live on its (N,) column
+        ej_n = granted[:, p_local]
+        wl = w_ext[:, p_local, :]  # (N, NF+3) local-port winner records
+        state["eject_total"] += ej_n.sum()
         state["eject_flits"] = state["eject_flits"] + jnp.where(
-            measuring, ej.sum(1), 0)
-        # latency at tail ejects, for packets generated after warmup
-        tail_ej = ej & w["tail"]
-        lat = (cycle - w["time"]) + w["hops"] + 1  # +1: eject traversal
-        lat_ok = tail_ej & (w["time"] >= cfg.warmup)
+            measuring, ej_n, 0)
+        # latency at tail ejects, for packets generated in the measurement
+        # window (drain-phase landings of measured packets still count)
+        tail_ej = ej_n & (wl[:, F_TAIL] != 0)
+        lat = (cycle - wl[:, F_TIME]) + wl[:, F_HOPS] + 1  # +1: eject hop
+        lat_ok = tail_ej & (wl[:, F_TIME] >= cfg.warmup)
         state["lat_sum"] += jnp.where(lat_ok, lat, 0).sum()
         state["lat_cnt"] += lat_ok.sum()
         state["lat_max"] = jnp.maximum(
             state["lat_max"], jnp.where(lat_ok, lat, 0).max())
+        # latency histogram (percentiles); last bin is the overflow bucket
+        hbin = jnp.minimum(lat // cfg.lat_bin_width, cfg.lat_bins - 1)
+        state["lat_hist"] = state["lat_hist"].at[
+            jnp.where(lat_ok, hbin, cfg.lat_bins)].add(1, mode="drop")
         # reorder tracking (≤ 1 tail eject per node per cycle: the local port)
-        te = tail_ej.any(1)
-        col = jnp.argmax(tail_ej, 1)
-        src_v = w["src"][n_arange, col]
-        seq_v = w["seq"][n_arange, col]
+        te = tail_ej
+        src_v = wl[:, F_SRC]
+        seq_v = wl[:, F_SEQ]
         src_safe = jnp.where(te, src_v, 0)
         exp = state["exp_seq"][n_arange, src_safe]
         bits = state["rbits"][n_arange, src_safe]
@@ -421,10 +458,10 @@ def _make_step(meta: dict, cfg: SimConfig):
         bits3 = jnp.where(advance,
                           jnp.where(run >= 32, jnp.uint32(0), bits2 >> run_c),
                           bits2)
-        state["exp_seq"] = state["exp_seq"].at[n_arange, src_safe].set(
-            jnp.where(te, exp2, exp))
-        state["rbits"] = state["rbits"].at[n_arange, src_safe].set(
-            jnp.where(te, bits3, bits))
+        src_oh = te[:, None] & (n_arange[None, :] == src_safe[:, None])
+        state["exp_seq"] = jnp.where(src_oh, exp2[:, None],
+                                     state["exp_seq"])
+        state["rbits"] = jnp.where(src_oh, bits3[:, None], state["rbits"])
         occ = _popcount(state["rbits"]).sum(1) * l
         state["reorder_max"] = jnp.maximum(
             state["reorder_max"],
@@ -435,71 +472,153 @@ def _make_step(meta: dict, cfg: SimConfig):
 
 
 @functools.lru_cache(maxsize=None)
-def _get_runner(meta_key: tuple, cfg_key: tuple):
-    """One jit compilation per (mesh size, algo, flow-control params);
-    vmapped over injection rates, shared across traffic patterns."""
+def _get_runner(meta_key: tuple, cfg_key: tuple, num_cycles: int):
+    """One jit compilation per (mesh size, algo, flow-control params,
+    cycle-chunk length); vmapped over batched per-run states — the batch
+    axis carries (injection-rate, seed) campaign points — and shared
+    across traffic patterns (tables are traced arguments)."""
     meta = dict(meta_key)
     cfg = SimConfig(**dict(cfg_key))
     step = _make_step(meta, cfg)
 
     def run(tables, state):
         state, _ = jax.lax.scan(
-            lambda s, c: step(tables, s, c), state, jnp.arange(cfg.cycles))
+            lambda s, c: step(tables, s, c), state, jnp.arange(num_cycles))
+        state["cycle0"] = state["cycle0"] + num_cycles
         return state
 
     return jax.jit(jax.vmap(run, in_axes=(None, 0)))
 
 
 def _cfg_key(cfg: SimConfig) -> tuple:
+    """Compile-relevant SimConfig fields (rate and seed are dynamic)."""
     return tuple(sorted(dict(
         algo=int(cfg.algo), num_vcs=cfg.num_vcs, buf_per_vc=cfg.buf_per_vc,
         packet_len=cfg.packet_len, src_queue_pkts=cfg.src_queue_pkts,
-        cycles=cfg.cycles, warmup=cfg.warmup, seed=cfg.seed).items()))
+        cycles=cfg.cycles, warmup=cfg.warmup, drain=cfg.drain,
+        lat_bins=cfg.lat_bins, lat_bin_width=cfg.lat_bin_width).items()))
+
+
+def get_runner(meta: dict, cfg: SimConfig, num_cycles: int):
+    """Public cached-runner accessor (used by :mod:`repro.noc.campaign`)."""
+    return _get_runner(tuple(sorted(meta.items())), _cfg_key(cfg),
+                       int(num_cycles))
+
+
+def hist_percentile(hist: np.ndarray, bin_width: int, q: float) -> float:
+    """q-quantile (0 < q < 1) from a fixed-width latency histogram, with
+    linear interpolation inside the bin.  The last bin is an overflow
+    bucket, so quantiles landing there are lower bounds."""
+    hist = np.asarray(hist, dtype=np.float64)
+    total = hist.sum()
+    if total <= 0:
+        return 0.0
+    target = q * total
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, target))
+    before = cum[b - 1] if b > 0 else 0.0
+    frac = (target - before) / max(hist[b], 1.0)
+    return float((b + frac) * bin_width)
+
+
+def postprocess(o: dict, cfg: SimConfig, topo: Topology, *,
+                rate: float, seed: int, saturated: bool = False,
+                meas_cycles: int | None = None) -> SimResult:
+    """Turn one run's device state (already on host) into a SimResult."""
+    meas = int(o["meas_cnt"]) if meas_cycles is None else int(meas_cycles)
+    meas = max(meas, 1)
+    ports = float(topo.io_weights.sum())
+    load = o["node_fwd"].astype(np.float64) / meas
+    active = load[load > 1e-9]
+    lat_cnt = max(int(o["lat_cnt"]), 1)
+    link = o["chan_fwd"].astype(np.float64) / meas / topo.channel_bw
+    hist = o["lat_hist"]
+    return SimResult(
+        algo=Algo(cfg.algo), injection_rate=float(rate),
+        throughput=int(o["eject_flits"].sum()) / meas / ports,
+        offered=float(o["offered"]) / meas / ports,
+        avg_latency=float(o["lat_sum"]) / lat_cnt,
+        max_latency=float(o["lat_max"]),
+        node_load=load,
+        lcv=float(active.std() / active.mean()) if active.size else 0.0,
+        reorder_value=int(o["reorder_max"]),
+        ejected_flits=int(o["eject_total"]),
+        injected_flits=int(o["injected"]),
+        in_flight_flits=int(o["fifo_size"].sum()),
+        seed=int(seed),
+        meas_cycles=meas,
+        saturated=bool(saturated),
+        p50_latency=hist_percentile(hist, cfg.lat_bin_width, 0.50),
+        p90_latency=hist_percentile(hist, cfg.lat_bin_width, 0.90),
+        p99_latency=hist_percentile(hist, cfg.lat_bin_width, 0.99),
+        link_load_max=float(link.max()) if link.size else 0.0,
+    )
+
+
+def point_key(seed: int, rate: float) -> jnp.ndarray:
+    """PRNG stream of a (rate, seed) campaign point: a pure function of
+    the point itself (the float32 bit pattern of the rate is folded in),
+    so a point gets the identical stream whether it runs alone, inside a
+    sweep, or as any lane of a batched campaign."""
+    rate_bits = int(np.float32(rate).view(np.uint32))
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rate_bits)
+
+
+def make_states(meta: dict, cfg: SimConfig,
+                points: list[tuple[float, int]]):
+    """Batched fresh state for a list of (rate, seed) points."""
+    states = []
+    for rate, seed in points:
+        st = fresh_state(meta, cfg)
+        st["rate"] = jnp.float32(rate)
+        st["key"] = point_key(seed, rate)
+        states.append(st)
+    return maybe_shard_states(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *states))
+
+
+def maybe_shard_states(batched):
+    """Shard the lane (batch) axis across local devices when possible.
+
+    Lanes are fully independent, so SPMD partitioning of the leading axis
+    is exact: results are bit-identical to the unsharded run, each device
+    just executes its slice of lanes in parallel.  No-op on a single
+    device or when the batch does not divide evenly.  On CPU, expose
+    cores as devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    the first jax import), as ``benchmarks/run.py`` does.
+    """
+    ndev = jax.device_count()
+    nb = jax.tree.leaves(batched)[0].shape[0]
+    if ndev <= 1 or nb % ndev:
+        return batched
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mesh = Mesh(np.array(jax.devices()), ("lane",))
+    spec = NamedSharding(mesh, PartitionSpec("lane"))
+    return jax.tree.map(lambda x: jax.device_put(x, spec), batched)
 
 
 def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
               rates: list[float],
-              bidor_table: BiDORTable | None = None) -> list[SimResult]:
-    """Run a batch of simulations over injection rates (vmapped)."""
+              bidor_table: BiDORTable | None = None,
+              seeds: list[int] | None = None) -> list[SimResult]:
+    """Run a batch of simulations over (rate, seed) points in ONE jitted,
+    vmapped call.  Results are ordered rate-major: ``[(r, s) for r in
+    rates for s in seeds]``; with ``seeds=None`` (default ``[cfg.seed]``)
+    this is the legacy one-result-per-rate list."""
     choice = None
     if cfg.algo == Algo.BIDOR:
         if bidor_table is None:
             raise ValueError("BIDOR needs a BiDORTable")
         choice = bidor_table.choice
-    tables, meta = _build_tables(topo, traffic, choice, cfg.num_vcs)
-    runner = _get_runner(tuple(sorted(meta.items())), _cfg_key(cfg))
-    states = []
-    for i, rate in enumerate(rates):
-        st = _fresh_state(meta, cfg)
-        st["rate"] = jnp.float32(rate)
-        st["key"] = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), i)
-        states.append(st)
-    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    tables, meta = build_tables(topo, traffic, choice, cfg.num_vcs)
+    runner = get_runner(meta, cfg, cfg.cycles)
+    points = [(r, s) for r in rates for s in (seeds or [cfg.seed])]
+    batched = make_states(meta, cfg, points)
     out = jax.device_get(runner(tables, batched))
-    n = meta["N"]
-    meas_cycles = cfg.cycles - cfg.warmup
-    ports = float(topo.io_weights.sum())
-    results = []
-    for i, rate in enumerate(rates):
-        o = jax.tree.map(lambda x: x[i], out)
-        ejected = int(o["eject_flits"].sum())
-        load = o["node_fwd"].astype(np.float64) / meas_cycles
-        active = load[load > 1e-9]
-        lcv = float(active.std() / active.mean()) if active.size else 0.0
-        lat_cnt = max(int(o["lat_cnt"]), 1)
-        results.append(SimResult(
-            algo=Algo(cfg.algo), injection_rate=float(rate),
-            throughput=ejected / meas_cycles / ports,
-            offered=float(o["offered"]) / meas_cycles / ports,
-            avg_latency=float(o["lat_sum"]) / lat_cnt,
-            max_latency=float(o["lat_max"]),
-            node_load=load, lcv=lcv,
-            reorder_value=int(o["reorder_max"]),
-            ejected_flits=int(o["eject_total"]),
-            injected_flits=int(o["injected"]),
-            in_flight_flits=int(o["fifo_size"].sum()),
-        ))
-    return results
+    return [postprocess(jax.tree.map(lambda x: x[i], out), cfg, topo,
+                        rate=r, seed=s)
+            for i, (r, s) in enumerate(points)]
 
 
 def run_sim(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
@@ -509,10 +628,13 @@ def run_sim(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                      bidor_table)[0]
 
 
-def run_trace(topo: Topology, segments: list[tuple[np.ndarray, float]],
-              cfg: SimConfig,
-              bidor_table: BiDORTable | None = None):
-    """Trace-driven simulation: piecewise-constant traffic epochs.
+def run_trace_sweep(topo: Topology,
+                    segments: list[tuple[np.ndarray, float]],
+                    cfg: SimConfig,
+                    bidor_table: BiDORTable | None = None,
+                    seeds: list[int] | None = None):
+    """Trace-driven simulation: piecewise-constant traffic epochs, batched
+    (vmapped) over seeds.
 
     Each segment is (traffic_matrix, injection_rate); the network state
     (buffers, in-flight packets, reorder bookkeeping) carries across
@@ -521,58 +643,54 @@ def run_trace(topo: Topology, segments: list[tuple[np.ndarray, float]],
     routing table stays fixed (built offline from the aggregate statistics),
     while adaptive routing reacts per cycle — exactly the paper's contrast.
 
-    Returns (final SimResult over all measured cycles, per-segment LCVs).
+    Returns a list over seeds of (SimResult over all measured cycles,
+    per-segment LCVs).
     """
     choice = None
     if cfg.algo == Algo.BIDOR:
         if bidor_table is None:
             raise ValueError("BIDOR needs a BiDORTable")
         choice = bidor_table.choice
-    meta = None
-    state = None
-    lcvs = []
+    seeds = list(seeds or [cfg.seed])
+    nb = len(seeds)
+    batched = None
+    lcvs: list[list[float]] = [[] for _ in seeds]
     prev_fwd = None
-    agg = dict(eject=0, lat_sum=0, lat_cnt=0, lat_max=0, reorder=0,
-               injected=0, offered=0)
     for si, (tm, rate) in enumerate(segments):
-        tables, meta = _build_tables(topo, tm, choice, cfg.num_vcs)
-        runner = _get_runner(tuple(sorted(meta.items())), _cfg_key(cfg))
-        if state is None:
-            state = _fresh_state(meta, cfg)
-            state["key"] = jax.random.fold_in(
-                jax.random.PRNGKey(cfg.seed), si)
-            prev_fwd = np.zeros(meta["N"], np.int64)
-        else:
-            state["cycle0"] = jnp.int32(si * cfg.cycles)
-        state["rate"] = jnp.float32(rate)
-        batched = jax.tree.map(lambda x: jnp.asarray(x)[None], state)
-        out = runner(tables, batched)
-        state = jax.tree.map(lambda x: x[0], out)
-        host = jax.device_get(state)
-        fwd = host["node_fwd"].astype(np.int64)
+        tables, meta = build_tables(topo, tm, choice, cfg.num_vcs)
+        runner = get_runner(meta, cfg, cfg.cycles)
+        if batched is None:
+            states = []
+            for seed in seeds:
+                st = fresh_state(meta, cfg)
+                st["key"] = jax.random.fold_in(
+                    jax.random.PRNGKey(seed), si)
+                # traces run open-ended: every segment injects and
+                # measures for its full cfg.cycles window
+                st["inject_until"] = _BIG
+                st["measure_until"] = _BIG
+                states.append(st)
+            batched = maybe_shard_states(
+                jax.tree.map(lambda *xs: jnp.stack(xs), *states))
+            prev_fwd = np.zeros((nb, meta["N"]), np.int64)
+        batched["rate"] = jnp.full((nb,), rate, jnp.float32)
+        batched = runner(tables, batched)
+        fwd = np.asarray(jax.device_get(batched["node_fwd"]), np.int64)
         seg = fwd - prev_fwd
         prev_fwd = fwd
-        active = seg[seg > 0]
-        if active.size:
-            lcvs.append(float(active.std() / active.mean()))
-    meas_cycles = (cfg.cycles - cfg.warmup) + cfg.cycles * (len(segments) - 1)
-    ports = float(topo.io_weights.sum())
-    o = jax.device_get(state)
-    lat_cnt = max(int(o["lat_cnt"]), 1)
-    load = o["node_fwd"].astype(np.float64) / meas_cycles
-    active = load[load > 1e-9]
-    res = SimResult(
-        algo=Algo(cfg.algo), injection_rate=float(np.mean(
-            [r for _, r in segments])),
-        throughput=int(o["eject_flits"].sum()) / meas_cycles / ports,
-        offered=float(o["offered"]) / meas_cycles / ports,
-        avg_latency=float(o["lat_sum"]) / lat_cnt,
-        max_latency=float(o["lat_max"]),
-        node_load=load,
-        lcv=float(active.std() / active.mean()) if active.size else 0.0,
-        reorder_value=int(o["reorder_max"]),
-        ejected_flits=int(o["eject_total"]),
-        injected_flits=int(o["injected"]),
-        in_flight_flits=int(o["fifo_size"].sum()),
-    )
-    return res, lcvs
+        for bi in range(nb):
+            active = seg[bi][seg[bi] > 0]
+            if active.size:
+                lcvs[bi].append(float(active.std() / active.mean()))
+    out = jax.device_get(batched)
+    mean_rate = float(np.mean([r for _, r in segments]))
+    return [(postprocess(jax.tree.map(lambda x: x[bi], out), cfg, topo,
+                         rate=mean_rate, seed=seeds[bi]), lcvs[bi])
+            for bi in range(nb)]
+
+
+def run_trace(topo: Topology, segments: list[tuple[np.ndarray, float]],
+              cfg: SimConfig,
+              bidor_table: BiDORTable | None = None):
+    """Single-seed :func:`run_trace_sweep` — returns (SimResult, lcvs)."""
+    return run_trace_sweep(topo, segments, cfg, bidor_table)[0]

@@ -40,9 +40,23 @@ class SimConfig:
     src_queue_pkts: int = 64      # per-node source queue (open loop)
     cycles: int = 12_000
     warmup: int = 4_000
+    drain: int = 0                # trailing cycles with injection halted
     injection_rate: float = 0.1   # flits / cycle / I/O port
     seed: int = 0
     reorder_window: int = 32      # per-flow sequence tracking window
+    lat_bins: int = 96            # latency histogram bins (percentiles)
+    lat_bin_width: int = 8        # cycles per histogram bin; last = overflow
+
+    def __post_init__(self):
+        if self.warmup + self.drain >= self.cycles:
+            raise ValueError(
+                f"warmup ({self.warmup}) + drain ({self.drain}) leaves no "
+                f"measurement window inside cycles ({self.cycles})")
+
+    @property
+    def measure(self) -> int:
+        """Length of the measurement window (cycles)."""
+        return self.cycles - self.warmup - self.drain
 
     def replace(self, **kw) -> "SimConfig":
         return dataclasses.replace(self, **kw)
@@ -64,9 +78,17 @@ class SimResult:
     ejected_flits: int
     injected_flits: int
     in_flight_flits: int        # conservation check: injected = ejected + in flight
+    seed: int = 0
+    meas_cycles: int = 0        # cycles actually measured (early exit aware)
+    saturated: bool = False     # campaign saturation detector verdict
+    p50_latency: float = 0.0    # histogram-derived percentiles
+    p90_latency: float = 0.0
+    p99_latency: float = 0.0
+    link_load_max: float = 0.0  # max per-channel load / bandwidth
 
     def summary(self) -> str:
+        sat = " SAT" if self.saturated else ""
         return (f"{self.algo.name:8s} rate={self.injection_rate:.3f} "
                 f"thr={self.throughput:.4f} lat={self.avg_latency:.1f} "
-                f"maxlat={self.max_latency:.0f} lcv={self.lcv:.3f} "
-                f"reorder={self.reorder_value}")
+                f"p99={self.p99_latency:.0f} maxlat={self.max_latency:.0f} "
+                f"lcv={self.lcv:.3f} reorder={self.reorder_value}{sat}")

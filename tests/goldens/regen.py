@@ -1,0 +1,78 @@
+"""Regenerate the golden campaign fixtures.
+
+Usage:  PYTHONPATH=src python tests/goldens/regen.py
+
+Writes ``campaign_4x4.json`` next to this file.  Run this ONLY when a
+simulator change intentionally alters behaviour, and say so in the commit
+message — the golden test exists to make unintended changes loud.
+
+The fixture pins integer flit counts exactly (they are deterministic
+functions of the per-point PRNG stream) and float statistics to 6
+significant digits.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "campaign_4x4.json")
+
+
+def golden_spec():
+    from repro.core import mesh2d
+    from repro.noc import Algo, CampaignSpec, SimConfig
+
+    return CampaignSpec(
+        topo=mesh2d(4, 4),
+        algos=(Algo.XY, Algo.BIDOR),
+        patterns=("uniform", "tornado"),
+        rates=(0.15, 0.5),
+        seeds=(0, 1),
+        base=SimConfig(cycles=1000, warmup=300, drain=100),
+    )
+
+
+def compute_goldens() -> dict:
+    from repro.noc import run_campaign
+
+    res = run_campaign(golden_spec())
+    points = {}
+    for p in res.points:
+        r = p.result
+        key = f"{p.pattern}/{p.algo.name}/r{p.rate}/s{p.seed}"
+        points[key] = {
+            "injected": r.injected_flits,
+            "ejected": r.ejected_flits,
+            "in_flight": r.in_flight_flits,
+            "reorder": r.reorder_value,
+            "meas_cycles": r.meas_cycles,
+            "throughput": round(r.throughput, 6),
+            "avg_latency": round(r.avg_latency, 6),
+            "p50_latency": round(r.p50_latency, 6),
+            "p99_latency": round(r.p99_latency, 6),
+            "link_load_max": round(r.link_load_max, 6),
+            "lcv": round(r.lcv, 6),
+        }
+    return {
+        "description": "4x4-mesh golden campaign (see tests/goldens/"
+                       "regen.py); pins simulator behaviour across "
+                       "refactors",
+        "points": points,
+    }
+
+
+def main():
+    goldens = compute_goldens()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(goldens, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(goldens['points'])} golden points to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

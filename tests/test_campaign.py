@@ -1,0 +1,122 @@
+"""Campaign engine: grid semantics, batched-equals-sequential, phasing,
+saturation early-exit, and result accessors."""
+
+import numpy as np
+import pytest
+
+from repro.core import mesh2d, traffic, build_plan
+from repro.noc import (Algo, CampaignSpec, SimConfig, run_campaign)
+from repro.noc.sim import run_sweep
+
+TOPO = mesh2d(4, 4)
+UNI = traffic.uniform(TOPO)
+BASE = SimConfig(cycles=1200, warmup=300, drain=100)
+
+
+def test_grid_is_fully_enumerated():
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY, Algo.YX), patterns=(("uni", UNI),),
+        rates=(0.1, 0.3), seeds=(0, 1, 2), base=BASE)
+    res = run_campaign(spec)
+    assert spec.num_points == 12
+    assert len(res.points) == 12
+    combos = {(p.algo, p.pattern, p.rate, p.seed) for p in res.points}
+    assert len(combos) == 12
+    g = res.grid("throughput", Algo.XY, "uni")
+    assert g.shape == (2, 3)
+    assert (g > 0).all()
+    assert res.mean_over_seeds("throughput", Algo.XY, "uni").shape == (2,)
+
+
+def test_batched_campaign_matches_sequential_sweep_exactly():
+    """Every lane of the vmapped batch must reproduce the stand-alone
+    run bit-for-bit (same per-point PRNG stream, same integer stats)."""
+    rates, seeds = (0.15, 0.45), (0, 7)
+    plan = build_plan(TOPO, UNI)
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY, Algo.BIDOR), patterns=(("uni", UNI),),
+        rates=rates, seeds=seeds, base=BASE)
+    res = run_campaign(spec, bidor_tables={"uni": plan.table.choice})
+    for algo in (Algo.XY, Algo.BIDOR):
+        cfg = BASE.replace(algo=algo)
+        for rate in rates:
+            for seed in seeds:
+                seq = run_sweep(TOPO, UNI, cfg, [rate],
+                                bidor_table=plan.table, seeds=[seed])[0]
+                (pt,) = res.select(algo=algo, rate=rate, seed=seed)
+                bat = pt.result
+                assert bat.injected_flits == seq.injected_flits
+                assert bat.ejected_flits == seq.ejected_flits
+                assert bat.in_flight_flits == seq.in_flight_flits
+                assert bat.reorder_value == seq.reorder_value
+                assert np.isclose(bat.avg_latency, seq.avg_latency)
+                assert np.isclose(bat.throughput, seq.throughput)
+
+
+def test_chunked_execution_matches_single_call():
+    """Slicing the cycle loop for the early-exit detector must not change
+    any statistic when no lane saturates."""
+    common = dict(topo=TOPO, algos=(Algo.XY,), patterns=(("uni", UNI),),
+                  rates=(0.1, 0.3), seeds=(0,), base=BASE)
+    whole = run_campaign(CampaignSpec(**common, chunk=0))
+    sliced = run_campaign(CampaignSpec(**common, chunk=250))
+    for pw, ps in zip(whole.points, sliced.points):
+        assert pw.result.injected_flits == ps.result.injected_flits
+        assert pw.result.ejected_flits == ps.result.ejected_flits
+        assert np.isclose(pw.result.avg_latency, ps.result.avg_latency)
+        assert pw.result.meas_cycles == ps.result.meas_cycles
+
+
+def test_saturation_early_exit():
+    """All-saturated lanes end the cell early: saturated flags set, fewer
+    cycles measured than configured."""
+    base = SimConfig(cycles=6000, warmup=500, src_queue_pkts=16)
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY,), patterns=(("uni", UNI),),
+        rates=(2.0, 3.0), seeds=(0,), base=base, chunk=500,
+        sat_occupancy=0.8)
+    res = run_campaign(spec)
+    for p in res.points:
+        assert p.result.saturated, p
+        assert p.result.meas_cycles < base.measure, p
+        # statistics stay exactly normalized under the early exit
+        assert p.result.injected_flits == (p.result.ejected_flits
+                                           + p.result.in_flight_flits)
+        assert 0.5 < p.result.throughput < 1.2
+
+
+def test_unsaturated_lane_prevents_early_exit():
+    base = SimConfig(cycles=2500, warmup=400, src_queue_pkts=16)
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY,), patterns=(("uni", UNI),),
+        rates=(0.05, 3.0), seeds=(0,), base=base, chunk=400)
+    res = run_campaign(spec)
+    low = res.select(rate=0.05)[0].result
+    high = res.select(rate=3.0)[0].result
+    assert not low.saturated
+    assert high.saturated
+    assert low.meas_cycles == base.measure  # ran to completion
+
+
+def test_pattern_names_resolve_through_registry():
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY,), patterns=("uniform", "tornado"),
+        rates=(0.2,), seeds=(0,), base=BASE)
+    res = run_campaign(spec)
+    assert {p.pattern for p in res.points} == {"uniform", "tornado"}
+
+
+def test_csv_rows_match_header():
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY,), patterns=(("uni", UNI),),
+        rates=(0.2,), seeds=(0,), base=BASE)
+    res = run_campaign(spec)
+    rows = res.to_rows()
+    assert len(rows) == 1
+    assert len(rows[0]) == len(res.CSV_HEADER)
+
+
+def test_empty_axis_rejected():
+    with pytest.raises(ValueError):
+        CampaignSpec(topo=TOPO, algos=(), patterns=("uniform",),
+                     rates=(0.1,), seeds=(0,), base=BASE)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import (
     Topology, mesh2d, mesh2d_edge_io, torus, multipod, traffic,

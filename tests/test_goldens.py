@@ -1,0 +1,69 @@
+"""Golden-regression harness: a pinned 4×4-mesh campaign.
+
+The simulator is refactored aggressively (batching, packed state, device
+sharding); this test makes any behavioural drift loud.  Integer flit
+counts must match exactly — they are deterministic functions of the
+per-point PRNG streams, which are platform-stable (threefry).  Float
+statistics get a small tolerance for summation-order differences.
+
+To update after an INTENTIONAL behaviour change:
+    PYTHONPATH=src python tests/goldens/regen.py
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
+                           "campaign_4x4.json")
+
+INT_FIELDS = ("injected", "ejected", "in_flight", "reorder", "meas_cycles")
+FLOAT_FIELDS = ("throughput", "avg_latency", "p50_latency", "p99_latency",
+                "link_load_max", "lcv")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def computed():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "golden_regen", os.path.join(os.path.dirname(GOLDEN_PATH),
+                                     "regen.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.compute_goldens()
+
+
+def test_golden_point_set_matches(golden, computed):
+    assert set(computed["points"]) == set(golden["points"])
+
+
+def test_golden_campaign_matches(golden, computed):
+    mismatches = []
+    for key, want in golden["points"].items():
+        got = computed["points"][key]
+        for f in INT_FIELDS:
+            if got[f] != want[f]:
+                mismatches.append(f"{key}.{f}: {got[f]} != {want[f]}")
+        for f in FLOAT_FIELDS:
+            if not np.isclose(got[f], want[f], rtol=1e-5, atol=1e-6):
+                mismatches.append(f"{key}.{f}: {got[f]} != {want[f]}")
+    assert not mismatches, (
+        "golden campaign drifted (intentional? regen with "
+        "`PYTHONPATH=src python tests/goldens/regen.py`):\n  "
+        + "\n  ".join(mismatches))
+
+
+def test_golden_conservation(computed):
+    """The pinned campaign itself satisfies flit conservation."""
+    for key, pt in computed["points"].items():
+        assert pt["injected"] == pt["ejected"] + pt["in_flight"], key
+        assert pt["reorder"] == 0, key  # XY and BiDOR are in-order

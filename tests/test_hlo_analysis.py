@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.analysis.hlo import (HloStats, analyze_hlo_text, roofline_terms,
-                                PEAK_FLOPS)
+                                xla_cost_analysis, PEAK_FLOPS)
 
 
 def _compile(f, *sds):
@@ -29,7 +29,7 @@ def test_scan_trip_count_flops():
     assert st.flops == 2 * 256 ** 3 * 10
     assert 10 in st.while_trip_counts
     # XLA's own analysis undercounts by the trip count
-    assert c.cost_analysis()["flops"] == pytest.approx(st.flops / 10)
+    assert xla_cost_analysis(c)["flops"] == pytest.approx(st.flops / 10)
 
 
 def test_nested_scan_flops_compose():

