@@ -4,6 +4,10 @@ Three scenarios — (a/b) 5×5 2DMesh + Uniform, (c) edge-I/O + Uniform,
 (d) edge-I/O + Overturn.  For each: simulated forwarding rate under XY and
 under BiDOR, with the w_NR overlay; reported as the Pearson correlation
 between w_NR and the measured XY-load trend plus the load tables.
+
+Each scenario is one declarative campaign cell (XY + BiDOR) through
+:func:`repro.noc.campaign.run_campaign`; per-point results are
+bit-identical to the old per-call ``run_sim`` path.
 """
 
 from __future__ import annotations
@@ -11,7 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import build_plan, mesh2d, mesh2d_edge_io, traffic
-from repro.noc import Algo, SimConfig, run_sim
+from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
 from .common import QUICK, lcv, write_csv
 
 SCENARIOS = [
@@ -27,11 +31,14 @@ def main(rows_out=None):
     for name, topo, pattern in SCENARIOS:
         t = traffic.PATTERNS[pattern](topo)
         plan = build_plan(topo, t)
-        cfg = SimConfig(cycles=cycles, warmup=cycles // 3,
-                        injection_rate=0.35)
-        r_xy = run_sim(topo, t, cfg.replace(algo=Algo.XY))
-        r_bd = run_sim(topo, t, cfg.replace(algo=Algo.BIDOR),
-                       bidor_table=plan.table)
+        spec = CampaignSpec(
+            topo=topo, algos=(Algo.XY, Algo.BIDOR),
+            patterns=((pattern, t),), rates=(0.35,),
+            base=SimConfig(cycles=cycles, warmup=cycles // 3))
+        res = run_campaign(spec,
+                           bidor_tables={pattern: plan.table.choice})
+        r_xy = res.select(algo=Algo.XY)[0].result
+        r_bd = res.select(algo=Algo.BIDOR)[0].result
         wnr = plan.w_nr
         mask = r_xy.node_load > 1e-9
         corr = float(np.corrcoef(wnr[mask], r_xy.node_load[mask])[0, 1])

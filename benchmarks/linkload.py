@@ -4,28 +4,39 @@ Max/CV link load of decomposed collectives on the production meshes —
 completion time of a bandwidth-bound collective ∝ max link load.  Scenarios:
 balanced MoE all-to-all, hot-expert skew, and the multi-pod fabric with
 BiDOR-k (dimension-order choice over 3 axes).
+
+The static analysis runs on :func:`repro.core.qstar.link_load`
+(bandwidth-normalized per-channel loads of a routing table); a closing
+campaign cell replays the skewed all-to-all through the flit simulator on
+a small torus (:func:`repro.noc.campaign.run_campaign`) and cross-checks
+that the simulated ``link_load_max`` ordering (BiDOR ≤ XY) matches the
+offline prediction.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import bidor, bidor_k, multipod, torus
+from repro.core import (bidor, bidor_k, build_plan, multipod, torus,
+                        traffic)
 from repro.core.bidor import greedy_refine
-from repro.dist.qstar_collectives import (alltoall_traffic, build_ici_plan,
-                                          ici_link_loads)
-from .common import write_csv
+from repro.core.qstar import link_load_stats as ici_link_loads
+from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
+from .common import QUICK, write_csv
 
 
 def main():
     rng = np.random.default_rng(0)
     rows = []
+    side = 8 if QUICK else 16
+    n_pod = side * side
 
     def report(name, topo, t, k_orders=False):
         n = topo.num_nodes
         xy = bidor(topo, np.zeros(n)) if not k_orders else \
             bidor_k(topo, np.zeros(n), orders=None)
-        nr, tab = build_ici_plan(topo, t, k_orders=k_orders)
+        plan = build_plan(topo, t, k_orders=k_orders)
+        tab = plan.table
         tab_g = greedy_refine(topo, t, tab, sweeps=3)
         l_xy = ici_link_loads(topo, t, xy)
         l_bd = ici_link_loads(topo, t, tab)
@@ -40,18 +51,42 @@ def main():
               f"BiDOR={l_bd['max']:.5f} ({gain:+.1f}%) → "
               f"BiDOR-G={l_g['max']:.5f} ({gain_g:+.1f}%)")
 
-    pod = torus(16, 16)
-    report("pod16x16_uniform_a2a", pod, alltoall_traffic(pod))
-    skew = 1.0 + 4.0 * (rng.random(256) < 0.10)
-    report("pod16x16_hot_experts", pod, alltoall_traffic(pod, skew=skew))
-    hot2 = np.ones(256)
-    hot2[rng.choice(256, 16, replace=False)] = 8.0
-    report("pod16x16_8x_hotspots", pod, alltoall_traffic(pod, skew=hot2))
+    pod = torus(side, side)
+    report(f"pod{side}x{side}_uniform_a2a", pod, traffic.alltoall(pod))
+    skew = 1.0 + 4.0 * (rng.random(n_pod) < 0.10)
+    report(f"pod{side}x{side}_hot_experts", pod,
+           traffic.alltoall(pod, skew=skew))
+    hot2 = np.ones(n_pod)
+    hot2[rng.choice(n_pod, n_pod // 16, replace=False)] = 8.0
+    report(f"pod{side}x{side}_8x_hotspots", pod,
+           traffic.alltoall(pod, skew=hot2))
 
-    mp = multipod(2, 8, 8)
-    t = alltoall_traffic(mp, skew=1.0 + 4.0 * (rng.random(128) < 0.10))
-    report("multipod2x8x8_hot(bin)", mp, t)
-    report("multipod2x8x8_hot(k!)", mp, t, k_orders=True)
+    mp = multipod(2, side // 2, side // 2)
+    n_mp = mp.num_nodes
+    t = traffic.alltoall(mp, skew=1.0 + 4.0 * (rng.random(n_mp) < 0.10))
+    report(f"multipod2x{side//2}x{side//2}_hot(bin)", mp, t)
+    report(f"multipod2x{side//2}x{side//2}_hot(k!)", mp, t, k_orders=True)
+
+    # flit-sim cross-check on a small torus: the simulated max link load
+    # must preserve the offline ordering (BiDOR ≤ XY under skew)
+    sim_topo = torus(4, 4) if QUICK else torus(8, 8)
+    ns = sim_topo.num_nodes
+    sskew = 1.0 + 4.0 * (rng.random(ns) < 0.15)
+    st = traffic.alltoall(sim_topo, skew=sskew)
+    cycles = 3000 if QUICK else 6000
+    spec = CampaignSpec(
+        topo=sim_topo, algos=(Algo.XY, Algo.BIDOR),
+        patterns=(("a2a_skew", st),), rates=(0.3,),
+        base=SimConfig(cycles=cycles, warmup=cycles // 3))
+    res = run_campaign(spec)
+    s_xy = res.select(algo=Algo.XY)[0].result.link_load_max
+    s_bd = res.select(algo=Algo.BIDOR)[0].result.link_load_max
+    print(f"linkload sim-check torus{sim_topo.dims}: simulated max link "
+          f"load XY={s_xy:.4f} BiDOR={s_bd:.4f} "
+          f"(offline ordering {'preserved' if s_bd <= s_xy * 1.05 else 'VIOLATED'})")
+    rows.append(["sim_check_" + "x".join(map(str, sim_topo.dims)),
+                 f"{s_xy:.5f}", f"{s_bd:.5f}",
+                 f"{(1 - s_bd / s_xy) * 100:+.1f}%", "", "", "", ""])
 
     write_csv("linkload_ici.csv",
               ["scenario", "max_xy", "max_bidor", "gain_bidor",

@@ -6,6 +6,7 @@ beyond-paper ICI analyses.
   fig8      paper Fig. 8  — throughput/latency/reorder vs injection rate
   fig9      paper Fig. 9  — realistic Clos-leaf workload
   campaign  scaling       — batched campaign vs sequential simulate calls
+  dynamics  control plane — oracle/stale/online replanning under faults
   linkload  DESIGN §3     — Q-StaR on the TPU ICI fabric
   roofline  deliverable g — per-(arch × shape × mesh) roofline table
   nrank     offline cost  — N-Rank wall time (the quasi-static budget)
@@ -111,8 +112,8 @@ def bench_nrank():
     write_csv("nrank_cost.csv", ["topology", "nodes", "ms", "iters"], rows)
 
 
-STAGES = ["fig1", "table1", "fig8", "fig9", "campaign", "linkload",
-          "roofline", "nrank"]
+STAGES = ["fig1", "table1", "fig8", "fig9", "campaign", "dynamics",
+          "linkload", "roofline", "nrank"]
 
 
 def main() -> None:
@@ -135,6 +136,9 @@ def main() -> None:
             fig9_realistic.main()
         elif name == "campaign":
             bench_campaign()
+        elif name == "dynamics":
+            from . import dynamics
+            dynamics.main()
         elif name == "linkload":
             from . import linkload
             linkload.main()

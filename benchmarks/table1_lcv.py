@@ -3,12 +3,16 @@
 Paper values for reference: 2DMesh+UN: XY .29 O1Turn .28 Valiant .35
 ROMM .46 BiDOR .20 | EdgeIO+UN: .28 .36 .33 .19 .08 | EdgeIO+OV: .36 .63
 .37 .30 .17.
+
+One campaign per scenario: all six algorithms run as cells of a single
+declarative grid (the per-(algo, pattern) batched path of
+:func:`repro.noc.campaign.run_campaign`).
 """
 
 from __future__ import annotations
 
 from repro.core import build_plan, mesh2d, mesh2d_edge_io, traffic
-from repro.noc import Algo, SimConfig, run_sim
+from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
 from .common import QUICK, write_csv
 
 SCENARIOS = [
@@ -16,8 +20,8 @@ SCENARIOS = [
     ("EdgeIO+UN", mesh2d_edge_io(5, 5), "uniform", 0.4),
     ("EdgeIO+OV", mesh2d_edge_io(5, 5), "overturn", 0.3),
 ]
-ALGOS = [Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM, Algo.ODDEVEN,
-         Algo.BIDOR]
+ALGOS = (Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM, Algo.ODDEVEN,
+         Algo.BIDOR)
 
 
 def main():
@@ -27,12 +31,15 @@ def main():
     for name, topo, pattern, rate in SCENARIOS:
         t = traffic.PATTERNS[pattern](topo)
         plan = build_plan(topo, t)
+        spec = CampaignSpec(
+            topo=topo, algos=ALGOS, patterns=((pattern, t),),
+            rates=(rate,),
+            base=SimConfig(cycles=cycles, warmup=cycles // 3))
+        res = run_campaign(spec,
+                           bidor_tables={pattern: plan.table.choice})
         row = [name]
         for algo in ALGOS:
-            cfg = SimConfig(algo=algo, cycles=cycles, warmup=cycles // 3,
-                            injection_rate=rate)
-            r = run_sim(topo, t, cfg, bidor_table=plan.table)
-            row.append(f"{r.lcv:.3f}")
+            row.append(f"{res.select(algo=algo)[0].result.lcv:.3f}")
         rows.append(row)
         print("table1", " ".join(f"{h}={v}" for h, v in zip(header, row)))
     write_csv("table1_lcv.csv", header, rows)

@@ -1,10 +1,12 @@
 """Quickstart: the full Q-StaR pipeline on the paper's 5×5 NoC.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [cycles]
 
 Builds N-Rank weights + BiDOR bitmaps offline (paper Fig. 3 workflow),
 then simulates XY vs BiDOR and prints the load-balance improvement.
 """
+
+import sys
 
 import numpy as np
 
@@ -12,7 +14,7 @@ from repro.core import build_plan, mesh2d_edge_io, traffic
 from repro.noc import Algo, SimConfig, run_sim
 
 
-def main():
+def main(cycles: int = 8000):
     topo = mesh2d_edge_io(5, 5)           # paper §4.1 NoC
     t = traffic.uniform(topo)
 
@@ -25,7 +27,7 @@ def main():
     print(plan.table.bitmaps[0].astype(int))
 
     # ---- runtime: deterministic table-driven routing ---- #
-    cfg = SimConfig(cycles=8000, warmup=2500, injection_rate=0.5)
+    cfg = SimConfig(cycles=cycles, warmup=cycles // 3, injection_rate=0.5)
     r_xy = run_sim(topo, t, cfg.replace(algo=Algo.XY))
     r_bd = run_sim(topo, t, cfg.replace(algo=Algo.BIDOR),
                    bidor_table=plan.table)
@@ -39,4 +41,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 8000)

@@ -4,7 +4,8 @@ from .topology import Topology, mesh2d, mesh2d_edge_io, torus, multipod
 from . import traffic
 from .nrank import NRankResult, nrank, nrank_channel, possibility_weights
 from .bidor import BiDORTable, bidor, bidor_k
-from .qstar import QStarPlan, build_plan, predicted_node_load, link_load
+from .qstar import (QStarPlan, build_plan, predicted_node_load, link_load,
+                    link_load_stats)
 from .routes import dimension_orders, route_nodes, next_port_table
 
 __all__ = [
@@ -13,5 +14,6 @@ __all__ = [
     "NRankResult", "nrank", "nrank_channel", "possibility_weights",
     "BiDORTable", "bidor", "bidor_k",
     "QStarPlan", "build_plan", "predicted_node_load", "link_load",
+    "link_load_stats",
     "dimension_orders", "route_nodes", "next_port_table",
 ]

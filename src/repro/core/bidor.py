@@ -40,6 +40,11 @@ class BiDORTable:
     orders: tuple[tuple[int, ...], ...]
     costs: np.ndarray
     port_tables: np.ndarray
+    # (N, N) bool — pairs for which NO dimension order avoids the down
+    # channels (set by fault-aware planning; None on intact topologies).
+    # Their traffic must be shed (admission control) — the stored choice
+    # would cross a dead link.
+    unroutable: np.ndarray | None = None
 
     @property
     def bitmaps(self) -> np.ndarray:
@@ -53,19 +58,67 @@ class BiDORTable:
         return np.packbits(self.bitmaps, axis=1)
 
 
+def route_feasibility(topo: Topology,
+                      orders: list[tuple[int, ...]],
+                      down: np.ndarray) -> np.ndarray:
+    """(O, N, N) bool — order o's DOR route s→d avoids every down channel.
+
+    ``down`` is a boolean per-channel mask (or an index array) over
+    ``topo.channels``.  Works on the *intact* channel indexing: DOR routes
+    are functions of coordinates alone, so feasibility is just a walk of
+    each route against the down set.
+    """
+    from .routes import walk_routes
+
+    down = np.asarray(down)
+    if down.dtype != bool:
+        m = np.zeros(topo.num_channels, dtype=bool)
+        m[down] = True
+        down = m
+    n = topo.num_nodes
+    down_pair = np.zeros((n, n), dtype=bool)
+    down_pair[topo.channels[down, 0], topo.channels[down, 1]] = True
+    feas = np.ones((len(orders), n, n), dtype=bool)
+    for oi, order in enumerate(orders):
+        seq = walk_routes(topo, order)               # (N, N, L+1)
+        for h in range(seq.shape[-1] - 1):
+            a, b = seq[..., h], seq[..., h + 1]
+            hit = (a != b) & down_pair[a, b]
+            feas[oi] &= ~hit
+    return feas
+
+
 def bidor_k(topo: Topology, w_nr: np.ndarray,
             orders: list[tuple[int, ...]] | None = None,
-            tie_break: str = "xy") -> BiDORTable:
+            tie_break: str = "xy",
+            down_channels: np.ndarray | None = None) -> BiDORTable:
     """Choose, per ⟨s, d⟩, the DOR order with minimal Σ w_NR (eq. 10).
 
     ``tie_break``: "xy" (paper default — lowest order index) or "hash"
     (deterministic per-pair split across tied orders).  Flip-symmetric
     patterns (Overturn) tie on EVERY pair; measurements (EXPERIMENTS.md
     §Fidelity) show tie→XY dominates, so it stays the default.
+
+    ``down_channels`` (fault-aware planning): boolean mask or index array
+    over ``topo.channels`` of hard-failed channels.  Orders whose route
+    crosses a down channel are masked out of the eq. (10) minimization, so
+    every selected route stays a pure DOR route inside its own VC class —
+    the fallback keeps the quasi-static scheme deadlock-free by
+    construction.  Pairs no order can serve are flagged in
+    ``BiDORTable.unroutable`` (their traffic must be shed upstream).
     """
     if orders is None:
         orders = dimension_orders(topo.ndim)
     costs = route_costs(topo, w_nr, orders)          # (O, N, N)
+    unroutable = None
+    if down_channels is not None and np.asarray(down_channels).size:
+        feas = route_feasibility(topo, orders, down_channels)
+        unroutable = ~feas.any(axis=0)
+        np.fill_diagonal(unroutable, False)
+        # infeasible orders leave the minimization; unroutable pairs keep
+        # their unmasked costs so `choice` stays well-defined (and shed).
+        big = np.where(unroutable[None], costs, np.inf)
+        costs = np.where(feas, costs, big)
     # Ties are resolved with a tolerance (w_NR is float32; ties on
     # symmetric topologies are symmetry-exact) and broken by a
     # deterministic per-pair hash across the tied orders.  Flip-symmetric
@@ -92,12 +145,15 @@ def bidor_k(topo: Topology, w_nr: np.ndarray,
     np.fill_diagonal(choice, 0)
     ports = np.stack([next_port_table(topo, o) for o in orders])
     return BiDORTable(choice=choice, orders=tuple(map(tuple, orders)),
-                      costs=costs, port_tables=ports)
+                      costs=costs, port_tables=ports,
+                      unroutable=unroutable)
 
 
-def bidor(topo: Topology, w_nr: np.ndarray) -> BiDORTable:
+def bidor(topo: Topology, w_nr: np.ndarray,
+          down_channels: np.ndarray | None = None) -> BiDORTable:
     """Paper-faithful binary BiDOR: XY vs YX only."""
-    return bidor_k(topo, w_nr, dimension_orders(topo.ndim, binary_only=True))
+    return bidor_k(topo, w_nr, dimension_orders(topo.ndim, binary_only=True),
+                   down_channels=down_channels)
 
 
 def greedy_refine(topo: Topology, traffic, table: BiDORTable,
@@ -124,35 +180,47 @@ def greedy_refine(topo: Topology, traffic, table: BiDORTable,
         topo.num_channels)
 
     def pair_links(oi, s, d):
+        """Channel ids of route (s, d) under order oi; None if the route
+        crosses a channel absent from the (possibly degraded) graph."""
         seq = seqs[oi][s, d]
         ids = []
         for h in range(len(seq) - 1):
             a, b = int(seq[h]), int(seq[h + 1])
             if a == b:
                 break
-            ids.append(int(chan_lut[a, b]))
+            c = int(chan_lut[a, b])
+            if c < 0:
+                return None
+            ids.append(c)
         return ids
 
     choice = table.choice.copy()
     load = _link_load(topo, t,
                       BiDORTable(choice=choice, orders=orders,
                                  costs=table.costs,
-                                 port_tables=table.port_tables))
-    bw = topo.channel_bw
+                                 port_tables=table.port_tables,
+                                 unroutable=table.unroutable))
+    bw = _np.where(topo.channel_bw > 0, topo.channel_bw, 1e-12)
+    unroutable = table.unroutable
     pairs = [(s, d) for s in range(n) for d in range(n)
-             if s != d and t[s, d] > 0]
+             if s != d and t[s, d] > 0
+             and not (unroutable is not None and unroutable[s, d])]
     pairs.sort(key=lambda p: -t[p])
     for _ in range(sweeps):
         changed = 0
         for s, d in pairs:
             cur = int(choice[s, d])
             cur_links = pair_links(cur, s, d)
+            if cur_links is None:
+                continue  # current route leaves the degraded graph
             best_oi, best_peak = cur, max(
                 (load[c] for c in cur_links), default=0.0)
             for oi in range(len(orders)):
                 if oi == cur:
                     continue
                 alt = pair_links(oi, s, d)
+                if alt is None:
+                    continue
                 # peak among affected links if we moved this pair
                 peak = 0.0
                 for c in alt:
@@ -170,4 +238,5 @@ def greedy_refine(topo: Topology, traffic, table: BiDORTable,
         if changed == 0:
             break
     return BiDORTable(choice=choice, orders=orders, costs=table.costs,
-                      port_tables=table.port_tables)
+                      port_tables=table.port_tables,
+                      unroutable=table.unroutable)

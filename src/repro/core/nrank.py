@@ -147,7 +147,13 @@ def _evolve_jax(a: jax.Array, a_drn: jax.Array, w0: jax.Array,
 
 def evolve(a: np.ndarray, a_drn: np.ndarray, w0: np.ndarray,
            w_th: float = W_TH, iter_th: int = ITER_TH):
-    """Run the evolution; returns (w_final, w_nr, iterations)."""
+    """Run the evolution; returns (w_final, w_nr, iterations).
+
+    ``w0`` is the full initial-weight carry: the quasi-static re-planner
+    (:mod:`repro.noc.ctrl`) seeds it with the previous plan's residual
+    fixed point on top of eq. (1), so successive plans evolve from the
+    load state the old plan left behind instead of from scratch.
+    """
     w, w_nr, it = _evolve_jax(jnp.asarray(a), jnp.asarray(a_drn),
                               jnp.asarray(w0), float(w_th), int(iter_th))
     return np.asarray(w), np.asarray(w_nr), int(it)
@@ -200,7 +206,8 @@ def joint_possibility(topo: Topology, traffic: np.ndarray,
 
 
 def nrank_channel(topo: Topology, traffic: np.ndarray,
-                  w_th: float = W_TH, iter_th: int = ITER_TH) -> NRankResult:
+                  w_th: float = W_TH, iter_th: int = ITER_TH,
+                  w0: np.ndarray | None = None) -> NRankResult:
     """N-Rank with channel-level evolution state (primary interpretation).
 
     Identical workflow to §3.2 but the evolving weight lives on channels, so
@@ -211,6 +218,11 @@ def nrank_channel(topo: Topology, traffic: np.ndarray,
     topologies (see EXPERIMENTS.md §Fidelity); this variant restores the
     paper's own reported behaviour (Table 1, Fig. 8) and is what
     ``build_plan`` uses by default.
+
+    ``w0`` (optional, node-level) overrides the eq. (1) initial weights —
+    the warm-start carry of the online re-planner.  Channel-level initial
+    weights are rescaled per source so each node still splits its initial
+    weight over its minimal outgoing channels.
     """
     traffic = np.asarray(traffic, dtype=np.float64)
     n, c = topo.num_nodes, topo.num_channels
@@ -238,6 +250,15 @@ def nrank_channel(topo: Topology, traffic: np.ndarray,
     with np.errstate(invalid="ignore", divide="ignore"):
         w0c = np.where(denom > 0, share / np.maximum(denom, 1e-300), 0.0).sum(1)
     w0_node = initial_weights(traffic)
+    if w0 is not None:
+        w0_eff = np.asarray(w0, np.float64)
+        outdeg = np.bincount(us, minlength=n).astype(np.float64)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            scale = np.where(w0_node > 0,
+                             w0_eff / np.maximum(w0_node, 1e-300), 0.0)
+            extra = np.where(w0_node > 0, 0.0, w0_eff)
+        w0c = w0c * scale[us] + extra[us] / np.maximum(outdeg[us], 1.0)
+        w0_node = w0_eff
 
     # aggregation matrix: node arrivals from channel weights
     agg = np.zeros((c, n), np.float64)
@@ -269,8 +290,14 @@ def nrank_channel(topo: Topology, traffic: np.ndarray,
 
 def nrank(topo: Topology, traffic: np.ndarray,
           w_th: float = W_TH, iter_th: int = ITER_TH,
-          use_kernel: bool = False) -> NRankResult:
-    """Full N-Rank: topology + traffic distribution → NR-weights."""
+          use_kernel: bool = False,
+          w0: np.ndarray | None = None) -> NRankResult:
+    """Full N-Rank: topology + traffic distribution → NR-weights.
+
+    ``w0`` (optional) replaces the eq. (1) initial weights — the online
+    re-planner's warm-start carry (previous plan's residual on top of the
+    fresh initial weights).
+    """
     traffic = np.asarray(traffic, dtype=np.float64)
     if traffic.shape != (topo.num_nodes,) * 2:
         raise ValueError(
@@ -283,7 +310,10 @@ def nrank(topo: Topology, traffic: np.ndarray,
     else:
         w, w_drn = possibility_weights(topo.distances, traffic, topo.channels)
     p, p_drn, a, a_drn = transition_probabilities(topo, traffic, w, w_drn)
-    w0 = initial_weights(traffic)
+    if w0 is None:
+        w0 = initial_weights(traffic)
+    else:
+        w0 = np.asarray(w0, dtype=np.float64)
     w_final, w_nr, it = evolve(a, a_drn, w0, w_th, iter_th)
     return NRankResult(w_nr=w_nr, w0=w0, w_final=w_final, iterations=it,
                        p=p, p_drn=p_drn, w_possibility=w)

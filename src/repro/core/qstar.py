@@ -25,7 +25,8 @@ from .nrank import NRankResult, nrank, nrank_channel
 from .routes import dimension_orders, walk_routes
 from .topology import Topology
 
-__all__ = ["QStarPlan", "build_plan", "predicted_node_load", "link_load"]
+__all__ = ["QStarPlan", "build_plan", "predicted_node_load", "link_load",
+           "link_load_stats"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +49,9 @@ def build_plan(topo: Topology, traffic: np.ndarray, *,
                k_orders: bool = False,
                mode: str = "channel",
                w_th: float = 0.01, iter_th: int = 100,
-               use_kernel: bool = False) -> QStarPlan:
+               use_kernel: bool = False,
+               w0: np.ndarray | None = None,
+               down_channels: np.ndarray | None = None) -> QStarPlan:
     """Offline Q-StaR pipeline.
 
     Args:
@@ -58,13 +61,22 @@ def build_plan(topo: Topology, traffic: np.ndarray, *,
         §3.2.2's no-detour assumption that reproduces the paper's reported
         results; "node" — the literal node-level eq. (2)–(3) evolution
         (kept as the paper-faithful baseline; see EXPERIMENTS.md §Fidelity).
+      w0: warm-start carry for the N-Rank evolution (node-level initial
+        weights) — the online re-planner passes the previous plan's
+        residual added to the fresh eq. (1) weights.
+      down_channels: hard-failed channel mask/ids over ``topo.channels``;
+        dimension orders whose route crosses a down channel leave the
+        BiDOR minimization (see :func:`repro.core.bidor.bidor_k`).
     """
     if mode == "channel":
-        nr = nrank_channel(topo, traffic, w_th=w_th, iter_th=iter_th)
+        nr = nrank_channel(topo, traffic, w_th=w_th, iter_th=iter_th, w0=w0)
     else:
         nr = nrank(topo, traffic, w_th=w_th, iter_th=iter_th,
-                   use_kernel=use_kernel)
-    table = bidor_k(topo, nr.w_nr) if k_orders else bidor(topo, nr.w_nr)
+                   use_kernel=use_kernel, w0=w0)
+    if k_orders:
+        table = bidor_k(topo, nr.w_nr, down_channels=down_channels)
+    else:
+        table = bidor(topo, nr.w_nr, down_channels=down_channels)
     return QStarPlan(topology=topo, traffic=np.asarray(traffic), nrank=nr,
                      table=table)
 
@@ -89,6 +101,8 @@ def predicted_node_load(topo: Topology, traffic: np.ndarray,
     load = np.zeros(n, dtype=np.float64)
     seqs = _route_seqs(topo, table.orders)
     t = np.asarray(traffic, dtype=np.float64)
+    if table.unroutable is not None:
+        t = np.where(table.unroutable, 0.0, t)
     for oi, seq in enumerate(seqs):
         sel = table.choice == oi  # (N, N)
         w = np.where(sel, t, 0.0)
@@ -115,6 +129,8 @@ def link_load(topo: Topology, traffic: np.ndarray,
     load = np.zeros(topo.num_channels, dtype=np.float64)
     seqs = _route_seqs(topo, table.orders)
     t = np.asarray(traffic, dtype=np.float64)
+    if table.unroutable is not None:
+        t = np.where(table.unroutable, 0.0, t)  # shed traffic contributes 0
     n = topo.num_nodes
     chan_lut = np.full((n, n), -1, dtype=np.int64)
     chan_lut[topo.channels[:, 0], topo.channels[:, 1]] = np.arange(
@@ -125,9 +141,28 @@ def link_load(topo: Topology, traffic: np.ndarray,
         hops = seq.shape[-1]
         for h in range(hops - 1):
             a, b = seq[..., h], seq[..., h + 1]
-            moving = a != b
-            if not moving.any():
+            moving = (a != b) & (chan_lut[a, b] >= 0)
+            if not (a != b).any():
                 break
             ids = chan_lut[a[moving], b[moving]]
             np.add.at(load, ids, w[moving])
-    return load / topo.channel_bw
+    # a hard-failed (bw == 0) channel carrying planned load is an
+    # infinite bottleneck, not a division error
+    bw = topo.channel_bw
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = np.where(bw > 0, load / np.where(bw > 0, bw, 1.0),
+                       np.where(load > 0, np.inf, 0.0))
+    return out
+
+
+def link_load_stats(topo: Topology, traffic: np.ndarray,
+                    table: BiDORTable) -> dict:
+    """Max and CV of the finite bandwidth-normalized link loads — the
+    collective completion-time bound and its dispersion (infinite
+    entries, i.e. planned load over a dead link, are excluded; detect
+    them via :func:`link_load` directly)."""
+    ll = link_load(topo, traffic, table)
+    live = ll[np.isfinite(ll)]
+    mean = float(live.mean()) if live.size else 0.0
+    return {"max": float(live.max()) if live.size else 0.0,
+            "cv": float(live.std() / mean) if mean else 0.0}

@@ -186,6 +186,60 @@ class Topology:
         p = self.channel_port
         return np.where(p % 2 == 0, p + 1, p - 1).astype(np.int32)
 
+    # ------------------------------------------------------------------ #
+    # fault modelling (control plane)
+    # ------------------------------------------------------------------ #
+    @property
+    def down_channels(self) -> np.ndarray:
+        """Indices of channels with no usable bandwidth (hard-failed)."""
+        return np.nonzero(self.channel_bw <= 0)[0]
+
+    def channel_index(self, u: int, n: int) -> int:
+        """Channel id of the directed link (u, n); raises if absent."""
+        key = (int(u), int(n))
+        if key not in self.chan_id:
+            raise KeyError(f"no channel {u}->{n} in {self.name}")
+        return self.chan_id[key]
+
+    def degrade(self, failed: Sequence, bw_scale: float = 0.0,
+                drop: bool = False) -> "Topology":
+        """Topology with the listed channels failed or degraded.
+
+        Args:
+          failed: channel ids, or (u, n) node pairs, identifying directed
+            channels.  A physical link is two directed channels; pass both
+            if the whole link is down.
+          bw_scale: multiplier applied to the failed channels' bandwidth.
+            0 models a hard failure; fractions model a link retrained at
+            reduced width (lane failure).
+          drop: remove the failed channels from the graph entirely instead
+            of keeping them at scaled bandwidth.  The planner view: hop
+            distances, possibility sets and adjacency then reflect the
+            degraded connectivity.  The simulator keeps the full channel
+            set (same indexing) and models the failure through
+            ``channel_bw`` instead, so only use ``drop`` for offline
+            planning artifacts.
+
+        Returns a new :class:`Topology`; ``self`` is unchanged.
+        """
+        ids = []
+        for f in failed:
+            if isinstance(f, (tuple, list, np.ndarray)):
+                ids.append(self.channel_index(f[0], f[1]))
+            else:
+                ids.append(int(f))
+        mask = np.zeros(self.num_channels, dtype=bool)
+        mask[ids] = True
+        if drop:
+            return dataclasses.replace(
+                self, name=self.name + "_degraded",
+                channels=self.channels[~mask],
+                channel_bw=self.channel_bw[~mask])
+        bw = self.channel_bw.copy()
+        bw[mask] = bw[mask] * float(bw_scale)
+        return dataclasses.replace(self, name=self.name + "_degraded",
+                                   channel_bw=bw)
+
 
 # ---------------------------------------------------------------------- #
 # constructors

@@ -21,6 +21,7 @@ __all__ = [
     "transpose",
     "hotspot",
     "tornado",
+    "alltoall",
     "from_pair_counts",
     "PATTERNS",
 ]
@@ -157,6 +158,22 @@ def hotspot(topo: Topology, hot_frac: float = 0.5,
     return _normalize(t + _normalize(extra) * hot_frac)
 
 
+def alltoall(topo: Topology, skew: np.ndarray | None = None) -> np.ndarray:
+    """Expert-parallel all-to-all: every I/O node sends to every other,
+    optionally skewed per *destination* (hot experts receive more).
+
+    ``skew`` is an (N,) relative weight per destination node (default
+    uniform).  This is the ICI collective-scheduling matrix used by the
+    linkload analyses and ``examples/qstar_ici_demo.py``.
+    """
+    w = _endpoint_weights(topo)
+    s = np.ones(topo.num_nodes) if skew is None else np.asarray(
+        skew, np.float64)
+    if s.shape != (topo.num_nodes,):
+        raise ValueError(f"skew shape {s.shape} != ({topo.num_nodes},)")
+    return _normalize(np.outer(w, w * s))
+
+
 def from_pair_counts(topo: Topology, counts: np.ndarray) -> np.ndarray:
     """Build T from measured (s, d) packet counts — the paper's 'statistical
     information' path for realistic workloads (§4.1)."""
@@ -167,6 +184,7 @@ def from_pair_counts(topo: Topology, counts: np.ndarray) -> np.ndarray:
 
 
 PATTERNS = {
+    "alltoall": alltoall,
     "uniform": uniform,
     "shuffle": shuffle,
     "permutation": permutation,

@@ -4,7 +4,13 @@ from .simconfig import Algo, SimConfig, SimResult
 from .sim import run_sim, run_sweep, run_trace, run_trace_sweep
 from .campaign import (CampaignPoint, CampaignResult, CampaignSpec,
                        run_campaign)
+from .ctrl import (ControlledResult, DriftDetector, LinkFail, LinkRecover,
+                   Replan, ReplanConfig, Scenario, TrafficDrift,
+                   TrafficEstimator, run_controlled)
 
 __all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
            "run_trace", "run_trace_sweep", "CampaignSpec", "CampaignPoint",
-           "CampaignResult", "run_campaign"]
+           "CampaignResult", "run_campaign",
+           "ControlledResult", "DriftDetector", "LinkFail", "LinkRecover",
+           "Replan", "ReplanConfig", "Scenario", "TrafficDrift",
+           "TrafficEstimator", "run_controlled"]

@@ -39,7 +39,8 @@ import numpy as np
 from repro.core import traffic as traffic_mod
 from repro.core.qstar import build_plan
 from repro.core.topology import Topology
-from .sim import build_tables, get_runner, make_states, postprocess
+from .sim import (build_tables, get_runner, make_states, postprocess,
+                  queue_occupancy)
 from .simconfig import Algo, SimConfig, SimResult
 
 __all__ = ["CampaignSpec", "CampaignPoint", "CampaignResult",
@@ -65,6 +66,12 @@ class CampaignSpec:
         0 runs each cell as one jitted call of ``base.cycles`` cycles.
       sat_occupancy: source-queue occupancy fraction above which a lane is
         declared saturated.
+      scenarios: optional fault/drift dynamics axis —
+        :class:`repro.noc.ctrl.Scenario` entries.  Empty () keeps the
+        classic static grid; with scenarios, every (algo, pattern,
+        scenario) cell runs through the control plane's event-driven loop
+        (:func:`repro.noc.ctrl.run_controlled`), (rate, seed) points still
+        batched as lanes of one vmapped state.
     """
 
     topo: Topology
@@ -75,6 +82,7 @@ class CampaignSpec:
     base: SimConfig = SimConfig()
     chunk: int = 0
     sat_occupancy: float = 0.9
+    scenarios: tuple = ()
 
     def __post_init__(self):
         if not (self.algos and self.patterns and self.rates and self.seeds):
@@ -83,7 +91,7 @@ class CampaignSpec:
     @property
     def num_points(self) -> int:
         return (len(self.algos) * len(self.patterns) * len(self.rates)
-                * len(self.seeds))
+                * len(self.seeds) * max(len(self.scenarios), 1))
 
     def pattern_items(self) -> list[tuple[str, np.ndarray]]:
         """Resolve the pattern axis to (name, traffic matrix) pairs."""
@@ -110,6 +118,7 @@ class CampaignPoint:
     rate: float
     seed: int
     result: SimResult
+    scenario: str = "static"
 
 
 @dataclasses.dataclass
@@ -128,7 +137,8 @@ class CampaignResult:
 
     def select(self, algo: Algo | None = None, pattern: str | None = None,
                rate: float | None = None,
-               seed: int | None = None) -> list[CampaignPoint]:
+               seed: int | None = None,
+               scenario: str | None = None) -> list[CampaignPoint]:
         out = []
         for p in self.points:
             if algo is not None and p.algo != algo:
@@ -138,6 +148,8 @@ class CampaignResult:
             if rate is not None and p.rate != rate:
                 continue
             if seed is not None and p.seed != seed:
+                continue
+            if scenario is not None and p.scenario != scenario:
                 continue
             out.append(p)
         return out
@@ -160,7 +172,8 @@ class CampaignResult:
         return float(self.mean_over_seeds("throughput", algo,
                                           pattern).max())
 
-    CSV_HEADER = ["pattern", "algo", "rate", "seed", "throughput",
+    CSV_HEADER = ["scenario", "pattern", "algo", "rate", "seed",
+                  "throughput",
                   "offered", "avg_lat", "p50_lat", "p90_lat", "p99_lat",
                   "max_lat", "lcv", "link_load_max", "reorder",
                   "saturated", "meas_cycles"]
@@ -169,7 +182,7 @@ class CampaignResult:
         rows = []
         for p in self.points:
             r = p.result
-            rows.append([p.pattern, p.algo.name, p.rate, p.seed,
+            rows.append([p.scenario, p.pattern, p.algo.name, p.rate, p.seed,
                          f"{r.throughput:.4f}", f"{r.offered:.4f}",
                          f"{r.avg_latency:.1f}", f"{r.p50_latency:.1f}",
                          f"{r.p90_latency:.1f}", f"{r.p99_latency:.1f}",
@@ -181,8 +194,10 @@ class CampaignResult:
     def summary(self) -> str:
         lines = [f"campaign: {self.spec.num_points} points in "
                  f"{self.total_wall_clock_s:.1f}s wall-clock"]
-        for (aname, pat), dt in self.wall_clock_s.items():
-            lines.append(f"  cell {pat:12s} {aname:8s} {dt:6.2f}s")
+        for key, dt in self.wall_clock_s.items():
+            aname, pat = key[0], key[1]
+            scen = f" {key[2]:16s}" if len(key) > 2 else ""
+            lines.append(f"  cell {pat:12s} {aname:8s}{scen} {dt:6.2f}s")
         return "\n".join(lines)
 
 
@@ -197,8 +212,6 @@ def _run_cell(spec: CampaignSpec, cfg: SimConfig, tables, meta,
     batched = make_states(meta, cfg, points)
     total = int(cfg.cycles)
     chunk = int(spec.chunk) or total
-    io_mask = np.asarray(jax.device_get(tables.p_gen)) > 0
-    qcap = float(io_mask.sum() * cfg.src_queue_pkts)
     sat = np.zeros(len(points), bool)
     done = 0
     while done < total:
@@ -206,8 +219,7 @@ def _run_cell(spec: CampaignSpec, cfg: SimConfig, tables, meta,
         runner = get_runner(meta, cfg, step_cycles)
         batched = runner(tables, batched)
         done += step_cycles
-        occ = np.asarray(
-            jax.device_get(batched["q_size"]))[:, io_mask].sum(1) / qcap
+        occ = queue_occupancy(tables, cfg, batched["q_size"])
         sat |= occ >= spec.sat_occupancy
         if done < total and sat.all() and done > cfg.warmup:
             break  # every lane saturated: steady-state verdict reached
@@ -223,37 +235,80 @@ def run_campaign(spec: CampaignSpec, *,
     paper's offline-statistics assumption); pass ``bidor_tables`` (pattern
     name → (N, N) choice table) to override, e.g. with aggregate-trace
     plans.
+
+    With ``spec.scenarios`` set, each (algo, pattern, scenario) cell runs
+    the control plane's event-driven loop instead of the static cell —
+    the scenario's events (link failures, drift epochs) apply mid-run and
+    its policy decides when plans hot-swap.  ``SimResult.link_load_max``
+    then reports the *time-resolved* peak (max over control epochs of the
+    max bandwidth-normalized link load), since a mid-run failure changes
+    the normalization.
     """
     t_start = time.perf_counter()
     cfg0 = spec.base
     points = [(float(r), int(s)) for r in spec.rates for s in spec.seeds]
     out_points: list[CampaignPoint] = []
-    wall: dict[tuple[str, str], float] = {}
+    wall: dict[tuple, float] = {}
     for pat_name, tm in spec.pattern_items():
         choice = None
+        pat_table = None
+        pat_nrank = None   # seed fixed point: scenario replans warm-start
         if Algo.BIDOR in spec.algos:
             if bidor_tables and pat_name in bidor_tables:
                 choice = np.asarray(bidor_tables[pat_name])
+                if spec.scenarios:  # scenario cells need the full plan
+                    pat_plan = build_plan(spec.topo, tm)
+                    pat_table = dataclasses.replace(
+                        pat_plan.table,
+                        choice=np.asarray(choice, np.int8))
+                    pat_nrank = pat_plan.nrank
             else:
-                choice = build_plan(spec.topo, tm).table.choice
+                pat_plan = build_plan(spec.topo, tm)
+                pat_table = pat_plan.table
+                pat_nrank = pat_plan.nrank
+                choice = pat_table.choice
         for algo in spec.algos:
             cfg = cfg0.replace(algo=algo)
-            tables, meta = build_tables(
-                spec.topo, tm, choice if algo == Algo.BIDOR else None,
-                cfg.num_vcs)
-            t0 = time.perf_counter()
-            host, sat = _run_cell(spec, cfg, tables, meta, points)
-            dt = time.perf_counter() - t0
-            wall[(algo.name, pat_name)] = dt
-            for i, (rate, seed) in enumerate(points):
-                o = jax.tree.map(lambda x: x[i], host)
-                res = postprocess(o, cfg, spec.topo, rate=rate, seed=seed,
-                                  saturated=bool(sat[i]))
-                out_points.append(CampaignPoint(
-                    algo=algo, pattern=pat_name, rate=rate, seed=seed,
-                    result=res))
-            if verbose:
-                print(f"campaign cell {pat_name:12s} {algo.name:8s} "
-                      f"{len(points)} pts in {dt:.2f}s", flush=True)
+            for scen in (spec.scenarios or (None,)):
+                t0 = time.perf_counter()
+                if scen is None:
+                    tables, meta = build_tables(
+                        spec.topo, tm,
+                        choice if algo == Algo.BIDOR else None,
+                        cfg.num_vcs)
+                    host, sat = _run_cell(spec, cfg, tables, meta, points)
+                    results = []
+                    for i, (rate, seed) in enumerate(points):
+                        o = jax.tree.map(lambda x: x[i], host)
+                        results.append(postprocess(
+                            o, cfg, spec.topo, rate=rate, seed=seed,
+                            saturated=bool(sat[i])))
+                    scen_name = "static"
+                    key = (algo.name, pat_name)
+                else:
+                    from .ctrl import run_controlled
+                    ctrl_res = run_controlled(
+                        spec.topo, tm, cfg, scen,
+                        rates=[float(r) for r in spec.rates],
+                        seeds=list(spec.seeds),
+                        bidor_table=pat_table if algo == Algo.BIDOR
+                        else None,
+                        nrank0=pat_nrank if algo == Algo.BIDOR else None,
+                        sat_occupancy=spec.sat_occupancy,
+                        verbose=verbose)
+                    results = [ctrl_res.result_with_peak(i)
+                               for i in range(len(points))]
+                    scen_name = scen.name
+                    key = (algo.name, pat_name, scen.name)
+                dt = time.perf_counter() - t0
+                wall[key] = dt
+                for (rate, seed), res in zip(points, results):
+                    out_points.append(CampaignPoint(
+                        algo=algo, pattern=pat_name, rate=rate, seed=seed,
+                        result=res, scenario=scen_name))
+                if verbose:
+                    print(f"campaign cell {pat_name:12s} {algo.name:8s} "
+                          f"{scen_name:12s} {len(points)} pts in {dt:.2f}s",
+                          flush=True)
     return CampaignResult(spec=spec, points=out_points, wall_clock_s=wall,
                           total_wall_clock_s=time.perf_counter() - t_start)

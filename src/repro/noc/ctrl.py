@@ -1,0 +1,487 @@
+"""Quasi-static control plane: fault injection, drift detection, and
+online N-Rank re-planning.
+
+Q-StaR's premise (paper §3.1) is *quasi-static* routing: plans are cheap
+enough to recompute at a coarse timescale as topology and traffic change.
+The simulator alone only replays one offline plan; this module closes the
+loop:
+
+* an **event schedule** (:class:`LinkFail` / :class:`LinkRecover` /
+  :class:`TrafficDrift`) perturbs a running simulation — link bandwidth
+  changes flow through the per-channel gating in :mod:`repro.noc.sim`,
+  traffic epochs swap the generation tables;
+* an **online estimator** (:class:`TrafficEstimator`) accumulates an
+  observed traffic matrix from the per-flow injection counters the
+  simulator already tracks, and a **drift detector**
+  (:class:`DriftDetector`) watches the always-on per-channel forwarding
+  profile for distribution shift;
+* a **re-planner** re-runs N-Rank *warm-started from the previous fixed
+  point* (``w0`` carry), rebuilds BiDOR against the degraded topology
+  (infeasible dimension orders leave the minimization, so every route
+  stays a pure DOR route inside its VC class — deadlock-free by
+  construction), optionally refines with BiDOR-G against the degraded
+  bandwidths, and shedding unroutable pairs at the source (admission
+  control);
+* the new tables **hot-swap** into the running simulation between chunks
+  (:func:`repro.noc.sim.retarget_tables`) without touching in-flight
+  state.
+
+Three policies bracket the design space (the ``dynamics`` benchmark):
+``"oracle"`` replans instantly from ground truth at every event,
+``"stale"`` never replans (the seed repo's behaviour), and ``"online"``
+replans from its own estimates when a fault is signalled or drift is
+detected.  Adaptive routing (odd-even) runs through the same event
+machinery as the per-cycle-reactive contrast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bidor import BiDORTable, bidor, greedy_refine
+from repro.core.nrank import NRankResult, initial_weights, nrank_channel
+from repro.core.qstar import build_plan
+from repro.core.topology import Topology
+from .sim import (build_tables, get_runner, make_states, postprocess,
+                  queue_occupancy, retarget_tables)
+from .simconfig import Algo, SimConfig, SimResult
+
+__all__ = [
+    "LinkFail", "LinkRecover", "TrafficDrift", "Scenario",
+    "TrafficEstimator", "DriftDetector", "ReplanConfig", "Replan",
+    "ControlledResult", "run_controlled",
+]
+
+
+# ---------------------------------------------------------------------- #
+# events & scenarios
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class LinkFail:
+    """Fail (bw_scale = 0) or degrade (0 < bw_scale < 1) directed channels
+    at an absolute cycle.  ``links`` holds (u, n) node pairs; a full
+    bidirectional link is two entries."""
+
+    cycle: int
+    links: tuple
+    bw_scale: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRecover:
+    """Restore the listed channels to their original bandwidth."""
+
+    cycle: int
+    links: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficDrift:
+    """Swap the generation traffic matrix (a new epoch) and optionally
+    scale every lane's injection rate."""
+
+    cycle: int
+    traffic: np.ndarray
+    rate_scale: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named event schedule plus the control policy that faces it.
+
+    ``policy``: "stale" (never replan), "oracle" (replan from ground truth
+    at every event), or "online" (replan from observed estimates on fault
+    signals and detected drift).  Non-BiDOR algorithms ignore the policy —
+    events still apply (they are the environment, not the plan).
+    """
+
+    name: str
+    events: tuple = ()
+    policy: str = "stale"
+    replan: "ReplanConfig | None" = None
+
+    def __post_init__(self):
+        cycles = [e.cycle for e in self.events]
+        if cycles != sorted(cycles):
+            raise ValueError("scenario events must be sorted by cycle")
+        if any(c <= 0 for c in cycles):
+            raise ValueError(
+                "event cycles must be >= 1 (events apply at chunk "
+                "boundaries after the cycle; bake cycle-0 conditions "
+                "into the topology/traffic instead)")
+        if self.policy not in ("stale", "oracle", "online"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+
+
+# ---------------------------------------------------------------------- #
+# online estimation & drift detection
+# ---------------------------------------------------------------------- #
+class TrafficEstimator:
+    """Observed traffic matrix from the simulator's per-flow counters.
+
+    The simulator stamps every generated packet with a per-(source,
+    destination) sequence number (``next_seq``); its per-epoch delta *is*
+    the observed pair-count matrix.  An exponential moving average over
+    epochs keeps the estimate current under drift while smoothing
+    sampling noise — exactly the "statistical information" path of paper
+    §4.1, but gathered online.
+    """
+
+    def __init__(self, num_nodes: int, ema: float = 0.5):
+        self.ema = float(ema)
+        self._m: np.ndarray | None = None
+        self._n = int(num_nodes)
+
+    def update(self, pair_counts: np.ndarray) -> None:
+        """Fold one epoch's (N, N) pair-count delta into the estimate."""
+        c = np.asarray(pair_counts, np.float64)
+        if c.shape != (self._n, self._n):
+            raise ValueError(f"pair_counts shape {c.shape}")
+        tot = c.sum()
+        if tot <= 0:
+            return
+        obs = c / tot
+        if self._m is None:
+            self._m = obs
+        else:
+            self._m = (1.0 - self.ema) * self._m + self.ema * obs
+
+    @property
+    def matrix(self) -> np.ndarray | None:
+        """Current normalized estimate (None until the first packets)."""
+        if self._m is None:
+            return None
+        m = self._m.copy()
+        np.fill_diagonal(m, 0.0)
+        s = m.sum()
+        return m / s if s > 0 else None
+
+
+class DriftDetector:
+    """Distribution-shift detector over the per-channel forwarding profile.
+
+    The reference profile is pinned at plan time; each epoch's observed
+    profile (always-on ``chan_seen`` deltas, normalized to unit sum) is
+    compared by total-variation distance.  Distance above ``threshold``
+    flags drift — the re-planner then resets the reference.
+    """
+
+    def __init__(self, threshold: float = 0.25):
+        self.threshold = float(threshold)
+        self._ref: np.ndarray | None = None
+        self.last_distance = 0.0
+
+    def reset(self) -> None:
+        """Forget the reference (called after a replan)."""
+        self._ref = None
+        self.last_distance = 0.0
+
+    def update(self, chan_counts: np.ndarray) -> bool:
+        """Feed one epoch's per-channel counts; True ⇔ drift detected."""
+        c = np.asarray(chan_counts, np.float64)
+        tot = c.sum()
+        if tot <= 0:
+            return False
+        prof = c / tot
+        if self._ref is None:
+            self._ref = prof
+            return False
+        self.last_distance = 0.5 * float(np.abs(prof - self._ref).sum())
+        return self.last_distance > self.threshold
+
+
+# ---------------------------------------------------------------------- #
+# re-planning
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Knobs of the online re-planner."""
+
+    epoch: int = 500            # control period (cycles) between checks
+    drift_threshold: float = 0.25
+    ema: float = 0.5            # estimator smoothing
+    warm: bool = True           # carry the previous N-Rank fixed point
+    greedy_sweeps: int = 2      # BiDOR-G refinement against degraded bw
+    sat_occupancy: float = 0.9  # source-queue fraction flagging saturation
+
+
+@dataclasses.dataclass(frozen=True)
+class Replan:
+    """One re-planning action (for logs/plots/tests)."""
+
+    cycle: int
+    trigger: str                # "fault" | "drift" | "event"
+    iterations: int             # N-Rank evolution iterations
+    unroutable_pairs: int
+    drift_distance: float = 0.0
+
+
+def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
+           prev: "object | None" = None, *,
+           warm: bool = True, greedy_sweeps: int = 2,
+           ) -> tuple[BiDORTable, "object"]:
+    """One quasi-static re-planning step against a degraded fabric.
+
+    Args:
+      topo: the intact topology (full channel indexing).
+      traffic: the (estimated or true) traffic matrix to plan for.
+      channel_bw: current per-channel bandwidth; 0 marks hard-failed
+        channels.
+      prev: previous :class:`repro.core.nrank.NRankResult` for the
+        warm-start carry (its residual fixed point seeds the new
+        evolution on top of the fresh eq. (1) weights).
+
+    Returns (table, nrank_result).  ``table.unroutable`` flags pairs no
+    dimension order can serve; shed their generation upstream.
+    """
+    bw = np.asarray(channel_bw, np.float64)
+    down = np.nonzero(bw <= 0)[0]
+    plan_topo = dataclasses.replace(topo, channel_bw=bw)
+    # N-Rank sees the degraded connectivity (hard-failed channels leave
+    # the possibility sets); BiDOR masks them from the route choice.
+    nr_topo = plan_topo.degrade(down, drop=True) if down.size else plan_topo
+    w0 = None
+    if warm and prev is not None:
+        w0 = initial_weights(traffic) + np.asarray(prev.w_final, np.float64)
+    nr = nrank_channel(nr_topo, traffic, w0=w0)
+    table = bidor(plan_topo, nr.w_nr,
+                  down_channels=down if down.size else None)
+    if greedy_sweeps > 0:
+        table = greedy_refine(plan_topo, traffic, table,
+                              sweeps=greedy_sweeps)
+    return table, nr
+
+
+# ---------------------------------------------------------------------- #
+# the controlled run
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ControlledResult:
+    """Output of one controlled (event-driven) run."""
+
+    scenario: str
+    policy: str
+    points: list                 # [(rate, seed), ...] lane order
+    results: list                # [SimResult, ...] per lane
+    replans: list                # [Replan, ...]
+    # time-resolved load: per lane, the peak over control epochs of the
+    # max bandwidth-normalized link load (the completion-time bottleneck
+    # metric; a saturated degraded link pins it at ≈ 1)
+    link_peak: np.ndarray
+    epoch_bounds: list           # [(t0, t1), ...] control epochs
+
+    def result_with_peak(self, i: int) -> SimResult:
+        """Lane i's SimResult with the time-resolved link peak in
+        ``link_load_max`` (the static field would normalize by the intact
+        bandwidths)."""
+        return dataclasses.replace(self.results[i],
+                                   link_load_max=float(self.link_peak[i]))
+
+
+def _apply_events(events, bw, topo, base_bw):
+    """Fold one boundary's events into the environment; returns the new
+    (bw, traffic, rate_scale, kinds) with traffic/rate None if unchanged."""
+    traffic = None
+    rate_scale = None
+    kinds = set()
+    for ev in events:
+        if isinstance(ev, LinkFail):
+            ids = [topo.channel_index(*l) for l in ev.links]
+            bw = bw.copy()
+            bw[ids] = base_bw[ids] * ev.bw_scale
+            kinds.add("fault")
+        elif isinstance(ev, LinkRecover):
+            ids = [topo.channel_index(*l) for l in ev.links]
+            bw = bw.copy()
+            bw[ids] = base_bw[ids]
+            kinds.add("fault")
+        elif isinstance(ev, TrafficDrift):
+            traffic = np.asarray(ev.traffic, np.float64)
+            rate_scale = float(ev.rate_scale)
+            kinds.add("drift")
+        else:
+            raise TypeError(f"unknown event {ev!r}")
+    return bw, traffic, rate_scale, kinds
+
+
+def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
+                   scenario: Scenario | None = None, *,
+                   rates: list[float] | None = None,
+                   seeds: list[int] | None = None,
+                   bidor_table: BiDORTable | None = None,
+                   nrank0: NRankResult | None = None,
+                   sat_occupancy: float | None = None,
+                   verbose: bool = False) -> ControlledResult:
+    """Run a simulation under an event schedule with a control policy.
+
+    Lanes are the (rate, seed) grid, batched exactly as
+    :func:`repro.noc.sim.run_sweep` (same per-point PRNG streams): with an
+    empty scenario the chunked, hot-swapping loop is bit-identical to the
+    single-call sweep (asserted by ``tests/test_ctrl.py``).
+
+    The run advances in control epochs (``scenario.replan.epoch`` cycles,
+    event cycles added as extra boundaries).  At each boundary the
+    environment applies due events, the controller reads the on-device
+    counters, and — policy permitting — re-plans and hot-swaps tables.
+    """
+    scenario = scenario or Scenario("static")
+    rc = scenario.replan or ReplanConfig()
+    policy = scenario.policy
+    rates = [float(r) for r in (rates or [cfg.injection_rate])]
+    seeds = [int(s) for s in (seeds or [cfg.seed])]
+    points = [(r, s) for r in rates for s in seeds]
+
+    choice = None
+    table = bidor_table
+    nr_prev = nrank0   # seed plan's fixed point: first replan warm-starts
+    if cfg.algo == Algo.BIDOR:
+        if table is None:
+            plan0 = build_plan(topo, traffic)
+            table, nr_prev = plan0.table, plan0.nrank
+        choice = table.choice
+    tables, meta = build_tables(topo, traffic, choice, cfg.num_vcs)
+    batched = make_states(meta, cfg, points)
+
+    # environment state
+    base_bw = np.asarray(topo.channel_bw, np.float64)
+    bw = base_bw.copy()
+    cur_traffic = np.asarray(traffic, np.float64)
+    fault_pending = False
+    cur_unroutable = None    # active admission-control mask (shed pairs)
+
+    estimator = TrafficEstimator(topo.num_nodes, ema=rc.ema)
+    detector = DriftDetector(threshold=rc.drift_threshold)
+    replans: list[Replan] = []
+
+    # boundary grid: control epochs ∪ event cycles ∪ end of run
+    total = int(cfg.cycles)
+    bounds = set(range(rc.epoch, total, rc.epoch)) | {total}
+    bounds |= {int(e.cycle) for e in scenario.events if 0 < e.cycle < total}
+    bounds = sorted(bounds)
+
+    nlanes = len(points)
+    prev_seq = np.zeros((nlanes,) + (meta["N"],) * 2, np.int64)
+    prev_seen = np.zeros((nlanes, meta["C"]), np.int64)
+    prev_fwd = np.zeros((nlanes, meta["C"]), np.int64)
+    prev_meas = np.zeros(nlanes, np.int64)
+    link_peak = np.zeros(nlanes)
+    epoch_bounds = []
+    sat_th = rc.sat_occupancy if sat_occupancy is None else sat_occupancy
+    sat = np.zeros(nlanes, bool)
+
+    t0 = 0
+    for t1 in bounds:
+        runner = get_runner(meta, cfg, t1 - t0)
+        batched = runner(tables, batched)
+        epoch_bounds.append((t0, t1))
+        t0 = t1
+
+        # ---- read counters (one small host transfer) ---- #
+        seq = np.asarray(jax.device_get(batched["next_seq"]), np.int64)
+        seen = np.asarray(jax.device_get(batched["chan_seen"]), np.int64)
+        fwd = np.asarray(jax.device_get(batched["chan_fwd"]), np.int64)
+        meas = np.asarray(jax.device_get(batched["meas_cnt"]), np.int64)
+        d_seq, d_seen = seq - prev_seq, seen - prev_seen
+        d_fwd, d_meas = fwd - prev_fwd, meas - prev_meas
+        prev_seq, prev_seen, prev_fwd, prev_meas = seq, seen, fwd, meas
+
+        # time-resolved max normalized link load (this epoch's bw)
+        live = bw > 0
+        for i in range(nlanes):
+            if d_meas[i] > 0 and live.any():
+                loads = d_fwd[i, live] / float(d_meas[i]) / bw[live]
+                link_peak[i] = max(link_peak[i], float(loads.max()))
+
+        sat |= queue_occupancy(tables, cfg, batched["q_size"]) >= sat_th
+
+        estimator.update(d_seq.sum(axis=0))
+        drifted = detector.update(d_seen.sum(axis=0))
+
+        if t1 >= total:
+            break
+
+        # ---- apply due events (the environment) ---- #
+        due = [e for e in scenario.events if e.cycle == t1]
+        event_kinds: set = set()
+        if due:
+            bw, new_traffic, rate_scale, event_kinds = _apply_events(
+                due, bw, topo, base_bw)
+            gen_traffic = new_traffic
+            if new_traffic is not None and cur_unroutable is not None:
+                # an active shed outlives a traffic epoch: the dead link
+                # is still dead, so the new matrix generates under the
+                # same admission-control mask until the next replan
+                gen_traffic = np.where(cur_unroutable, 0.0, new_traffic)
+            tables = retarget_tables(
+                tables, topo,
+                traffic=gen_traffic,
+                channel_bw=bw if "fault" in event_kinds else None)
+            if new_traffic is not None:
+                cur_traffic = new_traffic
+            if rate_scale is not None:
+                # absolute vs base: rate_scale=1.0 restores the original
+                # injection rates after a previously scaled epoch
+                batched["rate"] = jnp.asarray(
+                    [r * rate_scale for r, _ in points], jnp.float32)
+            fault_pending |= "fault" in event_kinds
+
+        # ---- control decision ---- #
+        if cfg.algo != Algo.BIDOR or policy == "stale":
+            continue
+        if policy == "oracle":
+            do, trigger, m = bool(due), "event", cur_traffic
+        else:  # online
+            # faults are signalled out of band (hardware link state, as in
+            # real fabrics); traffic drift must be *detected*
+            trigger = "fault" if fault_pending else "drift"
+            do = fault_pending or drifted
+            m = estimator.matrix
+            if m is None:
+                # no packets observed yet: fall back to the offline
+                # statistics the initial plan was built from (never the
+                # ground-truth current matrix — that would be the oracle)
+                m = np.asarray(traffic, np.float64) if fault_pending \
+                    else None
+                do = do and m is not None
+        if not do:
+            continue
+        drift_dist = detector.last_distance
+        table, nr_prev = replan(
+            topo, m, bw, nr_prev,
+            warm=rc.warm, greedy_sweeps=rc.greedy_sweeps)
+        # admission control: shed unroutable pairs from generation; when
+        # the new plan can serve everything (e.g. after LinkRecover),
+        # restore the full current matrix — a previous shed must not
+        # outlive the fault that caused it
+        gen = cur_traffic
+        cur_unroutable = None
+        if table.unroutable is not None and table.unroutable.any():
+            cur_unroutable = table.unroutable
+            gen = np.where(cur_unroutable, 0.0, cur_traffic)
+        tables = retarget_tables(tables, topo, choice=table.choice,
+                                 traffic=gen)
+        detector.reset()
+        fault_pending = False
+        replans.append(Replan(
+            cycle=t1, trigger=trigger, iterations=nr_prev.iterations,
+            unroutable_pairs=int(table.unroutable.sum())
+            if table.unroutable is not None else 0,
+            drift_distance=drift_dist))
+        if verbose:
+            print(f"ctrl[{scenario.name}/{policy}] replan @ {t1} "
+                  f"({trigger}), {nr_prev.iterations} iters", flush=True)
+
+    results = []
+    host = jax.device_get(batched)
+    for i, (rate, seed) in enumerate(points):
+        o = jax.tree.map(lambda x: x[i], host)
+        results.append(postprocess(o, cfg, topo, rate=rate, seed=seed,
+                                   saturated=bool(sat[i])))
+    return ControlledResult(
+        scenario=scenario.name, policy=policy, points=points,
+        results=results, replans=replans, link_peak=link_peak,
+        epoch_bounds=epoch_bounds)

@@ -59,6 +59,24 @@ class _Tables(NamedTuple):
     v_of: jnp.ndarray      # (NIN,) vc of each input
     chan_src_n: jnp.ndarray  # (C,) source node of each channel
     chan_src_p: jnp.ndarray  # (C,) output port of each channel at its source
+    chan_of: jnp.ndarray   # (N, P) int32: channel at (node, out-port); C if none
+    chan_bw: jnp.ndarray   # (C,) float32 relative bandwidth (0 = link down)
+
+
+def _gen_tables(topo: Topology, traffic) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Packet-generation tables from a traffic matrix: per-source
+    destination CDF and per-node generation probability at rate 1
+    (× rate / packet_len at runtime).  Single source of truth for
+    ``build_tables`` and the ``retarget_tables`` hot-swap path."""
+    t = np.asarray(traffic, np.float64)
+    row = t.sum(1)
+    with np.errstate(invalid="ignore"):
+        cdf = np.cumsum(
+            np.where(row[:, None] > 0,
+                     t / np.maximum(row, 1e-300)[:, None], 0), 1)
+    # node share ∝ its traffic row sum; total I/O ports normalize
+    p_gen = row * topo.io_weights.sum()
+    return jnp.asarray(cdf, jnp.float32), jnp.asarray(p_gen, jnp.float32)
 
 
 def build_tables(topo: Topology, traffic: np.ndarray,
@@ -76,30 +94,69 @@ def build_tables(topo: Topology, traffic: np.ndarray,
     for c in range(topo.num_channels):
         u = int(topo.channels[c, 0])
         recv_port[u, topo.channel_port[c]] = topo.port_of_channel_at_receiver[c]
-    t = np.asarray(traffic, np.float64)
-    row = t.sum(1)
-    with np.errstate(invalid="ignore"):
-        cdf = np.cumsum(np.where(row[:, None] > 0, t / np.maximum(row, 1e-300)[:, None], 0), 1)
-    # p_gen (at rate=1 flit/cycle/port): node share ∝ its traffic row sum
-    total_ports = topo.io_weights.sum()
-    p_gen = row * total_ports  # × rate / packet_len at runtime
+    cdf, p_gen = _gen_tables(topo, traffic)
     nin = n * p * v
     idx = np.arange(nin)
+    chan_of = np.full((n, p), topo.num_channels, np.int32)
+    chan_of[topo.channels[:, 0], topo.channel_port] = np.arange(
+        topo.num_channels, dtype=np.int32)
     tables = _Tables(
         port=jnp.asarray(port), choice=jnp.asarray(choice),
         neighbor=jnp.asarray(neighbor), recv_port=jnp.asarray(recv_port),
-        cdf=jnp.asarray(cdf, jnp.float32),
-        p_gen=jnp.asarray(p_gen, jnp.float32),
+        cdf=cdf, p_gen=p_gen,
         coords=jnp.asarray(topo.coords.astype(np.int32)),
         n_of=jnp.asarray(idx // (p * v)),
         p_of=jnp.asarray((idx // v) % p),
         v_of=jnp.asarray(idx % v),
         chan_src_n=jnp.asarray(topo.channels[:, 0].astype(np.int32)),
         chan_src_p=jnp.asarray(topo.channel_port.astype(np.int32)),
+        chan_of=jnp.asarray(chan_of),
+        chan_bw=jnp.asarray(topo.channel_bw, jnp.float32),
     )
     meta = dict(N=n, P=p, V=v, NIN=nin, P_LOCAL=topo.port_local,
                 W=int(topo.dims[0]), C=topo.num_channels)
     return tables, meta
+
+
+def queue_occupancy(tables: _Tables, cfg: SimConfig,
+                    q_size) -> np.ndarray:
+    """Per-lane source-queue occupancy fraction over the I/O-capable
+    nodes — the lane-saturation criterion shared by the campaign
+    early-exit and the control plane's saturation flag."""
+    io_mask = np.asarray(jax.device_get(tables.p_gen)) > 0
+    qcap = float(io_mask.sum() * cfg.src_queue_pkts)
+    return np.asarray(jax.device_get(q_size))[:, io_mask].sum(1) / qcap
+
+
+def retarget_tables(tables: _Tables, topo: Topology, *,
+                    traffic: np.ndarray | None = None,
+                    choice: np.ndarray | None = None,
+                    channel_bw: np.ndarray | None = None) -> _Tables:
+    """Plan hot-swap path: a new `_Tables` with only the requested fields
+    replaced.
+
+    Tables are *traced* runner arguments, so swapping them between chunks
+    re-uses the cached jit compilation and leaves all in-flight state
+    (buffers, locks, source queues, statistics) untouched — the mechanism
+    behind the quasi-static control plane (:mod:`repro.noc.ctrl`):
+
+    * ``traffic`` — new generation matrix (destination CDF + per-node
+      injection probability are rebuilt; drift epochs).
+    * ``choice`` — new BiDOR plan; only packets generated after the swap
+      follow it, in-flight packets keep the order stamped at injection.
+    * ``channel_bw`` — link fail/recover/degrade events.
+
+    Passing nothing returns an identical table set (the empty-schedule
+    identity asserted by ``tests/test_ctrl.py``).
+    """
+    kw = {}
+    if traffic is not None:
+        kw["cdf"], kw["p_gen"] = _gen_tables(topo, traffic)
+    if choice is not None:
+        kw["choice"] = jnp.asarray(np.asarray(choice, np.int32))
+    if channel_bw is not None:
+        kw["chan_bw"] = jnp.asarray(np.asarray(channel_bw), jnp.float32)
+    return tables._replace(**kw) if kw else tables
 
 
 def fresh_state(meta: dict, cfg: SimConfig):
@@ -126,6 +183,7 @@ def fresh_state(meta: dict, cfg: SimConfig):
         exp_seq=z((n, n)), rbits=jnp.zeros((n, n), jnp.uint32),
         # statistics
         node_fwd=z((n,)), eject_flits=z((n,)), chan_fwd=z((meta["C"],)),
+        chan_seen=z((meta["C"],)),
         lat_sum=z(()), lat_cnt=z(()), lat_max=z(()),
         lat_hist=z((cfg.lat_bins,)),
         reorder_max=z(()), injected=z(()), offered=z(()), dropped=z(()),
@@ -345,7 +403,19 @@ def _make_step(meta: dict, cfg: SimConfig):
             jnp.clip(recv_idx, 0, nin - 1)] < b)
         vc_free = state["out_held"][t.n_of, jnp.clip(op, 0, p - 1), ov] == -1
         needs_alloc = g["head"] & ~locked & ~is_eject
-        elig = valid & has_credit & (vc_free | ~needs_alloc)
+        # fractional channel bandwidth: channel c may transmit this cycle
+        # iff the fixed-rate service schedule ⌊(cyc+1)·bw⌋ − ⌊cyc·bw⌋ fires
+        # (bw = 1 ⇒ every cycle, bit-identical to the ungated simulator;
+        # bw = 0 ⇒ never — a dead link).  Degraded links come from the
+        # control plane's fault events (repro.noc.ctrl).
+        cycf = cycle.astype(jnp.float32)
+        chan_live = (jnp.floor((cycf + 1.0) * t.chan_bw)
+                     - jnp.floor(cycf * t.chan_bw)) >= 1.0
+        chan_live = jnp.concatenate(
+            [chan_live, jnp.zeros((1,), bool)])  # sentinel: no channel
+        chan_ok = is_eject | chan_live[
+            t.chan_of[t.n_of, jnp.clip(op, 0, p - 1)]]
+        elig = valid & has_credit & chan_ok & (vc_free | ~needs_alloc)
 
         # ---------------- 5. switch allocation (round-robin) ------------ #
         # all output ports allocated at once: score (N, PV, P), winner per
@@ -417,6 +487,10 @@ def _make_step(meta: dict, cfg: SimConfig):
         # network move — a gather at compile-time-constant indices
         state["chan_fwd"] = state["chan_fwd"] + (
             net & measuring)[t.chan_src_n, t.chan_src_p]
+        # always-on per-channel counter (control plane's drift detector
+        # needs link profiles during warmup and drain too)
+        state["chan_seen"] = state["chan_seen"] + (
+            net[t.chan_src_n, t.chan_src_p])
         # ejects only ever leave through the local output port, so all
         # eject/latency/reorder statistics live on its (N,) column
         ej_n = granted[:, p_local]
@@ -531,7 +605,10 @@ def postprocess(o: dict, cfg: SimConfig, topo: Topology, *,
     load = o["node_fwd"].astype(np.float64) / meas
     active = load[load > 1e-9]
     lat_cnt = max(int(o["lat_cnt"]), 1)
-    link = o["chan_fwd"].astype(np.float64) / meas / topo.channel_bw
+    bw = np.asarray(topo.channel_bw, np.float64)
+    flits = o["chan_fwd"].astype(np.float64) / meas
+    # dead (bw = 0) channels never forward, so 0/0 → 0 by convention
+    link = flits / np.where(bw > 0, bw, 1.0)
     hist = o["lat_hist"]
     return SimResult(
         algo=Algo(cfg.algo), injection_rate=float(rate),

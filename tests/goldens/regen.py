@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
                                 "src"))
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "campaign_4x4.json")
+CTRL_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "ctrl_4x4.json")
 
 
 def golden_spec():
@@ -34,6 +35,31 @@ def golden_spec():
         rates=(0.15, 0.5),
         seeds=(0, 1),
         base=SimConfig(cycles=1000, warmup=300, drain=100),
+    )
+
+
+def ctrl_spec():
+    """Pinned fault-scenario campaign: one central link retrains at 25%
+    width mid-measure; the stale and online control policies face it."""
+    from repro.core import mesh2d
+    from repro.noc import (Algo, CampaignSpec, LinkFail, ReplanConfig,
+                           Scenario, SimConfig)
+
+    fail = (LinkFail(cycle=1200, links=((5, 6), (6, 5)), bw_scale=0.25),)
+    rc = ReplanConfig(epoch=400)
+    return CampaignSpec(
+        topo=mesh2d(4, 4),
+        algos=(Algo.BIDOR,),
+        patterns=("uniform",),
+        rates=(0.35,),
+        seeds=(0, 1),
+        base=SimConfig(cycles=2400, warmup=400),
+        scenarios=(
+            Scenario("linkfail_stale", events=fail, policy="stale",
+                     replan=rc),
+            Scenario("linkfail_online", events=fail, policy="online",
+                     replan=rc),
+        ),
     )
 
 
@@ -66,12 +92,49 @@ def compute_goldens() -> dict:
     }
 
 
+def compute_ctrl_goldens() -> dict:
+    from repro.noc import run_campaign
+
+    res = run_campaign(ctrl_spec())
+    points = {}
+    for p in res.points:
+        r = p.result
+        key = f"{p.scenario}/{p.algo.name}/r{p.rate}/s{p.seed}"
+        points[key] = {
+            "injected": r.injected_flits,
+            "ejected": r.ejected_flits,
+            "in_flight": r.in_flight_flits,
+            "reorder": r.reorder_value,
+            "meas_cycles": r.meas_cycles,
+            "throughput": round(r.throughput, 6),
+            "avg_latency": round(r.avg_latency, 6),
+            "p50_latency": round(r.p50_latency, 6),
+            "p99_latency": round(r.p99_latency, 6),
+            "link_load_max": round(r.link_load_max, 6),
+            "lcv": round(r.lcv, 6),
+        }
+    return {
+        "description": "4x4-mesh fault-scenario campaign (one link "
+                       "degraded to 25% width mid-measure; stale vs "
+                       "online control policy; see tests/goldens/"
+                       "regen.py); pins the control plane's event "
+                       "application, hot swap and re-planning",
+        "points": points,
+    }
+
+
 def main():
     goldens = compute_goldens()
     with open(GOLDEN_PATH, "w") as f:
         json.dump(goldens, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {len(goldens['points'])} golden points to {GOLDEN_PATH}")
+    ctrl = compute_ctrl_goldens()
+    with open(CTRL_GOLDEN_PATH, "w") as f:
+        json.dump(ctrl, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(ctrl['points'])} ctrl golden points to "
+          f"{CTRL_GOLDEN_PATH}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,267 @@
+"""Control plane (repro.noc.ctrl): event schedules, estimation, drift
+detection, fault-aware re-planning, and the plan hot-swap path."""
+
+import numpy as np
+import pytest
+
+from repro.core import build_plan, link_load, mesh2d, traffic
+from repro.core.bidor import route_feasibility
+from repro.core.nrank import nrank_channel
+from repro.core.routes import dimension_orders, walk_routes
+from repro.noc import (Algo, DriftDetector, LinkFail, LinkRecover,
+                       ReplanConfig, Scenario, SimConfig, TrafficDrift,
+                       TrafficEstimator, run_controlled)
+from repro.noc.sim import run_sweep
+
+TOPO = mesh2d(4, 4)
+UNI = traffic.uniform(TOPO)
+CFG = SimConfig(algo=Algo.BIDOR, cycles=3000, warmup=500,
+                injection_rate=0.35)
+PLAN = build_plan(TOPO, UNI)
+FAIL_LINKS = ((5, 6), (6, 5))
+
+
+# ---------------------------------------------------------------------- #
+# hot swap / identity
+# ---------------------------------------------------------------------- #
+def test_empty_schedule_hot_swap_is_bit_identical_to_fresh_run():
+    """The chunked, table-swapping control loop with NO events must equal
+    the single-call sweep exactly — the hot-swap path itself cannot
+    perturb the simulation."""
+    for algo in (Algo.BIDOR, Algo.XY, Algo.ODDEVEN):
+        cfg = CFG.replace(algo=algo)
+        table = PLAN.table if algo == Algo.BIDOR else None
+        ctrl = run_controlled(
+            TOPO, UNI, cfg,
+            Scenario("empty", replan=ReplanConfig(epoch=400)),
+            bidor_table=table)
+        ref = run_sweep(TOPO, UNI, cfg, [cfg.injection_rate],
+                        bidor_table=table)[0]
+        r = ctrl.results[0]
+        assert r.injected_flits == ref.injected_flits, algo
+        assert r.ejected_flits == ref.ejected_flits, algo
+        assert r.in_flight_flits == ref.in_flight_flits, algo
+        assert r.reorder_value == ref.reorder_value, algo
+        assert np.isclose(r.avg_latency, ref.avg_latency), algo
+        assert not ctrl.replans
+
+
+def test_lanes_match_sweep_grid():
+    rates, seeds = [0.2, 0.4], [0, 7]
+    ctrl = run_controlled(TOPO, UNI, CFG, None, rates=rates, seeds=seeds,
+                          bidor_table=PLAN.table)
+    assert ctrl.points == [(r, s) for r in rates for s in seeds]
+    for (rate, seed), res in zip(ctrl.points, ctrl.results):
+        ref = run_sweep(TOPO, UNI, CFG, [rate], bidor_table=PLAN.table,
+                        seeds=[seed])[0]
+        assert res.injected_flits == ref.injected_flits, (rate, seed)
+
+
+# ---------------------------------------------------------------------- #
+# the headline: online replanning beats the stale plan under a failure
+# ---------------------------------------------------------------------- #
+def test_online_replan_beats_stale_on_max_link_load_under_failure():
+    fail = (LinkFail(cycle=1500, links=FAIL_LINKS, bw_scale=0.25),)
+    rc = ReplanConfig(epoch=500)
+    stale = run_controlled(
+        TOPO, UNI, CFG, Scenario("f", events=fail, policy="stale",
+                                 replan=rc), bidor_table=PLAN.table)
+    online = run_controlled(
+        TOPO, UNI, CFG, Scenario("f", events=fail, policy="online",
+                                 replan=rc), bidor_table=PLAN.table)
+    assert not stale.replans
+    assert online.replans and online.replans[0].trigger == "fault"
+    assert online.link_peak[0] < stale.link_peak[0]
+    # replanning must not cost delivered throughput
+    assert (online.results[0].throughput
+            >= stale.results[0].throughput * 0.98)
+
+
+def test_oracle_replans_at_every_event():
+    ev = (LinkFail(cycle=1000, links=FAIL_LINKS, bw_scale=0.5),
+          LinkRecover(cycle=2000, links=FAIL_LINKS))
+    res = run_controlled(
+        TOPO, UNI, CFG, Scenario("fr", events=ev, policy="oracle",
+                                 replan=ReplanConfig(epoch=500)),
+        bidor_table=PLAN.table)
+    assert [r.cycle for r in res.replans] == [1000, 2000]
+    assert all(r.trigger == "event" for r in res.replans)
+
+
+def test_drift_detection_triggers_online_replan():
+    drift = (TrafficDrift(cycle=1000, traffic=traffic.transpose(TOPO)),)
+    res = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("d", events=drift, policy="online",
+                 replan=ReplanConfig(epoch=500, drift_threshold=0.15)),
+        bidor_table=PLAN.table)
+    drifts = [r for r in res.replans if r.trigger == "drift"]
+    assert drifts and drifts[0].cycle >= 1000
+    assert drifts[0].drift_distance > 0.15
+
+
+def test_events_apply_to_non_bidor_algorithms_without_replanning():
+    """Events are the environment: adaptive routing sees the degraded
+    link (and its saturation) but never replans."""
+    fail = (LinkFail(cycle=1000, links=FAIL_LINKS, bw_scale=0.25),)
+    res = run_controlled(
+        TOPO, UNI, CFG.replace(algo=Algo.ODDEVEN),
+        Scenario("f", events=fail, policy="online",
+                 replan=ReplanConfig(epoch=500)))
+    assert not res.replans
+    r = res.results[0]
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+
+
+def test_hard_failure_sheds_unroutable_pairs_and_conserves_flits():
+    """bw=0 on a row link: same-row pairs crossing it are unroutable
+    under both DOR orders; the online planner sheds them at the source
+    and the network still conserves flits."""
+    fail = (LinkFail(cycle=1000, links=FAIL_LINKS, bw_scale=0.0),)
+    res = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("hard", events=fail, policy="online",
+                 replan=ReplanConfig(epoch=500)),
+        bidor_table=PLAN.table)
+    assert res.replans and res.replans[0].unroutable_pairs > 0
+    r = res.results[0]
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+    assert r.ejected_flits > 0
+
+
+def test_traffic_drift_does_not_unshed_while_fault_persists():
+    """A traffic epoch arriving while a hard fault is still active must
+    keep the shed pairs shed: re-enabling them would wedge packets on a
+    table that routes over the dead (never-live) channel."""
+    ev = (LinkFail(cycle=800, links=FAIL_LINKS, bw_scale=0.0),
+          # same matrix: below any drift threshold, so no further replan
+          TrafficDrift(cycle=1600, traffic=UNI))
+    res = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("fd", events=ev, policy="online",
+                 replan=ReplanConfig(epoch=400, drift_threshold=0.9)),
+        bidor_table=PLAN.table)
+    assert len(res.replans) == 1  # only the fault replan
+    r = res.results[0]
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+    # nothing may be wedged behind the dead link at drain: with the shed
+    # intact, deliveries continue all run (vs ~0 if pairs were re-enabled)
+    assert r.ejected_flits > 0.8 * r.injected_flits
+
+
+def test_recovery_restores_shed_traffic():
+    """After a hard failure sheds unroutable pairs, a LinkRecover replan
+    must restore their generation — the shed may not outlive the fault."""
+    fail_only = (LinkFail(cycle=800, links=FAIL_LINKS, bw_scale=0.0),)
+    fail_rec = fail_only + (LinkRecover(cycle=1600, links=FAIL_LINKS),)
+    rc = ReplanConfig(epoch=400)
+    shed = run_controlled(
+        TOPO, UNI, CFG, Scenario("f", events=fail_only, policy="online",
+                                 replan=rc), bidor_table=PLAN.table)
+    rec = run_controlled(
+        TOPO, UNI, CFG, Scenario("fr", events=fail_rec, policy="online",
+                                 replan=rc), bidor_table=PLAN.table)
+    assert rec.replans[0].unroutable_pairs > 0
+    assert rec.replans[-1].unroutable_pairs == 0
+    # restored generation injects more than the permanently shed run
+    assert (rec.results[0].injected_flits
+            > shed.results[0].injected_flits)
+
+
+# ---------------------------------------------------------------------- #
+# components
+# ---------------------------------------------------------------------- #
+def test_traffic_estimator_converges_to_observed_mix():
+    est = TrafficEstimator(3, ema=0.5)
+    assert est.matrix is None
+    target = np.array([[0, 2, 0], [0, 0, 1], [1, 0, 0]], float)
+    for _ in range(12):
+        est.update(target * 100)
+    m = est.matrix
+    np.testing.assert_allclose(m, target / target.sum(), atol=1e-6)
+    est.update(np.zeros((3, 3)))  # empty epoch: no-op, not a wipe
+    np.testing.assert_allclose(est.matrix, m)
+
+
+def test_drift_detector_reference_and_reset():
+    det = DriftDetector(threshold=0.2)
+    a = np.array([10.0, 10.0, 0.0, 0.0])
+    b = np.array([0.0, 0.0, 10.0, 10.0])
+    assert not det.update(a)        # first profile pins the reference
+    assert not det.update(a * 3)    # same distribution, any scale
+    assert det.update(b)            # total shift
+    assert det.last_distance == pytest.approx(1.0)
+    det.reset()
+    assert not det.update(b)        # new reference after replan
+
+
+def test_degrade_and_feasibility_are_consistent():
+    c = TOPO.channel_index(5, 6)
+    hard = TOPO.degrade([(5, 6)], bw_scale=0.0)
+    assert hard.down_channels.tolist() == [c]
+    assert TOPO.channel_bw[c] == 1.0  # original untouched
+    feas = route_feasibility(TOPO, dimension_orders(2), [c])
+    # same-row pairs crossing the link: neither XY nor YX feasible
+    assert not feas[:, 5, 6].any() and not feas[:, 4, 7].any()
+    # other-row pairs keep at least one order
+    assert feas[:, 1, 10].any()
+    plan = build_plan(TOPO, UNI, down_channels=np.array([c]))
+    un = plan.table.unroutable
+    assert un is not None and un[5, 6] and un[4, 7] and not un[1, 10]
+    # every non-shed chosen route avoids the failed channel
+    for oi, order in enumerate(dimension_orders(2)):
+        seq = walk_routes(TOPO, order)
+        sel = (plan.table.choice == oi) & ~un
+        np.fill_diagonal(sel, False)
+        for s, d in zip(*np.nonzero(sel)):
+            nodes = seq[s, d]
+            for h in range(len(nodes) - 1):
+                a, b = int(nodes[h]), int(nodes[h + 1])
+                if a == b:
+                    break
+                assert (a, b) != (5, 6), (s, d, oi)
+
+
+def test_link_load_shed_and_infinite_bottleneck():
+    c = TOPO.channel_index(5, 6)
+    hard = TOPO.degrade([c], bw_scale=0.0)
+    # fault-blind table (no unroutable): planned load over a dead link
+    # is an infinite bottleneck
+    blind = build_plan(TOPO, UNI).table
+    assert np.isinf(link_load(hard, UNI, blind).max())
+    # fault-aware table sheds those pairs: all-finite loads
+    aware = build_plan(hard, UNI, down_channels=hard.down_channels).table
+    ll = link_load(hard, UNI, aware)
+    assert np.isfinite(ll).all()
+    assert ll[c] == 0.0
+
+
+def test_nrank_warm_start_carry():
+    cold = nrank_channel(TOPO, UNI)
+    warm = nrank_channel(TOPO, UNI, w0=cold.w0 + cold.w_final)
+    assert warm.iterations <= cold.iterations + 2
+    # the carry only adds weight: trends must stay strongly aligned
+    corr = np.corrcoef(cold.w_nr, warm.w_nr)[0, 1]
+    assert corr > 0.99
+    # w0=None is exactly the cold start (regression guard)
+    again = nrank_channel(TOPO, UNI, w0=None)
+    np.testing.assert_array_equal(cold.w_nr, again.w_nr)
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError):
+        Scenario("bad", events=(LinkFail(cycle=100, links=FAIL_LINKS),
+                                LinkFail(cycle=50, links=FAIL_LINKS)))
+    with pytest.raises(ValueError):
+        Scenario("bad", policy="psychic")
+
+
+def test_rate_scale_drift_event():
+    ev = (TrafficDrift(cycle=1000, traffic=UNI, rate_scale=0.0),)
+    res = run_controlled(TOPO, UNI, CFG.replace(algo=Algo.XY),
+                         Scenario("off", events=ev, policy="stale",
+                                  replan=ReplanConfig(epoch=500)))
+    r = res.results[0]
+    # injection stops at the event: far fewer flits than the full run
+    full = run_sweep(TOPO, UNI, CFG.replace(algo=Algo.XY), [0.35])[0]
+    assert r.injected_flits < full.injected_flits * 0.6

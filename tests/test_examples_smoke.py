@@ -1,0 +1,39 @@
+"""Tier-1 smoke: the examples must import and dry-run against the
+current sim/campaign API (they broke silently once; never again)."""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        f"example_{name}", os.path.join(EXAMPLES, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_dry_run(capsys):
+    mod = _load("quickstart")
+    mod.main(cycles=1500)
+    out = capsys.readouterr().out
+    assert "N-Rank iterations:" in out
+    assert "load-balance LCV" in out
+
+
+def test_ici_demo_dry_run(capsys):
+    mod = _load("qstar_ici_demo")
+    mod.main(side=6, greedy_sweeps=1)
+    out = capsys.readouterr().out
+    assert "Q-StaR BiDOR" in out
+    assert "replanned" in out
+
+
+@pytest.mark.parametrize("name", ["quickstart", "qstar_ici_demo"])
+def test_examples_importable(name):
+    assert _load(name).main is not None
