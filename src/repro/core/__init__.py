@@ -6,6 +6,8 @@ from .nrank import NRankResult, nrank, nrank_channel, possibility_weights
 from .bidor import BiDORTable, bidor, bidor_k
 from .qstar import (QStarPlan, build_plan, predicted_node_load, link_load,
                     link_load_stats)
+from .plan_fast import (build_plan_fast, build_plans_batched,
+                        joint_possibility_fast)
 from .routes import dimension_orders, route_nodes, next_port_table
 
 __all__ = [
@@ -15,5 +17,6 @@ __all__ = [
     "BiDORTable", "bidor", "bidor_k",
     "QStarPlan", "build_plan", "predicted_node_load", "link_load",
     "link_load_stats",
+    "build_plan_fast", "build_plans_batched", "joint_possibility_fast",
     "dimension_orders", "route_nodes", "next_port_table",
 ]

@@ -18,7 +18,12 @@ import numpy as np
 from .topology import Topology
 from .routes import dimension_orders, route_costs, next_port_table
 
-__all__ = ["BiDORTable", "bidor", "bidor_k"]
+__all__ = ["BiDORTable", "bidor", "bidor_k", "TIE_TOL"]
+
+# Relative tolerance of the eq. 10 minimization's tie detection.  Shared
+# with the device-resident pipeline (repro.core.plan_fast), whose choice
+# tables must be identical to this oracle's.
+TIE_TOL = 1e-5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,7 +133,7 @@ def bidor_k(topo: Topology, w_nr: np.ndarray,
     # deterministic/offline (same bitmap artifact, same in-order property).
     n = topo.num_nodes
     best = costs.min(axis=0)
-    tol = 1e-5 * (1.0 + np.abs(best))
+    tol = TIE_TOL * (1.0 + np.abs(best))
     is_min = costs <= best + tol                      # (O, N, N)
     if tie_break == "hash":
         num_min = is_min.sum(axis=0)                  # (N, N)

@@ -165,7 +165,8 @@ def initial_weights(traffic: np.ndarray) -> np.ndarray:
 
 
 def joint_possibility(topo: Topology, traffic: np.ndarray,
-                      chunk: int = 4096) -> np.ndarray:
+                      chunk: int = 4096,
+                      use_kernel: bool = False) -> np.ndarray:
     """Joint possibility weights for *consecutive* channels.
 
     ``J[c1, c2]`` (nonzero only when c2 starts where c1 ends) is the total
@@ -179,7 +180,15 @@ def joint_possibility(topo: Topology, traffic: np.ndarray,
     can hop u→n→u, which no detour-free packet ever does; conditioning the
     transfer on the incoming channel removes exactly those impossible
     continuations.  Stored dense (C, C) — C is small (≤ ~4N).
+
+    ``use_kernel=True`` routes through the compiled device path
+    (:func:`repro.core.plan_fast.joint_possibility_fast` — O(N³) + O(P·N)
+    instead of this oracle's O(P·N²)); this host loop is the oracle it is
+    property-tested against.
     """
+    if use_kernel:
+        from .plan_fast import joint_possibility_fast
+        return joint_possibility_fast(topo, traffic)
     dist = np.asarray(topo.distances, np.int64)
     t = np.asarray(traffic, np.float64)
     c = topo.num_channels
@@ -207,7 +216,8 @@ def joint_possibility(topo: Topology, traffic: np.ndarray,
 
 def nrank_channel(topo: Topology, traffic: np.ndarray,
                   w_th: float = W_TH, iter_th: int = ITER_TH,
-                  w0: np.ndarray | None = None) -> NRankResult:
+                  w0: np.ndarray | None = None,
+                  use_kernel: bool = False) -> NRankResult:
     """N-Rank with channel-level evolution state (primary interpretation).
 
     Identical workflow to §3.2 but the evolving weight lives on channels, so
@@ -223,16 +233,27 @@ def nrank_channel(topo: Topology, traffic: np.ndarray,
     the warm-start carry of the online re-planner.  Channel-level initial
     weights are rescaled per source so each node still splits its initial
     weight over its minimal outgoing channels.
+
+    ``use_kernel=True`` computes the possibility stages (eq. 5/7 and the
+    joint) on the compiled device paths instead of the host loops; the
+    evolution and aggregation stay as below.  For the fully fused,
+    device-resident pipeline use :func:`repro.core.plan_fast.build_plan_fast`.
     """
     traffic = np.asarray(traffic, dtype=np.float64)
     n, c = topo.num_nodes, topo.num_channels
     chans = topo.channels
     us, ns = chans[:, 0], chans[:, 1]
-    w, w_drn = possibility_weights(topo.distances, traffic, chans)
+    if use_kernel:
+        from repro.kernels.possibility import ops as _pops
+        w, w_drn = _pops.possibility_weights(topo.distances, traffic, chans)
+        w = np.asarray(w, np.float64)
+        w_drn = np.asarray(w_drn, np.float64)
+    else:
+        w, w_drn = possibility_weights(topo.distances, traffic, chans)
     with np.errstate(invalid="ignore", divide="ignore"):
         p_drn = np.where(w > 0, w_drn / np.maximum(w, 1e-300), 0.0)
     p_drn = np.clip(p_drn, 0.0, 1.0)
-    j = joint_possibility(topo, traffic)
+    j = joint_possibility(topo, traffic, use_kernel=use_kernel)
     row = j.sum(1)
     with np.errstate(invalid="ignore", divide="ignore"):
         q = np.where(row[:, None] > 0, j / np.maximum(row, 1e-300)[:, None], 0.0)
@@ -264,10 +285,6 @@ def nrank_channel(topo: Topology, traffic: np.ndarray,
     agg = np.zeros((c, n), np.float64)
     agg[np.arange(c), ns] = 1.0
 
-    wc = jnp.asarray(w0c)
-    mj = jnp.asarray(m)
-    aggj = jnp.asarray(agg)
-
     def cond(state):
         wc, _, it = state
         return jnp.logical_and(jnp.sum(wc) >= w_th, it < iter_th)
@@ -278,8 +295,15 @@ def nrank_channel(topo: Topology, traffic: np.ndarray,
         wc = wc @ mj                 # drain + continue (eq. 2)
         return wc, w_nr, it + 1
 
-    wcf, w_nr, it = jax.lax.while_loop(
-        cond, body, (wc, jnp.asarray(w0_node), jnp.int32(0)))
+    # fp64 evolution (scoped x64): keeps this oracle and the fused device
+    # pipeline (`plan_fast`, fp64 on CPU) within summation-order noise,
+    # so tie-tolerance-boundary choice flips cannot separate them.
+    with jax.experimental.enable_x64():
+        wc = jnp.asarray(w0c)
+        mj = jnp.asarray(m)
+        aggj = jnp.asarray(agg)
+        wcf, w_nr, it = jax.lax.while_loop(
+            cond, body, (wc, jnp.asarray(w0_node), jnp.int32(0)))
     w_final = np.zeros(n)
     np.add.at(w_final, ns, np.asarray(wcf))
     p, p_drn_n, _, _ = transition_probabilities(topo, traffic, w, w_drn)

@@ -61,6 +61,11 @@ def build_plan(topo: Topology, traffic: np.ndarray, *,
         §3.2.2's no-detour assumption that reproduces the paper's reported
         results; "node" — the literal node-level eq. (2)–(3) evolution
         (kept as the paper-faithful baseline; see EXPERIMENTS.md §Fidelity).
+      use_kernel: compute the possibility stages on the compiled device
+        kernels instead of the host numpy loops (both modes).  This keeps
+        the stage-by-stage host pipeline; the end-to-end device-resident
+        build is :func:`repro.core.plan_fast.build_plan_fast`, which the
+        campaign engine and the online re-planner use.
       w0: warm-start carry for the N-Rank evolution (node-level initial
         weights) — the online re-planner passes the previous plan's
         residual added to the fresh eq. (1) weights.
@@ -69,7 +74,8 @@ def build_plan(topo: Topology, traffic: np.ndarray, *,
         BiDOR minimization (see :func:`repro.core.bidor.bidor_k`).
     """
     if mode == "channel":
-        nr = nrank_channel(topo, traffic, w_th=w_th, iter_th=iter_th, w0=w0)
+        nr = nrank_channel(topo, traffic, w_th=w_th, iter_th=iter_th, w0=w0,
+                           use_kernel=use_kernel)
     else:
         nr = nrank(topo, traffic, w_th=w_th, iter_th=iter_th,
                    use_kernel=use_kernel, w0=w0)

@@ -1,12 +1,28 @@
-"""Pallas TPU kernel: N-Rank possibility weights (the O(C·N²) hot spot).
+"""Pallas TPU kernels: N-Rank possibility weights (the O(C·N²) hot spot).
 
-Grid: (channel blocks, source blocks); destinations are reduced inside the
-kernel.  The W accumulator lives in the output block (revisited across the
+Two variants share one blocking scheme — grid (channel blocks, source
+blocks), destinations reduced inside the kernel:
+
+* ``possibility_weights_pallas`` — the classic (W, W_drn) reduction
+  (eq. 5/7), accumulated per channel block.
+* ``possibility_v_pallas`` — the per-destination possibility traffic
+  ``V[c, d]`` consumed by the fused planning pipeline
+  (:mod:`repro.core.plan_fast`): W is its row sum, W_drn its ``d = n``
+  gather, and the consecutive-channel joint possibility a cheap O(P·N)
+  contraction of it.
+
+The accumulator lives in the output block (revisited across the
 s-dimension of the grid — Pallas keeps the block in VMEM between visits
 because the index_map ignores the s axis).  All tiles are (128-multiple)
-MXU/VPU-aligned; compares and multiply-reduces are VPU work, so the kernel
-is HBM-bandwidth-bound — tiling T once per (c, s) block instead of the
-naive C passes over T is the win over the jnp oracle.
+MXU/VPU-aligned; compares and multiply-reduces are VPU work, so the
+kernels are HBM-bandwidth-bound — tiling T once per (c, s) block instead
+of the naive C passes over T is the win over the jnp oracle.
+
+``offset`` generalizes the minimal-path predicate to k-hop continuations
+(``offset=1`` is eq. 4/5; ``offset=2`` the consecutive-pair predicate).
+``interpret`` defaults to False — the compiled path; CPU callers (no
+Pallas backend) must opt into interpret mode explicitly, which
+``repro.kernels.possibility.ops`` does automatically.
 """
 
 from __future__ import annotations
@@ -19,16 +35,16 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(du_ref, dn_ref, dsn_ref, tn_ref, t_ref, dist_ref,
-            w_ref, wdrn_ref):
+            w_ref, wdrn_ref, *, offset: int):
     sb = pl.program_id(1)
     du = du_ref[...]           # (BS, BC)
     dn = dn_ref[...]           # (BC, N)
     dist = dist_ref[...]       # (BS, N)
     t = t_ref[...]             # (BS, N)
-    lhs = du.T[:, :, None] + 1 + dn[:, None, :]     # (BC, BS, N)
+    lhs = du.T[:, :, None] + offset + dn[:, None, :]     # (BC, BS, N)
     mask = (lhs == dist[None]).astype(t.dtype)
     w_part = jnp.einsum("csd,sd->c", mask, t)       # (BC,)
-    drn = ((du + 1) == dsn_ref[...]).astype(t.dtype)
+    drn = ((du + offset) == dsn_ref[...]).astype(t.dtype)
     wdrn_part = jnp.sum(drn * tn_ref[...], axis=0)  # (BC,)
 
     @pl.when(sb == 0)
@@ -41,16 +57,17 @@ def _kernel(du_ref, dn_ref, dsn_ref, tn_ref, t_ref, dist_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "block_s",
-                                             "interpret"))
+                                             "offset", "interpret"))
 def possibility_weights_pallas(du, dn, dsn, tn, traffic, dist,
                                block_c: int = 128, block_s: int = 128,
-                               interpret: bool = True):
+                               offset: int = 1,
+                               interpret: bool = False):
     n, c = du.shape
     bc = min(block_c, c)
     bs = min(block_s, n)
     grid = (-(-c // bc), -(-n // bs))
     w, wdrn = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, offset=offset),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bs, bc), lambda cb, sb: (sb, cb)),   # du
@@ -71,3 +88,47 @@ def possibility_weights_pallas(du, dn, dsn, tn, traffic, dist,
         interpret=interpret,
     )(du, dn, dsn, tn, traffic, dist)
     return w, wdrn
+
+
+def _v_kernel(du_ref, dn_ref, t_ref, dist_ref, v_ref, *, offset: int):
+    sb = pl.program_id(1)
+    du = du_ref[...]           # (BS, BC)
+    dn = dn_ref[...]           # (BC, N)
+    dist = dist_ref[...]       # (BS, N)
+    t = t_ref[...]             # (BS, N)
+    lhs = du.T[:, :, None] + offset + dn[:, None, :]     # (BC, BS, N)
+    mask = (lhs == dist[None]).astype(t.dtype)
+    v_part = jnp.einsum("csd,sd->cd", mask, t)      # (BC, N)
+
+    @pl.when(sb == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    v_ref[...] += v_part
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_s",
+                                             "offset", "interpret"))
+def possibility_v_pallas(du, dn, traffic, dist,
+                         block_c: int = 128, block_s: int = 128,
+                         offset: int = 1,
+                         interpret: bool = False):
+    """Per-destination possibility traffic V (C, N):
+    ``V[c, d] = Σ_s T[s,d]·[du[s,c] + offset + dn[c,d] == dist[s,d]]``."""
+    n, c = du.shape
+    bc = min(block_c, c)
+    bs = min(block_s, n)
+    grid = (-(-c // bc), -(-n // bs))
+    return pl.pallas_call(
+        functools.partial(_v_kernel, offset=offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, bc), lambda cb, sb: (sb, cb)),   # du
+            pl.BlockSpec((bc, n), lambda cb, sb: (cb, 0)),     # dn
+            pl.BlockSpec((bs, n), lambda cb, sb: (sb, 0)),     # traffic
+            pl.BlockSpec((bs, n), lambda cb, sb: (sb, 0)),     # dist
+        ],
+        out_specs=pl.BlockSpec((bc, n), lambda cb, sb: (cb, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, n), traffic.dtype),
+        interpret=interpret,
+    )(du, dn, traffic, dist)

@@ -1,12 +1,31 @@
-"""Public op: possibility weights with host-side gather preparation."""
+"""Public op: possibility weights with host-side gather preparation.
+
+Defaults are the COMPILED paths: on backends with Pallas support
+(TPU/GPU) the Pallas kernel runs compiled; elsewhere (CPU) the call
+auto-falls back to the dense jnp oracle, which XLA jit-compiles — the
+interpreter is never the default anywhere.  Pass ``use_pallas`` /
+``interpret`` explicitly to pin a path (tests run the Pallas kernel in
+interpret mode on CPU to keep it covered).
+"""
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .kernel import possibility_weights_pallas
 from .ref import possibility_weights_dense
+
+_dense_jit = functools.partial(jax.jit, static_argnames=("offset",))(
+    possibility_weights_dense)
+
+
+def backend_supports_pallas() -> bool:
+    """Compiled Pallas lowering exists on TPU/GPU only."""
+    return jax.default_backend() in ("tpu", "gpu")
 
 
 def _prepare(dist, traffic, channels):
@@ -22,10 +41,26 @@ def _prepare(dist, traffic, channels):
             jnp.asarray(tn), jnp.asarray(t), jnp.asarray(dist))
 
 
-def possibility_weights(dist, traffic, channels, use_pallas: bool = True,
-                        interpret: bool = True):
+def possibility_weights(dist, traffic, channels,
+                        use_pallas: bool | None = None,
+                        interpret: bool | None = None,
+                        offset: int = 1):
+    """(W, W_drn) per channel — eq. 5/7 (``offset=1``) or the k-hop
+    continuation predicate (``offset=2`` for consecutive pairs; W_drn is
+    then meaningless and should be ignored).
+
+    ``use_pallas=None`` resolves to the backend's compiled support;
+    ``interpret=None`` resolves to compiled where supported and to the
+    interpreter only when the Pallas path was explicitly requested on a
+    backend that cannot compile it.
+    """
+    if use_pallas is None:
+        use_pallas = backend_supports_pallas()
+    if interpret is None:
+        interpret = use_pallas and not backend_supports_pallas()
     du, dn, dsn, tn, t, d = _prepare(dist, traffic, channels)
     if use_pallas:
         return possibility_weights_pallas(du, dn, dsn, tn, t, d,
+                                          offset=offset,
                                           interpret=interpret)
-    return possibility_weights_dense(du, dn, dsn, tn, d, t)
+    return _dense_jit(du, dn, dsn, tn, d, t, offset=offset)

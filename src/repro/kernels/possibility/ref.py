@@ -14,12 +14,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def possibility_weights_dense(du, dn, dsn, tn, dist, traffic):
+def possibility_weights_dense(du, dn, dsn, tn, dist, traffic,
+                              offset: int = 1):
     """du: (N, C) int32; dn: (C, N); dsn: (N, C); tn: (N, C) f32;
-    dist: (N, N) int32; traffic: (N, N) f32 → (W (C,), W_drn (C,))."""
-    lhs = du.T[:, :, None] + 1 + dn[:, None, :]           # (C, N, N)
+    dist: (N, N) int32; traffic: (N, N) f32 → (W (C,), W_drn (C,)).
+    ``offset=1`` is eq. 5/7; ``offset=2`` the consecutive-pair predicate
+    (W_drn then carries no meaning)."""
+    lhs = du.T[:, :, None] + offset + dn[:, None, :]      # (C, N, N)
     mask = (lhs == dist[None]).astype(traffic.dtype)
     w = jnp.einsum("csd,sd->c", mask, traffic)
-    drn = ((du + 1) == dsn).astype(traffic.dtype)         # (N, C)
+    drn = ((du + offset) == dsn).astype(traffic.dtype)    # (N, C)
     w_drn = jnp.einsum("sc,sc->c", drn, tn)
     return w, w_drn

@@ -44,10 +44,10 @@ import numpy as np
 
 from repro.core.bidor import BiDORTable, bidor, greedy_refine
 from repro.core.nrank import NRankResult, initial_weights, nrank_channel
-from repro.core.qstar import build_plan
+from repro.core.plan_fast import build_plan_fast
 from repro.core.topology import Topology
 from .sim import (build_tables, get_runner, make_states, postprocess,
-                  queue_occupancy, retarget_tables)
+                  queue_occupancy, retarget_tables, source_queue_meta)
 from .simconfig import Algo, SimConfig, SimResult
 
 __all__ = [
@@ -223,6 +223,7 @@ class Replan:
 def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
            prev: "object | None" = None, *,
            warm: bool = True, greedy_sweeps: int = 2,
+           use_fast: bool = True,
            ) -> tuple[BiDORTable, "object"]:
     """One quasi-static re-planning step against a degraded fabric.
 
@@ -234,6 +235,13 @@ def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
       prev: previous :class:`repro.core.nrank.NRankResult` for the
         warm-start carry (its residual fixed point seeds the new
         evolution on top of the fresh eq. (1) weights).
+      use_fast: run N-Rank + BiDOR as the single jitted device pipeline
+        (:func:`repro.core.plan_fast.build_plan_fast`; hard-failed
+        channels are masked, so every fault pattern reuses one
+        compilation) instead of the stage-by-stage host oracle.  Both
+        produce the same choice tables; the fast path is what makes
+        online replanning latency proportional to the device, not the
+        host loops.
 
     Returns (table, nrank_result).  ``table.unroutable`` flags pairs no
     dimension order can serve; shed their generation upstream.
@@ -241,15 +249,21 @@ def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
     bw = np.asarray(channel_bw, np.float64)
     down = np.nonzero(bw <= 0)[0]
     plan_topo = dataclasses.replace(topo, channel_bw=bw)
-    # N-Rank sees the degraded connectivity (hard-failed channels leave
-    # the possibility sets); BiDOR masks them from the route choice.
-    nr_topo = plan_topo.degrade(down, drop=True) if down.size else plan_topo
     w0 = None
     if warm and prev is not None:
         w0 = initial_weights(traffic) + np.asarray(prev.w_final, np.float64)
-    nr = nrank_channel(nr_topo, traffic, w0=w0)
-    table = bidor(plan_topo, nr.w_nr,
-                  down_channels=down if down.size else None)
+    if use_fast:
+        plan = build_plan_fast(plan_topo, traffic, w0=w0,
+                               down_channels=down if down.size else None)
+        table, nr = plan.table, plan.nrank
+    else:
+        # N-Rank sees the degraded connectivity (hard-failed channels
+        # leave the possibility sets); BiDOR masks them from the choice.
+        nr_topo = (plan_topo.degrade(down, drop=True) if down.size
+                   else plan_topo)
+        nr = nrank_channel(nr_topo, traffic, w0=w0)
+        table = bidor(plan_topo, nr.w_nr,
+                      down_channels=down if down.size else None)
     if greedy_sweeps > 0:
         table = greedy_refine(plan_topo, traffic, table,
                               sweeps=greedy_sweeps)
@@ -340,11 +354,12 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     nr_prev = nrank0   # seed plan's fixed point: first replan warm-starts
     if cfg.algo == Algo.BIDOR:
         if table is None:
-            plan0 = build_plan(topo, traffic)
+            plan0 = build_plan_fast(topo, traffic)
             table, nr_prev = plan0.table, plan0.nrank
         choice = table.choice
     tables, meta = build_tables(topo, traffic, choice, cfg.num_vcs)
     batched = make_states(meta, cfg, points)
+    q_meta = source_queue_meta(tables, cfg)   # refresh on gen retargets
 
     # environment state
     base_bw = np.asarray(topo.channel_bw, np.float64)
@@ -396,7 +411,8 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                 loads = d_fwd[i, live] / float(d_meas[i]) / bw[live]
                 link_peak[i] = max(link_peak[i], float(loads.max()))
 
-        sat |= queue_occupancy(tables, cfg, batched["q_size"]) >= sat_th
+        sat |= queue_occupancy(tables, cfg, batched["q_size"],
+                               q_meta) >= sat_th
 
         estimator.update(d_seq.sum(axis=0))
         drifted = detector.update(d_seen.sum(axis=0))
@@ -420,6 +436,8 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                 tables, topo,
                 traffic=gen_traffic,
                 channel_bw=bw if "fault" in event_kinds else None)
+            if gen_traffic is not None:
+                q_meta = source_queue_meta(tables, cfg)
             if new_traffic is not None:
                 cur_traffic = new_traffic
             if rate_scale is not None:
@@ -464,6 +482,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
             gen = np.where(cur_unroutable, 0.0, cur_traffic)
         tables = retarget_tables(tables, topo, choice=table.choice,
                                  traffic=gen)
+        q_meta = source_queue_meta(tables, cfg)
         detector.reset()
         fault_pending = False
         replans.append(Replan(

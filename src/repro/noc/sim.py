@@ -118,13 +118,27 @@ def build_tables(topo: Topology, traffic: np.ndarray,
     return tables, meta
 
 
-def queue_occupancy(tables: _Tables, cfg: SimConfig,
-                    q_size) -> np.ndarray:
-    """Per-lane source-queue occupancy fraction over the I/O-capable
-    nodes — the lane-saturation criterion shared by the campaign
-    early-exit and the control plane's saturation flag."""
+def source_queue_meta(tables: _Tables,
+                      cfg: SimConfig) -> tuple[np.ndarray, float]:
+    """(io_mask, qcap) for :func:`queue_occupancy` — one ``p_gen`` device
+    read.  Compute once per cell (or after a traffic retarget) and pass
+    through; deriving it inside every chunk of an early-exit loop costs a
+    host transfer per chunk for a value that only changes when the
+    generation tables do."""
     io_mask = np.asarray(jax.device_get(tables.p_gen)) > 0
     qcap = float(io_mask.sum() * cfg.src_queue_pkts)
+    return io_mask, qcap
+
+
+def queue_occupancy(tables: _Tables, cfg: SimConfig,
+                    q_size, meta: tuple[np.ndarray, float] | None = None,
+                    ) -> np.ndarray:
+    """Per-lane source-queue occupancy fraction over the I/O-capable
+    nodes — the lane-saturation criterion shared by the campaign
+    early-exit and the control plane's saturation flag.  ``meta`` is the
+    precomputed :func:`source_queue_meta`; omitting it re-derives the
+    mask from the device tables on every call."""
+    io_mask, qcap = source_queue_meta(tables, cfg) if meta is None else meta
     return np.asarray(jax.device_get(q_size))[:, io_mask].sum(1) / qcap
 
 

@@ -298,7 +298,11 @@ def test_nrank_channel_mesh_center_heavy():
     topo = mesh2d(5, 5)
     r = nrank_channel(topo, traffic.uniform(topo))
     g = r.w_nr.reshape(5, 5)
-    assert g[2, 2] == r.w_nr.max() and g[0, 0] == r.w_nr.min()
+    # the fp64 evolution leaves the four corners 1 ulp apart (summation
+    # order), so extrema are compared at ulp tolerance, not bitwise
+    assert g[2, 2] == r.w_nr.max()
+    assert np.isclose(g[0, 0], r.w_nr.min(), rtol=1e-12, atol=0)
+    assert (g[0, 0] <= g + 1e-12).all()
     assert np.allclose(g, g.T, atol=1e-6)
     assert r.iterations <= 100
 

@@ -26,12 +26,58 @@ from repro.kernels.mamba_scan.ref import selective_scan as scan_ref
     (lambda: mesh2d(4, 7), "shuffle"),
 ])
 def test_possibility_kernel_matches_core_oracle(topo_fn, pattern):
+    """Defaults = the compiled path for the current backend (dense jnp on
+    CPU, compiled Pallas on TPU/GPU) — never the interpreter."""
     topo = topo_fn()
     t = traffic.PATTERNS[pattern](topo)
     w_ref, wd_ref = possibility_oracle(topo.distances, t, topo.channels)
     w, wd = poss_ops.possibility_weights(topo.distances, t, topo.channels)
     np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-5, atol=1e-7)
     np.testing.assert_allclose(np.asarray(wd), wd_ref, rtol=1e-5, atol=1e-7)
+
+
+def test_possibility_pallas_kernel_itself_matches_oracle():
+    """The Pallas kernel proper (interpret mode where it cannot compile,
+    e.g. CPU CI) against the numpy oracle, both offsets."""
+    interpret = not poss_ops.backend_supports_pallas()
+    topo = torus(8, 8)
+    t = traffic.uniform(topo)
+    w_ref, wd_ref = possibility_oracle(topo.distances, t, topo.channels)
+    w, wd = poss_ops.possibility_weights(topo.distances, t, topo.channels,
+                                         use_pallas=True,
+                                         interpret=interpret)
+    np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(wd), wd_ref, rtol=1e-5, atol=1e-7)
+    # offset=2: the consecutive-pair predicate on (u, n2) index pairs
+    from repro.core.nrank import joint_possibility
+    j = joint_possibility(topo, t)
+    chans = topo.channels
+    pairs = np.argwhere(j > 0)
+    ab = np.stack([chans[pairs[:, 0], 0], chans[pairs[:, 1], 1]], axis=1)
+    w2, _ = poss_ops.possibility_weights(topo.distances, t, ab,
+                                         use_pallas=True,
+                                         interpret=interpret, offset=2)
+    np.testing.assert_allclose(np.asarray(w2), j[pairs[:, 0], pairs[:, 1]],
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_possibility_v_pallas_matches_dense():
+    """The per-destination V kernel feeding the fused planner: row sums
+    are eq. 5, the d = n gather is eq. 7."""
+    from repro.kernels.possibility.kernel import possibility_v_pallas
+    from repro.kernels.possibility.ops import _prepare
+    interpret = not poss_ops.backend_supports_pallas()
+    topo = mesh2d(6, 5)
+    t = traffic.uniform(topo)
+    du, dn, dsn, tn, tm, dist = _prepare(topo.distances, t, topo.channels)
+    v = possibility_v_pallas(du, dn, tm, dist, interpret=interpret)
+    w_ref, wd_ref = possibility_oracle(topo.distances, t, topo.channels)
+    np.testing.assert_allclose(np.asarray(v).sum(1), w_ref,
+                               rtol=1e-5, atol=1e-7)
+    ns = topo.channels[:, 1]
+    np.testing.assert_allclose(
+        np.asarray(v)[np.arange(topo.num_channels), ns], wd_ref,
+        rtol=1e-5, atol=1e-7)
 
 
 @settings(max_examples=10, deadline=None)
@@ -49,6 +95,7 @@ def test_possibility_kernel_random_traffic(w, h, seed):
 
 
 def test_possibility_kernel_block_sweep():
+    interpret = not poss_ops.backend_supports_pallas()
     topo = torus(8, 8)
     t = traffic.uniform(topo)
     w_ref, _ = possibility_oracle(topo.distances, t, topo.channels)
@@ -56,7 +103,8 @@ def test_possibility_kernel_block_sweep():
     from repro.kernels.possibility.kernel import possibility_weights_pallas
     args = _prepare(topo.distances, t, topo.channels)
     for bc, bs in [(32, 16), (64, 64), (256, 64), (128, 128)]:
-        w, _ = possibility_weights_pallas(*args, block_c=bc, block_s=bs)
+        w, _ = possibility_weights_pallas(*args, block_c=bc, block_s=bs,
+                                          interpret=interpret)
         np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-5,
                                    atol=1e-7)
 

@@ -1,0 +1,213 @@
+"""Device-resident planning pipeline vs the numpy oracles.
+
+``build_plan_fast`` must be a drop-in for ``build_plan(mode="channel")``:
+identical BiDOR choice tables (the deployed artifact — exact), and
+NR-weights matching to the fp32-evolution noise the host pipeline itself
+carries (see EXPERIMENTS.md §Planner performance for the tolerance
+policy).  Covered here: random meshes/tori, degraded topologies
+(fault-masked planning vs the drop-topology oracle), warm-start ``w0``
+carries, the compiled possibility/joint kernels, and the vmapped batched
+builds.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core import (bidor, build_plan, build_plan_fast,
+                        build_plans_batched, mesh2d, mesh2d_edge_io, torus,
+                        traffic)
+from repro.core.nrank import (initial_weights, joint_possibility,
+                              nrank_channel, possibility_weights)
+from repro.core.plan_fast import joint_possibility_fast
+from repro.kernels.possibility import ops as poss_ops
+
+# Tolerance policy bound (EXPERIMENTS.md §Planner performance): fp32 on
+# accelerator backends.  On CPU both pipelines run fp64 and actually agree
+# to ~1e-12; the bound stays at the policy level so the suite is
+# backend-portable.
+W_NR_RTOL = 2e-5
+
+
+def _rand_traffic(topo, seed):
+    rng = np.random.default_rng(seed)
+    t = rng.random((topo.num_nodes,) * 2)
+    np.fill_diagonal(t, 0)
+    return t / t.sum()
+
+
+# --------------------------------------------------------------------- #
+# full-pipeline parity
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("topo_fn,pattern", [
+    (lambda: mesh2d(5, 5), "uniform"),
+    (lambda: mesh2d_edge_io(5, 5), "overturn"),
+    (lambda: torus(8, 8), "uniform"),
+    (lambda: mesh2d(4, 7), "shuffle"),
+    (lambda: torus(6, 6), "transpose"),
+])
+def test_fast_plan_matches_oracle(topo_fn, pattern):
+    topo = topo_fn()
+    t = traffic.PATTERNS[pattern](topo)
+    ref = build_plan(topo, t)
+    fast = build_plan_fast(topo, t)
+    np.testing.assert_array_equal(fast.table.choice, ref.table.choice)
+    assert fast.nrank.iterations == ref.nrank.iterations
+    np.testing.assert_allclose(fast.nrank.w_nr, ref.nrank.w_nr,
+                               rtol=W_NR_RTOL, atol=1e-9)
+    np.testing.assert_allclose(fast.nrank.w_possibility,
+                               ref.nrank.w_possibility,
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(fast.nrank.w_final, ref.nrank.w_final,
+                               rtol=W_NR_RTOL, atol=1e-9)
+    assert fast.table.orders == ref.table.orders
+    np.testing.assert_array_equal(fast.table.port_tables,
+                                  ref.table.port_tables)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(3, 6), st.integers(3, 6), st.booleans(),
+       st.integers(0, 2**31 - 1))
+def test_fast_plan_random(w, h, wrap, seed):
+    topo = torus(w, h) if wrap and min(w, h) > 2 else mesh2d(w, h)
+    t = _rand_traffic(topo, seed)
+    ref = build_plan(topo, t)
+    fast = build_plan_fast(topo, t)
+    np.testing.assert_array_equal(fast.table.choice, ref.table.choice)
+    assert fast.nrank.iterations == ref.nrank.iterations
+    np.testing.assert_allclose(fast.nrank.w_nr, ref.nrank.w_nr,
+                               rtol=W_NR_RTOL, atol=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# degraded topologies: masked fast path vs the drop-topology oracle
+# --------------------------------------------------------------------- #
+@settings(max_examples=6, deadline=None)
+@given(st.integers(4, 6), st.integers(4, 6), st.integers(0, 2**31 - 1))
+def test_fast_plan_degraded(w, h, seed):
+    topo = mesh2d(w, h)
+    t = _rand_traffic(topo, seed)
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    c = int(rng.integers(topo.num_channels))
+    u, n = (int(x) for x in topo.channels[c])
+    down = np.array([topo.channel_index(u, n), topo.channel_index(n, u)])
+    bw = topo.channel_bw.copy()
+    bw[down] = 0.0
+    plan_topo = dataclasses.replace(topo, channel_bw=bw)
+    # oracle: N-Rank on the dropped graph, fault-masked BiDOR
+    nr = nrank_channel(plan_topo.degrade(down, drop=True), t)
+    table = bidor(plan_topo, nr.w_nr, down_channels=down)
+    fast = build_plan_fast(plan_topo, t, down_channels=down)
+    np.testing.assert_array_equal(fast.table.choice, table.choice)
+    np.testing.assert_array_equal(fast.table.unroutable, table.unroutable)
+    assert fast.nrank.iterations == nr.iterations
+    np.testing.assert_allclose(fast.nrank.w_nr, nr.w_nr,
+                               rtol=W_NR_RTOL, atol=1e-9)
+
+
+def test_fast_plan_no_faults_has_no_unroutable():
+    topo = mesh2d(4, 4)
+    fast = build_plan_fast(topo, traffic.uniform(topo))
+    assert fast.table.unroutable is None
+
+
+# --------------------------------------------------------------------- #
+# warm-start carry
+# --------------------------------------------------------------------- #
+@settings(max_examples=6, deadline=None)
+@given(st.integers(4, 6), st.integers(4, 6), st.integers(0, 2**31 - 1))
+def test_fast_plan_warm_start(w, h, seed):
+    topo = mesh2d(w, h)
+    t0 = _rand_traffic(topo, seed)
+    t1 = _rand_traffic(topo, seed + 1)
+    prev = nrank_channel(topo, t0)
+    w0 = initial_weights(t1) + prev.w_final
+    ref = build_plan(topo, t1, w0=w0)
+    fast = build_plan_fast(topo, t1, w0=w0)
+    np.testing.assert_array_equal(fast.table.choice, ref.table.choice)
+    assert fast.nrank.iterations == ref.nrank.iterations
+    np.testing.assert_allclose(fast.nrank.w_nr, ref.nrank.w_nr,
+                               rtol=W_NR_RTOL, atol=1e-9)
+    np.testing.assert_allclose(fast.nrank.w0, ref.nrank.w0, rtol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# stage kernels: possibility weights and the joint possibility
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("topo_fn", [
+    lambda: mesh2d(5, 5), lambda: torus(6, 6), lambda: mesh2d(3, 8),
+])
+def test_joint_possibility_fast_matches_oracle(topo_fn):
+    topo = topo_fn()
+    t = _rand_traffic(topo, 7)
+    j_ref = joint_possibility(topo, t)
+    j_fast = joint_possibility_fast(topo, t)
+    np.testing.assert_allclose(j_fast, j_ref, rtol=1e-9, atol=1e-12)
+
+
+def test_joint_possibility_use_kernel_threads_through():
+    topo = torus(5, 5)
+    t = _rand_traffic(topo, 11)
+    np.testing.assert_allclose(joint_possibility(topo, t, use_kernel=True),
+                               joint_possibility(topo, t),
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_nrank_channel_use_kernel_matches_host():
+    """The compiled possibility stages (fp32 kernel path) reproduce the
+    host pipeline's plan: same iterations, close weights, same choices."""
+    topo = mesh2d(5, 5)
+    t = traffic.uniform(topo)
+    host = nrank_channel(topo, t)
+    dev = nrank_channel(topo, t, use_kernel=True)
+    assert dev.iterations == host.iterations
+    np.testing.assert_allclose(dev.w_nr, host.w_nr, rtol=1e-4, atol=1e-7)
+    ref_tab = bidor(topo, host.w_nr)
+    dev_tab = bidor(topo, dev.w_nr)
+    np.testing.assert_array_equal(dev_tab.choice, ref_tab.choice)
+
+
+def test_possibility_ops_compiled_default_matches_numpy_oracle():
+    """ops.possibility_weights with all defaults (the compiled path on
+    every backend — dense jnp where Pallas cannot compile) vs the numpy
+    oracle."""
+    topo = torus(8, 8)
+    t = _rand_traffic(topo, 3)
+    w_ref, wd_ref = possibility_weights(topo.distances, t, topo.channels)
+    w, wd = poss_ops.possibility_weights(topo.distances, t, topo.channels)
+    np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(wd), wd_ref, rtol=1e-4, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# batched (vmapped) plan builds
+# --------------------------------------------------------------------- #
+def test_batched_plans_match_single_builds():
+    topo = mesh2d(5, 5)
+    tms = [traffic.PATTERNS[p](topo)
+           for p in ("uniform", "transpose", "shuffle")]
+    batched = build_plans_batched(topo, tms)
+    for tm, plan in zip(tms, batched):
+        single = build_plan_fast(topo, tm)
+        np.testing.assert_array_equal(plan.table.choice,
+                                      single.table.choice)
+        assert plan.nrank.iterations == single.nrank.iterations
+        np.testing.assert_array_equal(plan.nrank.w_nr, single.nrank.w_nr)
+        np.testing.assert_array_equal(plan.nrank.w_final,
+                                      single.nrank.w_final)
+
+
+def test_batched_plans_heterogeneous_iterations():
+    """Lanes terminate independently under vmap: a pattern that converges
+    in few iterations must not be perturbed by a slower lane."""
+    topo = mesh2d_edge_io(5, 5)
+    tms = [traffic.uniform(topo), traffic.PATTERNS["overturn"](topo)]
+    batched = build_plans_batched(topo, tms)
+    singles = [build_plan_fast(topo, tm) for tm in tms]
+    its = [p.nrank.iterations for p in batched]
+    assert its == [s.nrank.iterations for s in singles]
+    assert len(set(its)) > 1, "fixture should exercise unequal lane lengths"
+    for plan, single in zip(batched, singles):
+        np.testing.assert_array_equal(plan.nrank.w_nr, single.nrank.w_nr)
