@@ -7,13 +7,19 @@ beyond-paper ICI analyses.
   fig9      paper Fig. 9  — realistic Clos-leaf workload
   campaign  scaling       — batched campaign vs sequential simulate calls
   dynamics  control plane — oracle/stale/online replanning under faults
+  topo_sweep  topology zoo — Q-StaR vs DOR on 3D torus / cmesh /
+              express mesh / fault-region mesh (plan-table routing)
   linkload  DESIGN §3     — Q-StaR on the TPU ICI fabric
   roofline  deliverable g — per-(arch × shape × mesh) roofline table
   nrank_scale  plan cost  — numpy vs device plan builds, 8×8 → 64×64
                (the quasi-static budget; "nrank" is kept as an alias)
 
 Set BENCH_QUICK=0 for full-length simulations.  Run as
-``PYTHONPATH=src python -m benchmarks.run [names...]``.
+``PYTHONPATH=src python -m benchmarks.run [names...]``; unknown stage
+names abort upfront (before anything runs) with the valid list.
+``--nrank-max-nodes`` / ``--nrank-budget-ms`` are the flag equivalents of
+the ``NRANK_SCALE_MAX_NODES`` / ``NRANK_BUDGET_MS`` env knobs (the flag
+wins when both are set).
 """
 
 from __future__ import annotations
@@ -179,43 +185,98 @@ def bench_nrank_scale():
                    "iters"], rows)
 
 
-STAGES = ["fig1", "table1", "fig8", "fig9", "campaign", "dynamics",
-          "linkload", "roofline", "nrank_scale"]
+def _stage_fig1():
+    from . import fig1_load
+    fig1_load.main()
 
 
-def main() -> None:
-    want = sys.argv[1:] or STAGES
+def _stage_table1():
+    from . import table1_lcv
+    table1_lcv.main()
+
+
+def _stage_fig8():
+    from . import fig8_synthetic
+    fig8_synthetic.main()
+
+
+def _stage_fig9():
+    from . import fig9_realistic
+    fig9_realistic.main()
+
+
+def _stage_dynamics():
+    from . import dynamics
+    dynamics.main()
+
+
+def _stage_topo_sweep():
+    from . import topo_sweep
+    topo_sweep.main()
+
+
+def _stage_linkload():
+    from . import linkload
+    linkload.main()
+
+
+def _stage_roofline():
+    from . import roofline
+    roofline.main()
+
+
+# registry: stage name → runner, in default execution order
+STAGES = {
+    "fig1": _stage_fig1,
+    "table1": _stage_table1,
+    "fig8": _stage_fig8,
+    "fig9": _stage_fig9,
+    "campaign": bench_campaign,
+    "dynamics": _stage_dynamics,
+    "topo_sweep": _stage_topo_sweep,
+    "linkload": _stage_linkload,
+    "roofline": _stage_roofline,
+    "nrank_scale": bench_nrank_scale,
+}
+ALIASES = {"nrank": "nrank_scale"}
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("stages", nargs="*", metavar="stage",
+                    help=f"stages to run (default: all); one of "
+                         f"{', '.join([*STAGES, *ALIASES])}")
+    ap.add_argument("--nrank-max-nodes", type=int, default=None,
+                    help="cap the nrank_scale sweep at this many nodes "
+                         "(flag form of NRANK_SCALE_MAX_NODES)")
+    ap.add_argument("--nrank-budget-ms", type=float, default=None,
+                    help="assert the warm 16x16 plan build stays under "
+                         "this budget (flag form of NRANK_BUDGET_MS)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+    if args.nrank_max_nodes is not None:
+        os.environ["NRANK_SCALE_MAX_NODES"] = str(args.nrank_max_nodes)
+    if args.nrank_budget_ms is not None:
+        os.environ["NRANK_BUDGET_MS"] = str(args.nrank_budget_ms)
+
+    want = [ALIASES.get(s, s) for s in args.stages] or list(STAGES)
+    unknown = sorted(set(want) - set(STAGES))
+    if unknown:
+        # fail fast, before any stage runs — a typo must not silently
+        # skip work at the end of a long benchmark session
+        raise SystemExit(
+            f"unknown stage(s): {', '.join(unknown)}\n"
+            f"valid stages: {', '.join(STAGES)} "
+            f"(aliases: {', '.join(f'{a}->{b}' for a, b in ALIASES.items())})")
+
     t_all = time.time()
     for name in want:
         print(f"\n================ {name} ================", flush=True)
         t0 = time.time()
-        if name == "fig1":
-            from . import fig1_load
-            fig1_load.main()
-        elif name == "table1":
-            from . import table1_lcv
-            table1_lcv.main()
-        elif name == "fig8":
-            from . import fig8_synthetic
-            fig8_synthetic.main()
-        elif name == "fig9":
-            from . import fig9_realistic
-            fig9_realistic.main()
-        elif name == "campaign":
-            bench_campaign()
-        elif name == "dynamics":
-            from . import dynamics
-            dynamics.main()
-        elif name == "linkload":
-            from . import linkload
-            linkload.main()
-        elif name == "roofline":
-            from . import roofline
-            roofline.main()
-        elif name in ("nrank", "nrank_scale"):   # "nrank" kept as alias
-            bench_nrank_scale()
-        else:
-            raise SystemExit(f"unknown benchmark {name}")
+        STAGES[name]()
         print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
     print(f"\nall benchmarks done in {time.time() - t_all:.1f}s")
 

@@ -1,9 +1,10 @@
 """Q-StaR core: the paper's contribution (N-Rank + BiDOR) in JAX/numpy."""
 
-from .topology import Topology, mesh2d, mesh2d_edge_io, torus, multipod
+from .topology import (Topology, mesh2d, mesh2d_edge_io, torus, multipod,
+                       cmesh, express_mesh, fault_region_mesh)
 from . import traffic
 from .nrank import NRankResult, nrank, nrank_channel, possibility_weights
-from .bidor import BiDORTable, bidor, bidor_k
+from .bidor import BiDORTable, bidor, bidor_k, dor_table
 from .qstar import (QStarPlan, build_plan, predicted_node_load, link_load,
                     link_load_stats)
 from .plan_fast import (build_plan_fast, build_plans_batched,
@@ -12,9 +13,10 @@ from .routes import dimension_orders, route_nodes, next_port_table
 
 __all__ = [
     "Topology", "mesh2d", "mesh2d_edge_io", "torus", "multipod",
+    "cmesh", "express_mesh", "fault_region_mesh",
     "traffic",
     "NRankResult", "nrank", "nrank_channel", "possibility_weights",
-    "BiDORTable", "bidor", "bidor_k",
+    "BiDORTable", "bidor", "bidor_k", "dor_table",
     "QStarPlan", "build_plan", "predicted_node_load", "link_load",
     "link_load_stats",
     "build_plan_fast", "build_plans_batched", "joint_possibility_fast",

@@ -18,7 +18,7 @@ import numpy as np
 from .topology import Topology
 from .routes import dimension_orders, route_costs, next_port_table
 
-__all__ = ["BiDORTable", "bidor", "bidor_k", "TIE_TOL"]
+__all__ = ["BiDORTable", "bidor", "bidor_k", "dor_table", "TIE_TOL"]
 
 # Relative tolerance of the eq. 10 minimization's tie detection.  Shared
 # with the device-resident pipeline (repro.core.plan_fast), whose choice
@@ -61,6 +61,26 @@ class BiDORTable:
     def packed_bitmaps(self) -> np.ndarray:
         """(N, ceil(N/8)) uint8 — the hardware bitmap layout."""
         return np.packbits(self.bitmaps, axis=1)
+
+
+def dor_table(topo: Topology,
+              orders: list[tuple[int, ...]] | None = None) -> BiDORTable:
+    """Plan-table artifact for plain dimension-order routing.
+
+    The table-routed simulator consumes (``port_tables``, ``choice``) for
+    EVERY algorithm; the DOR baselines (XY, YX, O1Turn, Valiant, ROMM)
+    route over this trivial artifact — binary orders, all-XY choice, no
+    costs — so the simulator needs no routing logic of its own beyond the
+    table gather.
+    """
+    if orders is None:
+        orders = dimension_orders(topo.ndim, binary_only=True)
+    n = topo.num_nodes
+    ports = np.stack([next_port_table(topo, o) for o in orders])
+    return BiDORTable(choice=np.zeros((n, n), np.int8),
+                      orders=tuple(map(tuple, orders)),
+                      costs=np.zeros((len(orders), n, n)),
+                      port_tables=ports)
 
 
 def route_feasibility(topo: Topology,

@@ -328,7 +328,9 @@ def plan_statics(topo: Topology, *, binary_only: bool = True,
     c1, c2 = _consecutive_pairs(topo.channels, n)
     nh = np.stack([next_hop_table(topo, o) for o in orders])
     ports = np.stack([next_port_table(topo, o) for o in orders])
-    diam = int(topo.distances[topo.distances < 10**6].max())
+    # route horizon, not BFS diameter: the eq. 10 walk follows DOR routes,
+    # whose length express shortcuts may leave above the BFS distances
+    diam = topo.route_horizon
     arrays = dict(
         us=jnp.asarray(topo.channels[:, 0].astype(np.int32)),
         ns=jnp.asarray(topo.channels[:, 1].astype(np.int32)),
@@ -374,6 +376,20 @@ def _distances_for(topo: Topology, down: np.ndarray) -> np.ndarray:
     return hit
 
 
+def _fault_arrays(topo: Topology, statics: PlanStatics, down_channels):
+    """The masked-fault plan inputs shared by the single and batched
+    builders: (down ids, degraded distances, live mask, down node-pair
+    mask)."""
+    down = _down_ids(topo, down_channels)
+    dist = _distances_for(topo, down)
+    live = np.ones(statics.c, bool)
+    live[down] = False
+    down_pair = np.zeros((statics.n, statics.n), bool)
+    if down.size:
+        down_pair[topo.channels[down, 0], topo.channels[down, 1]] = True
+    return down, dist, live, down_pair
+
+
 def _assemble_plan(topo: Topology, traffic: np.ndarray, statics: PlanStatics,
                    out: dict, have_down: bool) -> QStarPlan:
     unroutable = np.asarray(out["unroutable"]) if have_down else None
@@ -414,14 +430,8 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
     """
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
-    down = _down_ids(topo, down_channels)
-    dist = _distances_for(topo, down)
-    live = np.ones(statics.c, bool)
-    live[down] = False
-    n = statics.n
-    down_pair = np.zeros((n, n), bool)
-    if down.size:
-        down_pair[topo.channels[down, 0], topo.channels[down, 1]] = True
+    down, dist, live, down_pair = _fault_arrays(topo, statics,
+                                                down_channels)
     with _precision_scope(precision):
         t = jnp.asarray(np.asarray(traffic, np.float64))
         w0_eff = jnp.asarray(np.asarray(
@@ -438,14 +448,22 @@ def build_plans_batched(topo: Topology, traffics, *,
                         w0s=None,
                         k_orders: bool = False,
                         w_th: float = W_TH, iter_th: int = ITER_TH,
+                        down_channels=None,
                         precision: str = "auto",
                         use_pallas: bool | None = None) -> list[QStarPlan]:
     """Plans for many traffic matrices on one topology in a single vmapped
     device call — the campaign's (pattern, scenario) axis.  Each returned
     plan is identical to its ``build_plan_fast`` equivalent (vmapped
-    ``while_loop`` lanes freeze once their own termination hits)."""
+    ``while_loop`` lanes freeze once their own termination hits).
+
+    ``down_channels`` (one fault pattern shared by the whole batch, e.g. a
+    ``fault_region_mesh``'s dead channels) masks the failed channels out of
+    every plan exactly as in :func:`build_plan_fast`.
+    """
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
+    down, dist, live, down_pair = _fault_arrays(topo, statics,
+                                                down_channels)
     tms = [np.asarray(t, np.float64) for t in traffics]
     if w0s is None:
         w0s = [None] * len(tms)
@@ -465,13 +483,13 @@ def build_plans_batched(topo: Topology, traffics, *,
                  for t, w0 in zip(tms_g, w0s_g)]))
             use_b = jnp.asarray(np.array([w0 is not None for w0 in w0s_g]))
             out = jax.device_get(statics.core_batched(
-                jnp.asarray(topo.distances), t_b, w0_b, use_b,
-                jnp.ones(statics.c, bool), jnp.zeros((n, n), bool),
+                jnp.asarray(dist), t_b, w0_b, use_b,
+                jnp.asarray(live), jnp.asarray(down_pair),
                 jnp.asarray(float(w_th)), jnp.int32(iter_th)))
             for i, tm in enumerate(tms_g):
                 lane = {k: np.asarray(v)[i] for k, v in out.items()}
                 plans.append(_assemble_plan(topo, tm, statics, lane,
-                                            have_down=False))
+                                            have_down=bool(down.size)))
     return plans
 
 

@@ -48,11 +48,34 @@ def _step_dir(cur: np.ndarray, dst: np.ndarray, size: int, wrap: bool) -> np.nda
     return step
 
 
+def _express_steps(topo: Topology) -> dict[int, list[tuple[int, np.ndarray]]]:
+    """Express-hop availability per dimension: dim → [(magnitude, (N, 2)
+    bool per node and sign)], magnitudes descending.  Empty dict when the
+    topology has only unit-step channels (the common case)."""
+    classes = topo._express_classes
+    if not classes:
+        return {}
+    avail = {cls: np.zeros((topo.num_nodes, 2), bool) for cls in classes}
+    for u, n in topo.channels:
+        k, step = topo._channel_step(int(u), int(n))
+        if abs(step) > 1:
+            avail[(k, abs(step))][int(u), 0 if step > 0 else 1] = True
+    out: dict[int, list[tuple[int, np.ndarray]]] = {}
+    for (k, mag), av in sorted(avail.items(), key=lambda kv: -kv[0][1]):
+        out.setdefault(k, []).append((mag, av))
+    return out
+
+
 def next_hop_table(topo: Topology, order: tuple[int, ...]) -> np.ndarray:
     """(N, N) int32: next node on the DOR route (cur, dst) → nxt.
 
     ``table[n, n] == n``.  On wrapping dimensions the minimal direction is
-    taken (ties go to +, deterministically).
+    taken (ties go to +, deterministically).  Where the topology has
+    express channels, the walker takes the longest non-overshooting hop
+    available at the current node (monotone progress within the active
+    dimension, so DOR's turn restrictions — and deadlock freedom — are
+    untouched); on unit-step topologies this is exactly the classic
+    coordinate walk.
     """
     n = topo.num_nodes
     coords = topo.coords  # (N, ndim)
@@ -60,18 +83,24 @@ def next_hop_table(topo: Topology, order: tuple[int, ...]) -> np.ndarray:
     dst = coords[None, :, :]  # (1, N, ndim)
     nxt_coord = np.broadcast_to(cur, (n, n, topo.ndim)).copy()
     moved = np.zeros((n, n), dtype=bool)
+    express = _express_steps(topo)
     for k in order:
         size, wrap = topo.dims[k], topo.wrap[k]
         step = _step_dir(cur[..., k], dst[..., k], size, wrap)
         take = (~moved) & (step != 0)
+        mag = np.ones((n, n), dtype=np.int64)
+        if k in express and not wrap:
+            need = np.abs(dst[..., k] - cur[..., k])  # (N, N)
+            for m, av in express[k]:                  # magnitudes desc
+                has = np.where(step > 0, av[:, :1], av[:, 1:])  # (N, N)
+                use = (mag == 1) & has & (m <= need)
+                mag = np.where(use, m, mag)
         nxt_coord[..., k] = np.where(
-            take, (nxt_coord[..., k] + step) % size, nxt_coord[..., k])
+            take, (nxt_coord[..., k] + step * mag) % size,
+            nxt_coord[..., k])
         moved |= take
     # collapse coordinates back to node ids
-    strides = np.ones(topo.ndim, dtype=np.int64)
-    for k in range(1, topo.ndim):
-        strides[k] = strides[k - 1] * topo.dims[k - 1]
-    table = (nxt_coord * strides).sum(-1).astype(np.int32)
+    table = (nxt_coord * topo.coord_strides).sum(-1).astype(np.int32)
     return table
 
 
@@ -89,10 +118,12 @@ def next_port_table(topo: Topology, order: tuple[int, ...]) -> np.ndarray:
 
 def walk_routes(topo: Topology, order: tuple[int, ...]) -> np.ndarray:
     """(N, N, L+1) int32 node sequences of every DOR route, padded with the
-    destination (L = network diameter)."""
+    destination (L = the route horizon — the BFS diameter on unit-step
+    topologies; express shortcuts can push BFS distances below route
+    lengths, so the horizon is the safe bound)."""
     nh = next_hop_table(topo, order)
     n = topo.num_nodes
-    diam = int(topo.distances[topo.distances < 10**6].max())
+    diam = topo.route_horizon
     seq = np.empty((n, n, diam + 1), dtype=np.int32)
     cur = np.broadcast_to(np.arange(n)[:, None], (n, n)).copy()
     dst = np.broadcast_to(np.arange(n)[None, :], (n, n))
@@ -128,7 +159,7 @@ def route_costs(topo: Topology, w_nr: np.ndarray,
     """
     n = topo.num_nodes
     w_nr = np.asarray(w_nr, dtype=np.float64)
-    diam = int(topo.distances[topo.distances < 10**6].max())
+    diam = topo.route_horizon
     costs = np.empty((len(orders), n, n), dtype=np.float64)
     dst = np.broadcast_to(np.arange(n)[None, :], (n, n))
     for oi, order in enumerate(orders):

@@ -8,10 +8,16 @@ the possibility sets of eq. (4).
 The same abstraction covers
 
 * the paper's evaluation topologies — ``mesh2d`` (5×5 2DMesh, Fig. 1b) and
-  ``mesh2d_edge_io`` (2DMesh with I/O only at edge nodes, Fig. 1c/1d), and
+  ``mesh2d_edge_io`` (2DMesh with I/O only at edge nodes, Fig. 1c/1d),
 * the TPU-adaptation topologies — ``torus`` for a single-pod ICI fabric
-  (16×16) and ``multipod`` for the 2×16×16 production mesh, where the
-  inter-pod dimension has distinct (DCN) bandwidth.
+  (16×16, or 3D: ``torus(4, 4, 4)``) and ``multipod`` for the 2×16×16
+  production mesh, where the inter-pod dimension has distinct (DCN)
+  bandwidth, and
+* the topology zoo beyond the paper's two graphs: ``cmesh`` (concentrated
+  mesh — several cores share one router), ``express_mesh`` (2D mesh with
+  express channels skipping intermediate routers), and
+  ``fault_region_mesh`` (a mesh with a dead rectangular region — the
+  irregular-graph stress case for plan-table routing).
 
 All construction is offline (numpy); the arrays are consumed by the jnp
 evolution loop in :mod:`repro.core.nrank` and by the simulator.
@@ -31,13 +37,19 @@ __all__ = [
     "mesh2d_edge_io",
     "torus",
     "multipod",
+    "cmesh",
+    "express_mesh",
+    "fault_region_mesh",
     "PORT_LOCAL",
 ]
 
 # Port encoding used by the routers/simulator: for dimension k, port 2k is the
-# +k direction and port 2k+1 the −k direction; the final port is local
-# inject/eject.  (5-port router for a 2D mesh, as in paper §4.1.)
-PORT_LOCAL = -1  # resolved per-topology as ``2 * ndim``
+# +k direction and port 2k+1 the −k direction.  Express channels (axis-aligned
+# hops of magnitude > 1) get dedicated port pairs after the 2·ndim base ports,
+# one (+, −) pair per distinct (dimension, magnitude) class, so the even/odd
+# port pairing (+dir ⇄ −dir) holds for every network port.  The final port is
+# local inject/eject.  (5-port router for a plain 2D mesh, as in paper §4.1.)
+PORT_LOCAL = -1  # resolved per-topology as ``num_ports - 1``
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,12 +96,12 @@ class Topology:
 
     @property
     def num_ports(self) -> int:
-        """Router ports: 2 per dimension + 1 local."""
-        return 2 * self.ndim + 1
+        """Router ports: 2 per dimension + express port pairs + 1 local."""
+        return self.port_local + 1
 
     @property
     def port_local(self) -> int:
-        return 2 * self.ndim
+        return 2 * self.ndim + 2 * len(self._express_classes)
 
     def node_id(self, coord: Sequence[int]) -> int:
         """Row-major in reversed-dim order: id = Σ coord[k] * stride[k], with
@@ -148,21 +160,67 @@ class Topology:
             frontier = nxt
         return dist
 
+    def _channel_step(self, u: int, n: int) -> tuple[int, int]:
+        """(dimension, signed step) of channel (u, n); wrap-corrected."""
+        cu, cn = self.coords[int(u)], self.coords[int(n)]
+        delta = cn - cu
+        nz = np.nonzero(delta)[0]
+        if len(nz) != 1:  # pragma: no cover - malformed channel
+            raise ValueError(f"channel {u}->{n} is not axis-aligned")
+        k = int(nz[0])
+        step = int(delta[k])
+        if self.wrap[k] and abs(step) == self.dims[k] - 1:
+            step = int(-np.sign(step))  # wrap link: +dim edge goes size-1 → 0
+        return k, step
+
+    @functools.cached_property
+    def _express_classes(self) -> tuple[tuple[int, int], ...]:
+        """Distinct (dimension, magnitude) classes of express channels
+        (axis-aligned steps with magnitude > 1), sorted.  Each class owns a
+        (+, −) port pair after the 2·ndim unit-step base ports."""
+        classes = set()
+        for u, n in self.channels:
+            k, step = self._channel_step(int(u), int(n))
+            if abs(step) > 1:
+                classes.add((k, abs(step)))
+        return tuple(sorted(classes))
+
+    @functools.cached_property
+    def coord_strides(self) -> np.ndarray:
+        """(ndim,) int64 strides mapping coordinates to node ids
+        (dimension 0 fastest-varying): ``node_id = coords @ coord_strides``.
+        Single source of truth for the numbering convention."""
+        strides = np.ones(self.ndim, dtype=np.int64)
+        for k in range(1, self.ndim):
+            strides[k] = strides[k - 1] * self.dims[k - 1]
+        return strides
+
+    @property
+    def route_horizon(self) -> int:
+        """Upper bound on DOR route length (hops), per-dimension monotone:
+        every hop makes ≥ 1 coordinate progress, so a route takes at most
+        the unit-step diameter even when express channels shorten the BFS
+        distances below route lengths.  Equals the BFS diameter on plain
+        meshes/tori — the route walkers use this as their scan length."""
+        return sum(d // 2 if w else d - 1
+                   for d, w in zip(self.dims, self.wrap))
+
     @functools.cached_property
     def channel_port(self) -> np.ndarray:
-        """(C,) output-port index at ``u`` of each channel (u, n)."""
+        """(C,) output-port index at ``u`` of each channel (u, n).
+
+        Unit steps use the base ports 2k (+) / 2k+1 (−); express classes
+        use port pairs ``2·ndim + 2j`` (+) / ``2·ndim + 2j + 1`` (−) in
+        ``_express_classes`` order.  The +/− pairing is even/odd for every
+        class, which ``port_of_channel_at_receiver`` relies on.
+        """
+        express = {cls: 2 * self.ndim + 2 * j
+                   for j, cls in enumerate(self._express_classes)}
         ports = np.zeros(self.num_channels, dtype=np.int32)
         for c, (u, n) in enumerate(self.channels):
-            cu, cn = self.coords[int(u)], self.coords[int(n)]
-            delta = cn - cu
-            nz = np.nonzero(delta)[0]
-            if len(nz) != 1:  # pragma: no cover - malformed channel
-                raise ValueError(f"channel {u}->{n} is not axis-aligned")
-            k = int(nz[0])
-            step = int(delta[k])
-            if self.wrap[k] and abs(step) == self.dims[k] - 1:
-                step = -np.sign(step)  # wrap link: +dim edge goes size-1 → 0
-            ports[c] = 2 * k if step > 0 else 2 * k + 1
+            k, step = self._channel_step(int(u), int(n))
+            base = 2 * k if abs(step) == 1 else express[(k, abs(step))]
+            ports[c] = base if step > 0 else base + 1
         return ports
 
     @functools.cached_property
@@ -338,3 +396,87 @@ def multipod(num_pods: int, pod_x: int, pod_y: int,
         f"multipod_{num_pods}x{pod_x}x{pod_y}",
         inter_dim_bw={2: interpod_bw},
     )
+
+
+# ---------------------------------------------------------------------- #
+# topology zoo (beyond the paper's mesh/torus pair)
+# ---------------------------------------------------------------------- #
+def cmesh(width: int, height: int, concentration: int = 4) -> Topology:
+    """Concentrated mesh: a ``width×height`` router mesh where every router
+    serves ``concentration`` cores (CMesh of Balfour & Dally).
+
+    The router graph is a plain 2D mesh; concentration shows up as the
+    per-router traffic-endpoint weight, so every traffic builder and the
+    injection model scale naturally (``concentration`` I/O ports per node).
+    """
+    topo = _grid((width, height), (False, False),
+                 f"cmesh_{width}x{height}c{concentration}")
+    return dataclasses.replace(
+        topo, io_weights=np.full(topo.num_nodes, float(concentration)))
+
+
+def express_mesh(width: int, height: int, interval: int = 2,
+                 express_bw: float = 1.0) -> Topology:
+    """2D mesh with express channels (Dally's express cubes): every node at
+    a coordinate multiple of ``interval`` gets a bidirectional channel
+    skipping ``interval − 1`` routers along each dimension.
+
+    Express channels are extra directed channels with |step| = interval;
+    they carry their own router-port pair (see ``channel_port``) and appear
+    in hop distances, possibility sets, and DOR next-hop tables (the route
+    walker takes the longest non-overshooting hop), so the whole
+    N-Rank → BiDOR → plan-table pipeline sees them as plain graph edges.
+    """
+    if interval < 2:
+        raise ValueError("express interval must be >= 2")
+    base = _grid((width, height), (False, False),
+                 f"express_{width}x{height}i{interval}")
+    chans = [(int(u), int(v)) for u, v in base.channels]
+    extra: list[tuple[int, int]] = []
+    for i in range(base.num_nodes):
+        c = base.coords[i]
+        for k in range(2):
+            if c[k] % interval:
+                continue
+            cc = c.copy()
+            cc[k] += interval
+            if cc[k] < base.dims[k]:
+                j = base.node_id(cc)
+                extra.extend([(i, j), (j, i)])
+    bw = {ch: 1.0 for ch in chans}
+    bw.update({ch: float(express_bw) for ch in extra})
+    channels = np.array(sorted(bw), dtype=np.int32)
+    channel_bw = np.array([bw[(int(u), int(v))] for u, v in channels])
+    return dataclasses.replace(base, channels=channels,
+                               channel_bw=channel_bw)
+
+
+def fault_region_mesh(width: int, height: int,
+                      region: tuple[int, int, int, int],
+                      bw_scale: float = 0.0) -> Topology:
+    """Irregular mesh: a rectangular region of routers is failed.
+
+    ``region`` is the inclusive rectangle (x0, y0, x1, y1).  Channels
+    touching a region node keep their indices but lose their bandwidth
+    (scaled by ``bw_scale``; 0 = hard fault) — the simulator models the
+    fault through ``channel_bw``, while planners mask the down channels
+    (``down_channels``) so hop distances and possibility sets see the
+    irregular graph.  Region nodes also lose their I/O weight: dead
+    routers neither source nor sink traffic.
+    """
+    x0, y0, x1, y1 = region
+    # the region is part of the identity: two different fault regions on
+    # the same grid must not collide in campaign CSVs / select() keys
+    name = (f"fault_region_{width}x{height}_"
+            f"r{x0}.{y0}.{x1}.{y1}"
+            + (f"b{bw_scale:g}" if bw_scale else ""))
+    topo = _grid((width, height), (False, False), name)
+    x, y = topo.coords[:, 0], topo.coords[:, 1]
+    dead = (x >= x0) & (x <= x1) & (y >= y0) & (y <= y1)
+    if dead.all():
+        raise ValueError("fault region covers the whole mesh")
+    failed = np.nonzero(dead[topo.channels[:, 0]]
+                        | dead[topo.channels[:, 1]])[0]
+    out = topo.degrade(failed, bw_scale=bw_scale)
+    return dataclasses.replace(
+        out, name=name, io_weights=np.where(dead, 0.0, topo.io_weights))

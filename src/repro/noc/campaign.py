@@ -53,6 +53,10 @@ class CampaignSpec:
 
     Attributes:
       topo: the network under test.
+      topos: optional *topology axis* — when non-empty, the whole grid runs
+        once per listed topology (``topo`` is ignored); string patterns are
+        re-resolved per topology, and BiDOR plans (including fault masking
+        for topologies with dead channels) are rebuilt per topology.
       algos: routing algorithms to sweep.
       patterns: traffic patterns — names resolved through
         ``repro.core.traffic.PATTERNS`` or explicit ``(name, matrix)``
@@ -74,7 +78,7 @@ class CampaignSpec:
         batched as lanes of one vmapped state.
     """
 
-    topo: Topology
+    topo: Topology | None
     algos: tuple[Algo, ...]
     patterns: tuple
     rates: tuple[float, ...]
@@ -83,18 +87,28 @@ class CampaignSpec:
     chunk: int = 0
     sat_occupancy: float = 0.9
     scenarios: tuple = ()
+    topos: tuple[Topology, ...] = ()
 
     def __post_init__(self):
         if not (self.algos and self.patterns and self.rates and self.seeds):
             raise ValueError("campaign grid must be non-empty on all axes")
+        if self.topo is None and not self.topos:
+            raise ValueError("provide topo or a non-empty topos axis")
+
+    @property
+    def topo_axis(self) -> tuple[Topology, ...]:
+        return self.topos or (self.topo,)
 
     @property
     def num_points(self) -> int:
         return (len(self.algos) * len(self.patterns) * len(self.rates)
-                * len(self.seeds) * max(len(self.scenarios), 1))
+                * len(self.seeds) * max(len(self.scenarios), 1)
+                * len(self.topo_axis))
 
-    def pattern_items(self) -> list[tuple[str, np.ndarray]]:
+    def pattern_items(self, topo: Topology | None = None,
+                      ) -> list[tuple[str, np.ndarray]]:
         """Resolve the pattern axis to (name, traffic matrix) pairs."""
+        topo = self.topo if topo is None else topo
         items = []
         for p in self.patterns:
             if isinstance(p, str):
@@ -102,7 +116,7 @@ class CampaignSpec:
                     raise KeyError(
                         f"unknown traffic pattern {p!r}; available: "
                         f"{sorted(traffic_mod.PATTERNS)}")
-                items.append((p, traffic_mod.PATTERNS[p](self.topo)))
+                items.append((p, traffic_mod.PATTERNS[p](topo)))
             else:
                 name, tm = p
                 items.append((str(name), np.asarray(tm, np.float64)))
@@ -119,6 +133,7 @@ class CampaignPoint:
     seed: int
     result: SimResult
     scenario: str = "static"
+    topo: str = ""
 
 
 @dataclasses.dataclass
@@ -138,7 +153,8 @@ class CampaignResult:
     def select(self, algo: Algo | None = None, pattern: str | None = None,
                rate: float | None = None,
                seed: int | None = None,
-               scenario: str | None = None) -> list[CampaignPoint]:
+               scenario: str | None = None,
+               topo: str | None = None) -> list[CampaignPoint]:
         out = []
         for p in self.points:
             if algo is not None and p.algo != algo:
@@ -150,6 +166,8 @@ class CampaignResult:
             if seed is not None and p.seed != seed:
                 continue
             if scenario is not None and p.scenario != scenario:
+                continue
+            if topo is not None and p.topo != topo:
                 continue
             out.append(p)
         return out
@@ -172,7 +190,7 @@ class CampaignResult:
         return float(self.mean_over_seeds("throughput", algo,
                                           pattern).max())
 
-    CSV_HEADER = ["scenario", "pattern", "algo", "rate", "seed",
+    CSV_HEADER = ["topo", "scenario", "pattern", "algo", "rate", "seed",
                   "throughput",
                   "offered", "avg_lat", "p50_lat", "p90_lat", "p99_lat",
                   "max_lat", "lcv", "link_load_max", "reorder",
@@ -182,7 +200,8 @@ class CampaignResult:
         rows = []
         for p in self.points:
             r = p.result
-            rows.append([p.scenario, p.pattern, p.algo.name, p.rate, p.seed,
+            rows.append([p.topo, p.scenario, p.pattern, p.algo.name,
+                         p.rate, p.seed,
                          f"{r.throughput:.4f}", f"{r.offered:.4f}",
                          f"{r.avg_latency:.1f}", f"{r.p50_latency:.1f}",
                          f"{r.p90_latency:.1f}", f"{r.p99_latency:.1f}",
@@ -195,9 +214,8 @@ class CampaignResult:
         lines = [f"campaign: {self.spec.num_points} points in "
                  f"{self.total_wall_clock_s:.1f}s wall-clock"]
         for key, dt in self.wall_clock_s.items():
-            aname, pat = key[0], key[1]
-            scen = f" {key[2]:16s}" if len(key) > 2 else ""
-            lines.append(f"  cell {pat:12s} {aname:8s}{scen} {dt:6.2f}s")
+            cell = " ".join(f"{part:12s}" for part in key)
+            lines.append(f"  cell {cell} {dt:6.2f}s")
         return "\n".join(lines)
 
 
@@ -250,80 +268,99 @@ def run_campaign(spec: CampaignSpec, *,
     points = [(float(r), int(s)) for r in spec.rates for s in spec.seeds]
     out_points: list[CampaignPoint] = []
     wall: dict[tuple, float] = {}
-    items = spec.pattern_items()
-    # one vmapped device call plans every pattern that needs one (the
-    # campaign's pattern axis; scenario replans reuse these as their
-    # warm-start seeds).  Keyed by item index: explicit (name, matrix)
-    # patterns may repeat a name with different matrices.
-    plans: dict[int, object] = {}
-    if Algo.BIDOR in spec.algos:
-        need = [i for i, (name, _) in enumerate(items)
-                if not (bidor_tables and name in bidor_tables)
-                or spec.scenarios]
-        if need:
-            built = build_plans_batched(spec.topo,
-                                        [items[i][1] for i in need])
-            plans = dict(zip(need, built))
-    for item_i, (pat_name, tm) in enumerate(items):
-        choice = None
-        pat_table = None
-        pat_nrank = None   # seed fixed point: scenario replans warm-start
+    topo_axis = spec.topo_axis
+    multi_topo = len(topo_axis) > 1
+    for topo in topo_axis:
+        items = spec.pattern_items(topo)
+        # dead channels (e.g. a fault-region mesh) mask the plan build
+        down = topo.down_channels
+        # one vmapped device call plans every pattern that needs one (the
+        # campaign's pattern axis; scenario replans reuse these as their
+        # warm-start seeds).  Keyed by item index: explicit (name, matrix)
+        # patterns may repeat a name with different matrices.
+        plans: dict[int, object] = {}
         if Algo.BIDOR in spec.algos:
-            if bidor_tables and pat_name in bidor_tables:
-                choice = np.asarray(bidor_tables[pat_name])
-                if spec.scenarios:  # scenario cells need the full plan
-                    pat_plan = plans[item_i]
-                    pat_table = dataclasses.replace(
-                        pat_plan.table,
-                        choice=np.asarray(choice, np.int8))
-                    pat_nrank = pat_plan.nrank
-            else:
-                pat_plan = plans[item_i]
-                pat_table = pat_plan.table
-                pat_nrank = pat_plan.nrank
-                choice = pat_table.choice
-        for algo in spec.algos:
-            cfg = cfg0.replace(algo=algo)
-            for scen in (spec.scenarios or (None,)):
-                t0 = time.perf_counter()
-                if scen is None:
-                    tables, meta = build_tables(
-                        spec.topo, tm,
-                        choice if algo == Algo.BIDOR else None,
-                        cfg.num_vcs)
-                    host, sat = _run_cell(spec, cfg, tables, meta, points)
-                    results = []
-                    for i, (rate, seed) in enumerate(points):
-                        o = jax.tree.map(lambda x: x[i], host)
-                        results.append(postprocess(
-                            o, cfg, spec.topo, rate=rate, seed=seed,
-                            saturated=bool(sat[i])))
-                    scen_name = "static"
-                    key = (algo.name, pat_name)
+            need = [i for i, (name, _) in enumerate(items)
+                    if not (bidor_tables and name in bidor_tables)
+                    or spec.scenarios]
+            if need:
+                built = build_plans_batched(
+                    topo, [items[i][1] for i in need],
+                    down_channels=down if down.size else None)
+                plans = dict(zip(need, built))
+        for item_i, (pat_name, tm) in enumerate(items):
+            pat_table = None
+            pat_nrank = None  # seed fixed point: scenario replans warm-start
+            if Algo.BIDOR in spec.algos:
+                if bidor_tables and pat_name in bidor_tables:
+                    choice = np.asarray(bidor_tables[pat_name], np.int8)
+                    if spec.scenarios:  # scenario cells need the full plan
+                        pat_table = dataclasses.replace(
+                            plans[item_i].table, choice=choice)
+                        pat_nrank = plans[item_i].nrank
+                    else:
+                        from repro.core.bidor import dor_table
+                        pat_table = dataclasses.replace(
+                            dor_table(topo), choice=choice)
                 else:
-                    from .ctrl import run_controlled
-                    ctrl_res = run_controlled(
-                        spec.topo, tm, cfg, scen,
-                        rates=[float(r) for r in spec.rates],
-                        seeds=list(spec.seeds),
-                        bidor_table=pat_table if algo == Algo.BIDOR
-                        else None,
-                        nrank0=pat_nrank if algo == Algo.BIDOR else None,
-                        sat_occupancy=spec.sat_occupancy,
-                        verbose=verbose)
-                    results = [ctrl_res.result_with_peak(i)
-                               for i in range(len(points))]
-                    scen_name = scen.name
-                    key = (algo.name, pat_name, scen.name)
-                dt = time.perf_counter() - t0
-                wall[key] = dt
-                for (rate, seed), res in zip(points, results):
-                    out_points.append(CampaignPoint(
-                        algo=algo, pattern=pat_name, rate=rate, seed=seed,
-                        result=res, scenario=scen_name))
-                if verbose:
-                    print(f"campaign cell {pat_name:12s} {algo.name:8s} "
-                          f"{scen_name:12s} {len(points)} pts in {dt:.2f}s",
-                          flush=True)
+                    pat_table = plans[item_i].table
+                    pat_nrank = plans[item_i].nrank
+            # admission control: pairs no dimension order can serve on a
+            # degraded topology are shed from BiDOR's generation matrix
+            # (the control plane does the same after a replan)
+            bidor_tm = tm
+            if (pat_table is not None and pat_table.unroutable is not None
+                    and pat_table.unroutable.any()):
+                bidor_tm = np.where(pat_table.unroutable, 0.0, tm)
+            for algo in spec.algos:
+                cfg = cfg0.replace(algo=algo)
+                for scen in (spec.scenarios or (None,)):
+                    t0 = time.perf_counter()
+                    cell_tm = bidor_tm if algo == Algo.BIDOR else tm
+                    if scen is None:
+                        tables, meta = build_tables(
+                            topo, cell_tm,
+                            pat_table if algo == Algo.BIDOR else None,
+                            cfg.num_vcs)
+                        host, sat = _run_cell(spec, cfg, tables, meta,
+                                              points)
+                        results = []
+                        for i, (rate, seed) in enumerate(points):
+                            o = jax.tree.map(lambda x: x[i], host)
+                            results.append(postprocess(
+                                o, cfg, topo, rate=rate, seed=seed,
+                                saturated=bool(sat[i])))
+                        scen_name = "static"
+                        key = (algo.name, pat_name)
+                    else:
+                        from .ctrl import run_controlled
+                        ctrl_res = run_controlled(
+                            topo, cell_tm, cfg, scen,
+                            rates=[float(r) for r in spec.rates],
+                            seeds=list(spec.seeds),
+                            bidor_table=pat_table if algo == Algo.BIDOR
+                            else None,
+                            nrank0=pat_nrank if algo == Algo.BIDOR
+                            else None,
+                            sat_occupancy=spec.sat_occupancy,
+                            verbose=verbose)
+                        results = [ctrl_res.result_with_peak(i)
+                                   for i in range(len(points))]
+                        scen_name = scen.name
+                        key = (algo.name, pat_name, scen.name)
+                    if multi_topo:
+                        key = (topo.name,) + key
+                    dt = time.perf_counter() - t0
+                    wall[key] = dt
+                    for (rate, seed), res in zip(points, results):
+                        out_points.append(CampaignPoint(
+                            algo=algo, pattern=pat_name, rate=rate,
+                            seed=seed, result=res, scenario=scen_name,
+                            topo=topo.name))
+                    if verbose:
+                        print(f"campaign cell {topo.name:16s} "
+                              f"{pat_name:12s} {algo.name:8s} "
+                              f"{scen_name:12s} {len(points)} pts "
+                              f"in {dt:.2f}s", flush=True)
     return CampaignResult(spec=spec, points=out_points, wall_clock_s=wall,
                           total_wall_clock_s=time.perf_counter() - t_start)

@@ -349,15 +349,15 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     seeds = [int(s) for s in (seeds or [cfg.seed])]
     points = [(r, s) for r in rates for s in seeds]
 
-    choice = None
     table = bidor_table
     nr_prev = nrank0   # seed plan's fixed point: first replan warm-starts
     if cfg.algo == Algo.BIDOR:
         if table is None:
             plan0 = build_plan_fast(topo, traffic)
             table, nr_prev = plan0.table, plan0.nrank
-        choice = table.choice
-    tables, meta = build_tables(topo, traffic, choice, cfg.num_vcs)
+    tables, meta = build_tables(
+        topo, traffic, table if cfg.algo == Algo.BIDOR else None,
+        cfg.num_vcs)
     batched = make_states(meta, cfg, points)
     q_meta = source_queue_meta(tables, cfg)   # refresh on gen retargets
 

@@ -11,10 +11,22 @@ identical for every algorithm, so all relative comparisons are preserved.
 The whole per-cycle pipeline is pure jnp and runs under ``lax.scan``; one
 jit-compilation per (topology, algorithm, packet-length) triple.
 
+**Routing is plan-table-driven.**  The simulator never recomputes a
+dimension-order decision: every per-cycle routing step is a gather over a
+:class:`repro.core.bidor.BiDORTable` artifact — ``port_tables[order, cur,
+target]`` with the packet's order stamped at injection (for BiDOR, from the
+plan's ``choice[s, d]``; for the DOR baselines, a constant or random order
+over :func:`repro.core.bidor.dor_table`'s trivial artifact).  Tables are
+traced runner arguments, so the same compiled pipeline serves ANY topology
+the planning stack can produce tables for — 2D/3D meshes and tori,
+concentrated and express meshes, irregular fault-region graphs
+(:mod:`repro.core.topology`'s zoo) — and plan hot-swaps are plain array
+replacements (:func:`retarget_tables`).
+
 Routing algorithms (``Algo``): XY, YX, O1Turn, Valiant, ROMM (oblivious,
 two-phase XY with per-phase VCs), Odd-Even (minimal adaptive, turn model of
-Chiu [1]), and BiDOR (this paper: quasi-static XY/YX choice from N-Rank,
-VC0 = XY / VC1 = YX as in §3.3.2).
+Chiu [1]; inherently 2D), and BiDOR (this paper: quasi-static XY/YX choice
+from N-Rank, VC0 = XY / VC1 = YX as in §3.3.2).
 """
 
 from __future__ import annotations
@@ -26,8 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bidor import BiDORTable
-from repro.core.routes import dimension_orders, next_port_table
+from repro.core.bidor import BiDORTable, dor_table
 from repro.core.topology import Topology
 from .simconfig import Algo, SimConfig, SimResult
 
@@ -47,13 +58,14 @@ NQ = 5
 class _Tables(NamedTuple):
     """Static (trace-time constant) lookup tables."""
 
-    port: jnp.ndarray      # (2, N, N) int32: DOR out-port (order, cur, target)
-    choice: jnp.ndarray    # (N, N) int32: BiDOR order per (s, d)
+    port: jnp.ndarray      # (O, N, N) int32: plan out-port (order, cur, target)
+    choice: jnp.ndarray    # (N, N) int32: plan order per (s, d)
     neighbor: jnp.ndarray  # (N, P) int32
     recv_port: jnp.ndarray  # (N, P) int32: input port at the neighbor
     cdf: jnp.ndarray       # (N, N) float32 destination CDF per source
     p_gen: jnp.ndarray     # (N,) float32 packet-generation probability @rate 1
-    coords: jnp.ndarray    # (N, 2) int32
+    coords: jnp.ndarray    # (N, ndim) int32
+    strides: jnp.ndarray   # (ndim,) int32: coord → node-id strides
     n_of: jnp.ndarray      # (NIN,) node of each input
     p_of: jnp.ndarray      # (NIN,) port of each input
     v_of: jnp.ndarray      # (NIN,) vc of each input
@@ -80,15 +92,24 @@ def _gen_tables(topo: Topology, traffic) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def build_tables(topo: Topology, traffic: np.ndarray,
-                 bidor_choice: np.ndarray | None,
+                 table: BiDORTable | None,
                  num_vcs: int) -> tuple[_Tables, dict]:
-    if topo.ndim != 2:
-        raise ValueError("the flit simulator supports 2D topologies")
+    """Device tables for one simulation cell.
+
+    ``table`` is the routing artifact the simulator consumes — a
+    :class:`BiDORTable` with per-(order, node, destination) next-port
+    tables plus the per-⟨s, d⟩ order choice.  Pass the plan's table for
+    BiDOR; ``None`` routes over the trivial DOR artifact
+    (:func:`repro.core.bidor.dor_table`), which the oblivious baselines
+    index by constant/random order.
+    """
+    if table is None:
+        table = dor_table(topo)
     n, p, v = topo.num_nodes, topo.num_ports, num_vcs
-    orders = dimension_orders(2)
-    port = np.stack([next_port_table(topo, o) for o in orders]).astype(np.int32)
-    choice = (np.zeros((n, n), np.int32) if bidor_choice is None
-              else bidor_choice.astype(np.int32))
+    port = np.asarray(table.port_tables, np.int32)
+    if port.shape[1:] != (n, n):
+        raise ValueError(f"port tables {port.shape} do not match {n} nodes")
+    choice = np.asarray(table.choice, np.int32)
     neighbor = topo.neighbor_table.astype(np.int32)
     recv_port = np.full((n, p), 0, np.int32)
     for c in range(topo.num_channels):
@@ -105,6 +126,7 @@ def build_tables(topo: Topology, traffic: np.ndarray,
         neighbor=jnp.asarray(neighbor), recv_port=jnp.asarray(recv_port),
         cdf=cdf, p_gen=p_gen,
         coords=jnp.asarray(topo.coords.astype(np.int32)),
+        strides=jnp.asarray(topo.coord_strides.astype(np.int32)),
         n_of=jnp.asarray(idx // (p * v)),
         p_of=jnp.asarray((idx // v) % p),
         v_of=jnp.asarray(idx % v),
@@ -114,7 +136,7 @@ def build_tables(topo: Topology, traffic: np.ndarray,
         chan_bw=jnp.asarray(topo.channel_bw, jnp.float32),
     )
     meta = dict(N=n, P=p, V=v, NIN=nin, P_LOCAL=topo.port_local,
-                W=int(topo.dims[0]), C=topo.num_channels)
+                NDIM=topo.ndim, O=port.shape[0], C=topo.num_channels)
     return tables, meta
 
 
@@ -222,6 +244,10 @@ def _make_step(meta: dict, cfg: SimConfig):
     algo = Algo(cfg.algo)
     n, p, v, nin = meta["N"], meta["P"], meta["V"], meta["NIN"]
     p_local = meta["P_LOCAL"]
+    num_orders = meta["O"]
+    if algo == Algo.ODDEVEN and meta["NDIM"] != 2:
+        raise ValueError("odd-even routing is a 2D turn model; "
+                         f"topology has ndim={meta['NDIM']}")
     b, q, l = cfg.buf_per_vc, cfg.src_queue_pkts, cfg.packet_len
     pv = p * v
     n_arange = jnp.arange(n)
@@ -245,9 +271,12 @@ def _make_step(meta: dict, cfg: SimConfig):
         if algo == Algo.XY:
             order = jnp.zeros(n, jnp.int32)
         elif algo == Algo.YX:
-            order = jnp.ones(n, jnp.int32)
+            # last order is the descending one ("YX" on 2D, and its k-dim
+            # generalization when a k-orders plan table is in play)
+            order = jnp.full((n,), num_orders - 1, jnp.int32)
         elif algo == Algo.O1TURN:
-            order = jax.random.bernoulli(k1, 0.5, (n,)).astype(jnp.int32)
+            order = jnp.where(jax.random.bernoulli(k1, 0.5, (n,)),
+                              num_orders - 1, 0).astype(jnp.int32)
         elif algo == Algo.BIDOR:
             order = t.choice[src, dst]
         else:
@@ -258,10 +287,10 @@ def _make_step(meta: dict, cfg: SimConfig):
             cs, cd = t.coords[src], t.coords[dst]
             lo = jnp.minimum(cs, cd)
             hi = jnp.maximum(cs, cd)
-            u = jax.random.uniform(k3, (n, 2))
+            u = jax.random.uniform(k3, (n, lo.shape[-1]))
             ic = lo + (u * (hi - lo + 1)).astype(jnp.int32)
             ic = jnp.clip(ic, lo, hi)
-            inter = ic[:, 1] * jnp.int32(meta["W"]) + ic[:, 0]
+            inter = (ic * t.strides).sum(-1)
         else:
             inter = jnp.full((n,), -1, jnp.int32)
         return order, inter
@@ -391,7 +420,7 @@ def _make_step(meta: dict, cfg: SimConfig):
             if algo == Algo.XY:
                 eff_order = jnp.zeros(nin, jnp.int32)
             elif algo == Algo.YX:
-                eff_order = jnp.ones(nin, jnp.int32)
+                eff_order = jnp.full((nin,), num_orders - 1, jnp.int32)
             elif two_phase:
                 eff_order = jnp.zeros(nin, jnp.int32)
             else:
@@ -697,12 +726,12 @@ def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     vmapped call.  Results are ordered rate-major: ``[(r, s) for r in
     rates for s in seeds]``; with ``seeds=None`` (default ``[cfg.seed]``)
     this is the legacy one-result-per-rate list."""
-    choice = None
+    table = None
     if cfg.algo == Algo.BIDOR:
         if bidor_table is None:
             raise ValueError("BIDOR needs a BiDORTable")
-        choice = bidor_table.choice
-    tables, meta = build_tables(topo, traffic, choice, cfg.num_vcs)
+        table = bidor_table
+    tables, meta = build_tables(topo, traffic, table, cfg.num_vcs)
     runner = get_runner(meta, cfg, cfg.cycles)
     points = [(r, s) for r in rates for s in (seeds or [cfg.seed])]
     batched = make_states(meta, cfg, points)
@@ -737,18 +766,18 @@ def run_trace_sweep(topo: Topology,
     Returns a list over seeds of (SimResult over all measured cycles,
     per-segment LCVs).
     """
-    choice = None
+    table = None
     if cfg.algo == Algo.BIDOR:
         if bidor_table is None:
             raise ValueError("BIDOR needs a BiDORTable")
-        choice = bidor_table.choice
+        table = bidor_table
     seeds = list(seeds or [cfg.seed])
     nb = len(seeds)
     batched = None
     lcvs: list[list[float]] = [[] for _ in seeds]
     prev_fwd = None
     for si, (tm, rate) in enumerate(segments):
-        tables, meta = build_tables(topo, tm, choice, cfg.num_vcs)
+        tables, meta = build_tables(topo, tm, table, cfg.num_vcs)
         runner = get_runner(meta, cfg, cfg.cycles)
         if batched is None:
             states = []

@@ -1,10 +1,13 @@
 """Regenerate the golden campaign fixtures.
 
-Usage:  PYTHONPATH=src python tests/goldens/regen.py
+Usage:  PYTHONPATH=src python tests/goldens/regen.py [--out DIR]
 
-Writes ``campaign_4x4.json`` next to this file.  Run this ONLY when a
-simulator change intentionally alters behaviour, and say so in the commit
-message — the golden test exists to make unintended changes loud.
+Writes ``campaign_4x4.json`` / ``ctrl_4x4.json`` next to this file — or
+into ``--out DIR`` (e.g. in CI, which regenerates into a scratch dir and
+uploads the diff against the committed fixtures as a workflow artifact).
+Overwrite the committed fixtures ONLY when a simulator change
+intentionally alters behaviour, and say so in the commit message — the
+golden test exists to make unintended changes loud.
 
 The fixture pins integer flit counts exactly (they are deterministic
 functions of the per-point PRNG stream) and float statistics to 6
@@ -123,18 +126,32 @@ def compute_ctrl_goldens() -> dict:
     }
 
 
-def main():
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="write the fixtures into DIR instead of "
+                         "overwriting the committed ones (CI diffing)")
+    args = ap.parse_args(argv)
+    golden_path, ctrl_path = GOLDEN_PATH, CTRL_GOLDEN_PATH
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        golden_path = os.path.join(args.out,
+                                   os.path.basename(GOLDEN_PATH))
+        ctrl_path = os.path.join(args.out,
+                                 os.path.basename(CTRL_GOLDEN_PATH))
     goldens = compute_goldens()
-    with open(GOLDEN_PATH, "w") as f:
+    with open(golden_path, "w") as f:
         json.dump(goldens, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote {len(goldens['points'])} golden points to {GOLDEN_PATH}")
+    print(f"wrote {len(goldens['points'])} golden points to {golden_path}")
     ctrl = compute_ctrl_goldens()
-    with open(CTRL_GOLDEN_PATH, "w") as f:
+    with open(ctrl_path, "w") as f:
         json.dump(ctrl, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {len(ctrl['points'])} ctrl golden points to "
-          f"{CTRL_GOLDEN_PATH}")
+          f"{ctrl_path}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ UNI = traffic.uniform(TOPO)
 BASE = SimConfig(cycles=1200, warmup=300, drain=100)
 
 
+@pytest.mark.slow
 def test_grid_is_fully_enumerated():
     spec = CampaignSpec(
         topo=TOPO, algos=(Algo.XY, Algo.YX), patterns=(("uni", UNI),),
@@ -28,6 +29,7 @@ def test_grid_is_fully_enumerated():
     assert res.mean_over_seeds("throughput", Algo.XY, "uni").shape == (2,)
 
 
+@pytest.mark.slow
 def test_batched_campaign_matches_sequential_sweep_exactly():
     """Every lane of the vmapped batch must reproduce the stand-alone
     run bit-for-bit (same per-point PRNG stream, same integer stats)."""
@@ -53,6 +55,7 @@ def test_batched_campaign_matches_sequential_sweep_exactly():
                 assert np.isclose(bat.throughput, seq.throughput)
 
 
+@pytest.mark.slow
 def test_chunked_execution_matches_single_call():
     """Slicing the cycle loop for the early-exit detector must not change
     any statistic when no lane saturates."""

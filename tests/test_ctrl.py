@@ -24,6 +24,7 @@ FAIL_LINKS = ((5, 6), (6, 5))
 # ---------------------------------------------------------------------- #
 # hot swap / identity
 # ---------------------------------------------------------------------- #
+@pytest.mark.slow
 def test_empty_schedule_hot_swap_is_bit_identical_to_fresh_run():
     """The chunked, table-swapping control loop with NO events must equal
     the single-call sweep exactly — the hot-swap path itself cannot

@@ -16,6 +16,9 @@ import os
 import numpy as np
 import pytest
 
+# long campaign runs; CI's golden job (and tier-1) always run them
+pytestmark = pytest.mark.slow
+
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",
                            "campaign_4x4.json")
 CTRL_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "goldens",

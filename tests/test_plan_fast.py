@@ -70,6 +70,7 @@ def test_fast_plan_matches_oracle(topo_fn, pattern):
 @settings(max_examples=8, deadline=None)
 @given(st.integers(3, 6), st.integers(3, 6), st.booleans(),
        st.integers(0, 2**31 - 1))
+@pytest.mark.slow
 def test_fast_plan_random(w, h, wrap, seed):
     topo = torus(w, h) if wrap and min(w, h) > 2 else mesh2d(w, h)
     t = _rand_traffic(topo, seed)

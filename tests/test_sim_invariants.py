@@ -22,6 +22,7 @@ def _campaign(algos, rates=(0.1, 0.4), seeds=(0, 1), *, base=None,
     return run_campaign(spec)
 
 
+@pytest.mark.slow
 def test_no_flit_loss_across_campaign():
     """injected == ejected + in-flight at every grid point, any algo."""
     res = _campaign([Algo.XY, Algo.O1TURN, Algo.ODDEVEN, Algo.BIDOR])
@@ -43,6 +44,7 @@ def test_drain_phase_empties_network_at_low_load():
         assert r.injected_flits == r.ejected_flits, p
 
 
+@pytest.mark.slow
 def test_per_vc_fifo_ordering_deterministic_algos():
     """Quasi-static routing (one path per flow, per-VC FIFOs) must deliver
     every flow in order: reorder-buffer occupancy stays 0 (§3.3.2)."""
@@ -68,6 +70,7 @@ def _transpose_relabel(topo):
     return sigma
 
 
+@pytest.mark.slow
 def test_xy_yx_symmetry_under_transposed_traffic():
     """XY on T and YX on the coordinate-transposed T' are the same system
     mirrored along the diagonal, so aggregate statistics must agree (up
@@ -107,3 +110,39 @@ def test_link_load_max_positive_and_bounded():
     res = _campaign([Algo.XY, Algo.BIDOR], rates=(0.3, 1.0))
     for p in res.points:
         assert 0.0 < p.result.link_load_max <= 1.0 + 1e-9, p
+
+
+@pytest.mark.slow
+def test_table_routed_sim_beyond_2d():
+    """The tentpole contract: the simulator is plan-table-driven, so the
+    zoo topologies (3D torus, concentrated mesh, express mesh) run through
+    the same compiled pipeline — with flit conservation, in-order delivery
+    for quasi-static algos, and a full drain at low load."""
+    from repro.core import cmesh, express_mesh, torus
+    from repro.noc import CampaignSpec, run_campaign
+
+    base = SimConfig(cycles=1500, warmup=400, drain=500)
+    spec = CampaignSpec(
+        topo=TOPO, topos=(torus(3, 3, 3), cmesh(3, 3, 2),
+                          express_mesh(6, 6, 2)),
+        algos=(Algo.XY, Algo.YX, Algo.BIDOR),
+        patterns=("uniform",), rates=(0.08,), seeds=(0,), base=base)
+    res = run_campaign(spec)
+    assert len(res.points) == 3 * 3
+    for p in res.points:
+        r = p.result
+        assert r.injected_flits == r.ejected_flits + r.in_flight_flits, p
+        assert r.in_flight_flits == 0, p        # drained at low load
+        assert r.ejected_flits > 0, p
+        assert r.reorder_value == 0, p          # quasi-static => in order
+        assert p.topo in {"torus_3x3x3", "cmesh_3x3c2", "express_6x6i2"}
+
+
+def test_oddeven_rejects_non_2d():
+    from repro.core import torus
+    from repro.noc.sim import run_sweep
+
+    with pytest.raises(ValueError, match="2D turn model"):
+        run_sweep(torus(3, 3, 3), traffic.uniform(torus(3, 3, 3)),
+                  SimConfig(algo=Algo.ODDEVEN, cycles=300, warmup=100),
+                  None, seeds=[0])

@@ -1,0 +1,213 @@
+"""Topology-zoo invariants: the graphs beyond 2D mesh/torus, and the
+plan tables the pipeline builds over them.
+
+Covers (ISSUE 4):
+  * channel / reverse-channel consistency — every directed channel has its
+    reverse, and the receiver-port pairing holds for express port classes;
+  * minimal-path feasibility of every plan table — walking a plan's
+    (choice, port_tables) artifact reaches the destination within the
+    route horizon using only existing (and, on degraded graphs, live)
+    channels, minimally on unit-step graphs;
+  * ``Topology.degrade`` round-trips on the new graphs;
+  * the channel-aware next-hop walker is bit-identical to the classic
+    coordinate walk on unit-step topologies (the goldens' guarantee), and
+    actually takes express hops where they exist.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (build_plan_fast, cmesh, express_mesh,
+                        fault_region_mesh, mesh2d, multipod, torus, traffic)
+from repro.core.routes import dimension_orders, next_hop_table
+
+ZOO = {
+    "torus3d": lambda: torus(4, 4, 4),
+    "cmesh": lambda: cmesh(4, 4, concentration=4),
+    "express": lambda: express_mesh(6, 6, interval=2),
+    "fault_region": lambda: fault_region_mesh(6, 6, (2, 2, 3, 3)),
+}
+UNIT_STEP = ("torus3d", "cmesh", "fault_region")   # no express channels
+
+
+@pytest.fixture(scope="module", params=sorted(ZOO))
+def zoo_topo(request):
+    return ZOO[request.param]()
+
+
+# --------------------------------------------------------------------- #
+# graph invariants
+# --------------------------------------------------------------------- #
+def test_reverse_channel_consistency(zoo_topo):
+    topo = zoo_topo
+    for c, (u, n) in enumerate(topo.channels):
+        rev = topo.channel_index(int(n), int(u))
+        # a channel arrives at the receiver on the port its reverse
+        # channel transmits from — including express port pairs
+        assert topo.port_of_channel_at_receiver[c] == topo.channel_port[rev]
+        # +dir ports are even, −dir odd, and they pair up
+        assert topo.channel_port[c] // 2 == topo.channel_port[rev] // 2
+        assert topo.channel_port[c] != topo.channel_port[rev]
+
+
+def test_ports_consistent(zoo_topo):
+    topo = zoo_topo
+    # every (node, out-port) maps to at most one channel
+    keys = set(zip(topo.channels[:, 0].tolist(), topo.channel_port.tolist()))
+    assert len(keys) == topo.num_channels
+    assert topo.channel_port.max() < topo.port_local
+    # neighbor table round-trips the channel list
+    nt = topo.neighbor_table
+    for c, (u, n) in enumerate(topo.channels):
+        assert nt[int(u), topo.channel_port[c]] == int(n)
+    assert (nt[:, topo.port_local] == np.arange(topo.num_nodes)).all()
+
+
+def test_express_ports_are_distinct():
+    topo = express_mesh(6, 6, interval=2)
+    assert topo.num_ports == 2 * 2 + 2 * 2 + 1   # base + 2 express classes
+    s, d = topo.node_id((0, 0)), topo.node_id((4, 0))
+    c = topo.channel_index(s, topo.node_id((2, 0)))
+    assert topo.channel_port[c] >= 4              # express port class
+    # express hop is actually taken: 0 -> 4 along x in 2 hops, not 4
+    nh = next_hop_table(topo, (0, 1))
+    cur, hops = s, 0
+    while cur != d:
+        cur, hops = int(nh[cur, d]), hops + 1
+    assert hops == 2
+
+
+def test_next_hop_identity_on_unit_topologies():
+    """The channel-aware walker must reproduce the classic coordinate walk
+    bit-for-bit wherever there are no express channels (the goldens)."""
+    def naive(topo, order):
+        n = topo.num_nodes
+        cur = topo.coords[:, None, :]
+        dst = topo.coords[None, :, :]
+        nxt = np.broadcast_to(cur, (n, n, topo.ndim)).copy()
+        moved = np.zeros((n, n), bool)
+        for k in order:
+            size, wrap = topo.dims[k], topo.wrap[k]
+            delta = dst[..., k] - cur[..., k]
+            if not wrap:
+                step = np.sign(delta)
+            else:
+                fwd, bwd = delta % size, (-delta) % size
+                step = np.where(fwd == 0, 0, np.where(fwd <= bwd, 1, -1))
+            take = (~moved) & (step != 0)
+            nxt[..., k] = np.where(take, (nxt[..., k] + step) % size,
+                                   nxt[..., k])
+            moved |= take
+        strides = np.ones(topo.ndim, np.int64)
+        for k in range(1, topo.ndim):
+            strides[k] = strides[k - 1] * topo.dims[k - 1]
+        return (nxt * strides).sum(-1).astype(np.int32)
+
+    for topo in (mesh2d(5, 5), torus(4, 4), torus(3, 4, 5),
+                 multipod(2, 4, 4), cmesh(4, 4)):
+        for order in dimension_orders(topo.ndim):
+            assert np.array_equal(next_hop_table(topo, order),
+                                  naive(topo, order)), (topo.name, order)
+
+
+# --------------------------------------------------------------------- #
+# plan-table feasibility
+# --------------------------------------------------------------------- #
+def _walk_plan(topo, table, s, d):
+    """Follow the plan artifact exactly as the table-routed simulator
+    does: port = port_tables[choice[s, d], cur, d], hop = neighbor."""
+    nt = topo.neighbor_table
+    oi = int(table.choice[s, d])
+    cur, hops, chans = s, 0, []
+    while cur != d and hops <= topo.route_horizon:
+        p = int(table.port_tables[oi, cur, d])
+        if p == topo.port_local:
+            break   # premature eject
+        nxt = int(nt[cur, p])
+        assert nxt >= 0, f"plan routes {s}->{d} over missing port {p}@{cur}"
+        chans.append(topo.channel_index(cur, nxt))
+        cur, hops = nxt, hops + 1
+    return cur, hops, chans
+
+
+def test_plan_tables_feasible(zoo_topo):
+    topo = zoo_topo
+    down = topo.down_channels
+    tm = traffic.uniform(topo)
+    plan = build_plan_fast(topo, tm,
+                           down_channels=down if down.size else None)
+    table = plan.table
+    n = topo.num_nodes
+    unroutable = (np.zeros((n, n), bool) if table.unroutable is None
+                  else table.unroutable)
+    unit = not topo._express_classes
+    dist = topo.distances
+    checked = 0
+    for s in range(n):
+        for d in range(n):
+            if s == d or unroutable[s, d]:
+                continue
+            cur, hops, chans = _walk_plan(topo, table, s, d)
+            assert cur == d, f"plan route {s}->{d} ends at {cur}"
+            if unit:
+                # minimal-path: exactly the (degraded-graph) hop distance
+                assert hops == dist[s, d], (s, d, hops, dist[s, d])
+            else:
+                assert hops <= topo.route_horizon
+            if down.size:
+                assert not set(chans) & set(down.tolist()), \
+                    f"plan route {s}->{d} crosses a down channel"
+            checked += 1
+    assert checked > 0
+
+
+def test_fault_region_sheds_only_blocked_pairs():
+    topo = fault_region_mesh(6, 6, (2, 2, 3, 3))
+    plan = build_plan_fast(topo, traffic.uniform(topo),
+                           down_channels=topo.down_channels)
+    unroutable = plan.table.unroutable
+    dead = topo.io_weights <= 0
+    # every pair touching a dead router is unroutable; live pairs are
+    # unroutable iff BOTH dimension orders cross the region (straight
+    # lines through it), e.g. (0, 2) -> (5, 2) — and (0,0)->(5,5) is not
+    assert unroutable[np.ix_(dead, ~dead)].all()
+    s, d = topo.node_id((0, 2)), topo.node_id((5, 2))
+    assert unroutable[s, d]
+    s2, d2 = topo.node_id((0, 0)), topo.node_id((5, 5))
+    assert not unroutable[s2, d2]
+
+
+# --------------------------------------------------------------------- #
+# degrade round-trip
+# --------------------------------------------------------------------- #
+def test_degrade_round_trip(zoo_topo):
+    topo = zoo_topo
+    ids = [0, topo.num_channels // 2]
+    deg = topo.degrade(ids, bw_scale=0.0)
+    # indexing untouched: the simulator keeps the full channel set
+    assert np.array_equal(deg.channels, topo.channels)
+    assert np.array_equal(deg.channel_port, topo.channel_port)
+    assert deg.num_ports == topo.num_ports
+    assert (deg.channel_bw[ids] == 0).all()
+    # restore: failed channels back at original width == original bw
+    import dataclasses
+    back = dataclasses.replace(deg, channel_bw=topo.channel_bw.copy())
+    assert np.array_equal(back.channel_bw, topo.channel_bw)
+    # drop view: channels gone, distances no shorter than the intact graph
+    dropped = topo.degrade(ids, drop=True)
+    assert dropped.num_channels == topo.num_channels - len(ids)
+    finite = (topo.distances < 10**6) & (dropped.distances < 10**6)
+    assert (dropped.distances[finite] >= topo.distances[finite]).all()
+
+
+def test_degrade_scaled_bw(zoo_topo):
+    topo = zoo_topo
+    ids = [1]
+    half = topo.degrade(ids, bw_scale=0.5)
+    assert np.isclose(half.channel_bw[1], topo.channel_bw[1] * 0.5)
+    untouched = np.ones(topo.num_channels, bool)
+    untouched[ids] = False
+    assert np.array_equal(half.channel_bw[untouched],
+                          topo.channel_bw[untouched])

@@ -3,6 +3,7 @@ runs point-for-point, and the per-segment LCV bookkeeping must survive
 segments that swap the traffic matrix (and hence rebuild the tables)."""
 
 import numpy as np
+import pytest
 
 from repro.core import build_plan, mesh2d, traffic
 from repro.noc import Algo, SimConfig, run_trace_sweep
@@ -15,6 +16,7 @@ TRA = traffic.transpose(TOPO)
 CFG = SimConfig(cycles=800, warmup=200)
 
 
+@pytest.mark.slow
 def test_multi_seed_batch_equals_single_seed_runs():
     """Each lane of the batched trace replay must reproduce the
     stand-alone single-seed replay exactly (same PRNG fold per segment)."""
