@@ -6,6 +6,8 @@ beyond-paper ICI analyses.
   fig8      paper Fig. 8  — throughput/latency/reorder vs injection rate
   fig9      paper Fig. 9  — realistic Clos-leaf workload
   campaign  scaling       — batched campaign vs sequential simulate calls
+  simstep_scale  sim cost — fused flit-step kernel vs unfused per-cycle
+              path, 8×8 → 32×32, + shard_map lane mode (parity asserted)
   dynamics  control plane — oracle/stale/online replanning under faults
   topo_sweep  topology zoo — Q-StaR vs DOR on 3D torus / cmesh /
               express mesh / fault-region mesh (plan-table routing)
@@ -97,6 +99,141 @@ def bench_campaign():
     write_csv("campaign_speedup.csv",
               ["algo", "points", "sequential_s", "batched_s", "speedup",
                "stats_identical"], rows)
+
+
+def bench_simstep_scale():
+    """Per-cycle simulator cost: the fused flit-step kernel path vs the
+    unfused jnp oracle, 8x8 -> 32x32, plus the shard_map multi-device
+    lane mode on a 16x16 campaign batch.
+
+    Assertions, in order of importance:
+
+    * bitwise parity of the full end state between the two per-cycle
+      paths at EVERY size (the contract the differential battery pins;
+      here re-checked at benchmark scale), and between the sharded and
+      single-device lane runners;
+    * on accelerator backends (TPU/GPU — the fused Pallas kernel's
+      target) the kernel path must be >= 2x faster per cycle at
+      >= 16x16;
+    * on CPU the fused fallback is dense jnp, so the honest claim is a
+      no-regression guard (fused <= 1.25x unfused per cycle, noise
+      headroom included; measured ~1.0x at 16x16 and ~1.2x FASTER at
+      32x32) plus the optional absolute budget ``SIMSTEP_BUDGET_MS``
+      on the fused 16x16 per-cycle cost (CI regression guard).
+
+    ``SIMSTEP_MAX_NODES`` caps the sweep (CI smoke); a capped run skips
+    the committed-CSV rewrite, like ``nrank_scale``.
+    """
+    import jax
+    import numpy as np
+    from repro.core import mesh2d, traffic
+    from repro.noc.simconfig import Algo, SimConfig
+    from repro.noc import sim
+    from .common import write_csv
+
+    max_nodes = int(os.environ.get("SIMSTEP_MAX_NODES", "0"))
+    budget = float(os.environ.get("SIMSTEP_BUDGET_MS", "0"))
+    accel = jax.default_backend() in ("tpu", "gpu")
+    cases = [(8, 400), (16, 300), (32, 120)]
+    rows = []
+    per_cycle: dict[tuple[int, bool], float] = {}
+    topo_meta_cfg: dict[int, tuple] = {}   # k -> (cfg, meta) for gating
+
+    def timed_run(runner, tables, meta, cfg, points, cycles):
+        out = runner(tables, sim.make_states(meta, cfg, points))
+        jax.block_until_ready(out)                      # compile warm
+        best = float("inf")
+        for _ in range(3):
+            states = sim.make_states(meta, cfg, points)
+            t0 = time.perf_counter()
+            out = runner(tables, states)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return jax.device_get(out), best / cycles * 1e3
+
+    for k, cycles in cases:
+        topo = mesh2d(k, k)
+        if max_nodes and topo.num_nodes > max_nodes:
+            continue
+        tm = traffic.uniform(topo)
+        outs = {}
+        for uk in (False, True):
+            cfg = SimConfig(algo=Algo.XY, cycles=cycles,
+                            warmup=cycles // 3, use_kernel=uk)
+            tables, meta = sim.build_tables(topo, tm, None, cfg.num_vcs)
+            topo_meta_cfg[k] = (cfg, meta)
+            runner = sim.get_runner(meta, cfg, cycles)
+            outs[uk], ms = timed_run(runner, tables, meta, cfg,
+                                     [(0.3, 0)], cycles)
+            per_cycle[(k, uk)] = ms
+        ident = all(np.array_equal(outs[False][x], outs[True][x])
+                    for x in outs[False])
+        assert ident, f"{k}x{k}: fused state diverged from unfused"
+        su = per_cycle[(k, False)] / per_cycle[(k, True)]
+        print(f"simstep_scale,{k}x{k},unfused={per_cycle[(k, False)]:.3f}"
+              f"ms/cyc,fused={per_cycle[(k, True)]:.3f}ms/cyc,"
+              f"speedup={su:.2f}x,identical={ident}")
+        rows.append([f"mesh{k}x{k}", topo.num_nodes, cycles,
+                     f"{per_cycle[(k, False)]:.4f}",
+                     f"{per_cycle[(k, True)]:.4f}", f"{su:.3f}",
+                     int(ident)])
+        if topo.num_nodes >= 256:
+            from repro.kernels.simstep import ops as simstep_ops
+            fits = (simstep_ops.state_footprint_bytes(topo_meta_cfg[k][1],
+                                                      topo_meta_cfg[k][0])
+                    <= simstep_ops.VMEM_BUDGET_BYTES)
+            if accel and fits:
+                # the Pallas kernel actually ran: the fusion claim
+                assert su >= 2.0, (
+                    f"{k}x{k}: kernel path must be >= 2x on an "
+                    f"accelerator backend (got {su:.2f}x)")
+            else:
+                # CPU fallback, or past the VMEM budget (dense body on
+                # any backend): no-regression guard with noise headroom
+                assert su >= 0.8, (
+                    f"{k}x{k}: fused fallback regressed past the "
+                    f"noise guard ({su:.2f}x)")
+    if budget and (16, True) in per_cycle:
+        assert per_cycle[(16, True)] <= budget, (
+            f"fused 16x16 per-cycle cost {per_cycle[(16, True)]:.3f}ms "
+            f"over the {budget:.1f}ms budget")
+
+    # ---- shard_map mega-campaign mode: lanes across local devices ---- #
+    ndev = jax.device_count()
+    if (not max_nodes or max_nodes >= 256) and ndev > 1:
+        topo = mesh2d(16, 16)
+        tm = traffic.uniform(topo)
+        cycles = 200
+        lanes = [(r, s) for r in (0.1, 0.2, 0.3, 0.4)
+                 for s in range(max(2, ndev // 2))]
+        lanes = lanes[:len(lanes) - len(lanes) % ndev] or \
+            [(0.3, s) for s in range(ndev)]
+        cfg = SimConfig(algo=Algo.XY, cycles=cycles, warmup=cycles // 3)
+        tables, meta = sim.build_tables(topo, tm, None, cfg.num_vcs)
+        res = {}
+        for md in (False, True):
+            runner = sim.get_runner(meta, cfg, cycles,
+                                    num_lanes=len(lanes), multi_device=md)
+            res[md] = timed_run(runner, tables, meta, cfg, lanes, cycles)
+        ident = all(np.array_equal(res[False][0][x], res[True][0][x])
+                    for x in res[False][0])
+        assert ident, "sharded lanes diverged from single-device"
+        su = res[False][1] / res[True][1]
+        print(f"simstep_scale,shard16x16,{len(lanes)} lanes x {ndev} "
+              f"devices: single={res[False][1]:.3f}ms/cyc "
+              f"sharded={res[True][1]:.3f}ms/cyc -> {su:.2f}x, "
+              f"identical={ident}")
+        rows.append([f"shard16x16_l{len(lanes)}d{ndev}", 256, cycles,
+                     f"{res[False][1]:.4f}", f"{res[True][1]:.4f}",
+                     f"{su:.3f}", int(ident)])
+
+    if max_nodes:
+        print(f"simstep_scale: sweep capped at {max_nodes} nodes; "
+              "skipping simstep_cost.csv rewrite")
+    else:
+        write_csv("simstep_cost.csv",
+                  ["case", "nodes", "cycles", "unfused_ms_per_cycle",
+                   "fused_ms_per_cycle", "speedup", "identical"], rows)
 
 
 def bench_nrank_scale():
@@ -232,6 +369,7 @@ STAGES = {
     "fig8": _stage_fig8,
     "fig9": _stage_fig9,
     "campaign": bench_campaign,
+    "simstep_scale": bench_simstep_scale,
     "dynamics": _stage_dynamics,
     "topo_sweep": _stage_topo_sweep,
     "linkload": _stage_linkload,
@@ -256,11 +394,22 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--nrank-budget-ms", type=float, default=None,
                     help="assert the warm 16x16 plan build stays under "
                          "this budget (flag form of NRANK_BUDGET_MS)")
+    ap.add_argument("--simstep-max-nodes", type=int, default=None,
+                    help="cap the simstep_scale sweep at this many nodes "
+                         "(flag form of SIMSTEP_MAX_NODES)")
+    ap.add_argument("--simstep-budget-ms", type=float, default=None,
+                    help="assert the fused 16x16 per-cycle cost stays "
+                         "under this budget (flag form of "
+                         "SIMSTEP_BUDGET_MS)")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
     if args.nrank_max_nodes is not None:
         os.environ["NRANK_SCALE_MAX_NODES"] = str(args.nrank_max_nodes)
     if args.nrank_budget_ms is not None:
         os.environ["NRANK_BUDGET_MS"] = str(args.nrank_budget_ms)
+    if args.simstep_max_nodes is not None:
+        os.environ["SIMSTEP_MAX_NODES"] = str(args.simstep_max_nodes)
+    if args.simstep_budget_ms is not None:
+        os.environ["SIMSTEP_BUDGET_MS"] = str(args.simstep_budget_ms)
 
     want = [ALIASES.get(s, s) for s in args.stages] or list(STAGES)
     unknown = sorted(set(want) - set(STAGES))

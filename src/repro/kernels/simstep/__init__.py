@@ -1,0 +1,9 @@
+"""Fused flit-step kernel: the simulator's per-cycle hot path as one
+on-chip pass (Pallas on TPU/GPU, fused dense jnp on CPU), bit-identical
+to the unfused ``repro.noc.sim`` step it replaces."""
+
+from .ops import backend_supports_pallas, make_step
+from .ref import CORE_KEYS, make_cycle_fn, split_rand
+
+__all__ = ["backend_supports_pallas", "make_step", "make_cycle_fn",
+           "split_rand", "CORE_KEYS"]

@@ -1,0 +1,73 @@
+"""Pallas wrapper: one fused kernel invocation per simulated cycle.
+
+The kernel is a single program over whole-array blocks: every lookup
+table, state array and pre-drawn random array is handed to one
+``pallas_call``, the fused body (:func:`repro.kernels.simstep.ref.
+make_cycle_fn`) runs on the loaded values, and each state array is
+written back — the entire per-cycle pipeline (generation, injection,
+routing, allocation, movement, statistics) executes out of on-chip
+memory instead of bouncing ~40 intermediate arrays through HBM the way
+the unfused jnp chain does.
+
+Because the body is the *same function* the dense fallback jit-compiles,
+the Pallas path can never diverge from the fallback; the differential
+battery (``tests/test_simstep_kernel.py``) pins both to the unfused
+oracle.  ``interpret=True`` executes the kernel through the Pallas
+interpreter — the CPU coverage path, auto-selected by ``ops`` when the
+Pallas route is forced on a backend without compiled support.
+
+Capacity note: with whole-array blocks the full state must fit VMEM on
+TPU.  At the default flow-control parameters that holds through 16×16
+(~4 MB packed flits); past 32×32 (~13 MB) the flit buffer needs to be
+blocked over node ranges before the compiled path is practical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def make_simstep_pallas(cycle_fn, *, interpret: bool = False):
+    """Wrap a fused cycle body as ``run_cycle(tables, core, rand, cycle)``.
+
+    ``tables`` is the simulator's ``_Tables`` NamedTuple, ``core`` the
+    state dict without the PRNG key, ``rand`` this cycle's hoisted
+    draws.  Scalars ride as (1,)-shaped refs (TPU refs are rank ≥ 1)
+    and are squeezed back around the body, so the body sees exactly the
+    shapes the dense path sees.
+    """
+
+    def run_cycle(tables, core, rand, cycle):
+        skeys = sorted(core)
+        rkeys = sorted(rand)
+        nt = len(tables)
+        ns, nr = len(skeys), len(rkeys)
+        raw = (list(tables) + [core[k] for k in skeys]
+               + [rand[k] for k in rkeys]
+               + [jnp.asarray(cycle, jnp.int32)])
+        scal = [x.ndim == 0 for x in raw]
+        ins = [x[None] if s else x for x, s in zip(raw, scal)]
+        n_in = len(ins)
+        out_scal = scal[nt:nt + ns]
+        out_shape = [jax.ShapeDtypeStruct(ins[nt + i].shape,
+                                          ins[nt + i].dtype)
+                     for i in range(ns)]
+
+        def body(*refs):
+            vals = [r[...] for r in refs[:n_in]]
+            vals = [v[0] if s else v for v, s in zip(vals, scal)]
+            t = type(tables)(*vals[:nt])
+            st = dict(zip(skeys, vals[nt:nt + ns]))
+            rd = dict(zip(rkeys, vals[nt + ns:nt + ns + nr]))
+            new = cycle_fn(t, st, rd, vals[-1])
+            for ref, k, s in zip(refs[n_in:], skeys, out_scal):
+                ref[...] = new[k][None] if s else new[k]
+
+        outs = pl.pallas_call(body, out_shape=out_shape,
+                              interpret=interpret)(*ins)
+        return {k: (o[0] if s else o)
+                for k, o, s in zip(skeys, outs, out_scal)}
+
+    return run_cycle

@@ -1,0 +1,89 @@
+"""Public op: the fused flit-step with backend-aware dispatch.
+
+Mirrors :mod:`repro.kernels.possibility.ops`: defaults are the COMPILED
+paths.  On backends with Pallas support (TPU/GPU) the fused cycle runs
+as one Pallas kernel; elsewhere (CPU) the call auto-falls back to the
+fused dense jnp body, which XLA jit-compiles — the interpreter is never
+the default anywhere.  Pass ``use_pallas`` / ``interpret`` explicitly
+to pin a path (the differential battery runs the Pallas kernel in
+interpret mode on CPU to keep it covered).
+
+The entry point is :func:`make_step`: it returns a drop-in replacement
+for the unfused ``repro.noc.sim._make_step`` transition — same
+``step(tables, state, cycle) -> (state, None)`` contract, same state
+pytree, bit-identical arrays — selected by ``SimConfig.use_kernel``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.noc.simconfig import Algo, SimConfig
+from .kernel import make_simstep_pallas
+from .ref import make_cycle_fn, split_rand
+
+
+def backend_supports_pallas() -> bool:
+    """Compiled Pallas lowering exists on TPU/GPU only."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+# On-chip budget for the whole-array kernel (VMEM is ~16 MB/core on
+# TPU); above it the auto path uses the fused dense body instead — the
+# single-program kernel would not fit until the flit buffer is blocked
+# over node ranges (see kernel.py's capacity note).
+VMEM_BUDGET_BYTES = 10 * 2**20
+
+
+def state_footprint_bytes(meta: dict, cfg: SimConfig) -> int:
+    """Approximate bytes the kernel must hold on chip: the state pytree
+    plus the traced tables (all int32/float32; small vectors ignored)."""
+    n, p, v, nin, c = (meta["N"], meta["P"], meta["V"], meta["NIN"],
+                       meta["C"])
+    o = meta["O"]
+    words = (nin * cfg.buf_per_vc * 10          # packed flits (NF words)
+             + n * cfg.src_queue_pkts * 5       # packed qpkts (NQ words)
+             + 3 * n * n                        # next_seq, exp_seq, rbits
+             + n * p * v + n * p                # out_held, rr
+             + 8 * nin + 10 * n + 5 * c         # per-input/node/chan vecs
+             + o * n * n + 2 * n * n)           # port tables, choice, cdf
+    return 4 * words
+
+
+def make_step(meta: dict, cfg: SimConfig,
+              use_pallas: bool | None = None,
+              interpret: bool | None = None):
+    """Build the fused per-cycle transition for one simulation cell.
+
+    ``use_pallas=None`` resolves to the backend's compiled support AND
+    the state fitting the on-chip budget (past it, the whole-array
+    kernel cannot hold the packed flit records in VMEM, so the auto
+    path runs the fused dense body even on TPU/GPU — pass
+    ``use_pallas=True`` to force the kernel anyway); ``interpret=None``
+    resolves to compiled where supported and to the interpreter only
+    when the Pallas path was explicitly requested on a backend that
+    cannot compile it.
+    """
+    if use_pallas is None:
+        use_pallas = (backend_supports_pallas()
+                      and state_footprint_bytes(meta, cfg)
+                      <= VMEM_BUDGET_BYTES)
+    if interpret is None:
+        interpret = use_pallas and not backend_supports_pallas()
+    cycle_fn = make_cycle_fn(meta, cfg)
+    run_cycle = (make_simstep_pallas(cycle_fn, interpret=interpret)
+                 if use_pallas else cycle_fn)
+    algo = Algo(cfg.algo)
+    n, ndim = meta["N"], meta["NDIM"]
+
+    def step(tables, state, cycle):
+        # PRNG advance stays outside the kernel (no key ops in Pallas);
+        # split_rand consumes the key exactly like the unfused step, so
+        # the streams stay aligned cycle for cycle.
+        key, rand = split_rand(state["key"], algo, n, ndim)
+        core = {k: v for k, v in state.items() if k != "key"}
+        core = run_cycle(tables, core, rand, cycle)
+        core["key"] = key
+        return core, None
+
+    return step

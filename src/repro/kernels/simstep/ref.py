@@ -1,0 +1,460 @@
+"""Fused per-cycle flit-step: the simulator hot path as one pass.
+
+:func:`make_cycle_fn` builds the full per-cycle transition — packet
+generation, source-queue pushes, flit injection, table-routed port
+selection, switch allocation, flit movement, credit/lock updates and
+statistics — as ONE jnp function over the packed flit records.  The
+same body serves both backends (dispatched by
+:mod:`repro.kernels.simstep.ops`):
+
+* dense fallback — XLA jit-compiles the body directly (the CPU path);
+* Pallas — :mod:`repro.kernels.simstep.kernel` hands every
+  table/state/rand array to a single kernel invocation and calls this
+  body on the loaded values, so the whole cycle runs as one on-chip
+  pass with no HBM round-trips between the pipeline stages.
+
+**Exact-equivalence contract.**  The unfused oracle is
+``repro.noc.sim._make_step``; every place this body differs from it is
+an integer-exact or provably bit-identical rewrite:
+
+* destination sampling — the O(N²) dense CDF compare-and-count becomes
+  a vectorized binary search.  CDF rows are cumsums of non-negative
+  float32, hence non-decreasing, so the upper-bound partition point
+  equals the dense ``(cdf <= u).sum(1)`` count.
+* ``next_seq`` and the reorder bookkeeping — dense one-hot row updates
+  become int32 scatters at the same (per-row unique) indices.
+
+The rewrites are *size-gated* (``n >= _WIDE_N``): their per-op dispatch
+overhead only pays for itself once the O(N²) terms dominate, so small
+meshes run the literal dense formulation and large meshes the scatter/
+search one — both exact, so the gate can never change a result, only
+the op schedule.
+
+Everything else is copied operation-for-operation (same op order, same
+dtypes, same clip/sentinel conventions).  RNG is hoisted out of the
+body: :func:`split_rand` consumes the per-lane key with the identical
+split/draw sequence as the unfused step, and the drawn uniforms enter
+the body as data — required by the Pallas path (no key ops inside a
+kernel) and bit-preserving by construction.  The differential battery
+(``tests/test_simstep_kernel.py``) pins fused == unfused from
+randomized mid-flight states across topologies and algorithms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.noc.simconfig import (Algo, SimConfig, NF, F_SRC, F_DST,
+                                 F_INTER, F_SEQ, F_TIME, F_HOPS, F_ORDER,
+                                 F_HEAD, F_TAIL, F_PHASE, Q_DST, Q_INTER,
+                                 Q_ORDER, Q_TIME, Q_SEQ)
+
+# Python literal, not a jnp scalar: the Pallas path traces the cycle
+# body as a kernel, which must not capture concrete device arrays.
+_BIG = 1 << 30
+
+# Node count from which the O(N²)-avoiding rewrites beat the dense
+# formulations (measured on CPU; on accelerators the kernel's win is
+# memory residency, which is size-independent).
+_WIDE_N = 256
+
+# State keys the cycle body transforms — everything in
+# ``repro.noc.sim.fresh_state`` except the PRNG key, which the step
+# wrapper (ops.make_step) advances outside the kernel.
+CORE_KEYS = (
+    "flits", "fifo_start", "fifo_size", "lock_op", "lock_ov", "out_held",
+    "rr", "qpkts", "q_start", "q_size", "prog", "next_seq", "exp_seq",
+    "rbits", "node_fwd", "eject_flits", "chan_fwd", "chan_seen", "lat_sum",
+    "lat_cnt", "lat_max", "lat_hist", "reorder_max", "injected", "offered",
+    "dropped", "eject_total", "meas_cnt", "rate", "cycle0", "inject_until",
+    "measure_until",
+)
+
+
+def split_rand(key, algo: Algo, n: int, ndim: int):
+    """Advance one lane's PRNG by exactly one cycle.
+
+    Identical key consumption to the unfused step: one 5-way split per
+    cycle, a 3-way split of the metadata key, and per-algorithm draws
+    from the same subkeys — so the fused and unfused paths see the same
+    random bits cycle for cycle.  Returns (new_key, rand dict)."""
+    key, kg, kd, km, _kv = jax.random.split(key, 5)
+    k1, k2, k3 = jax.random.split(km, 3)
+    rand = {"u": jax.random.uniform(kg, (n,)),
+            "ud": jax.random.uniform(kd, (n,))}
+    if algo == Algo.O1TURN:
+        rand["ob"] = jax.random.bernoulli(k1, 0.5, (n,))
+    elif algo == Algo.VALIANT:
+        rand["ri"] = jax.random.randint(k2, (n,), 0, n)
+    elif algo == Algo.ROMM:
+        rand["ur"] = jax.random.uniform(k3, (n, ndim))
+    return key, rand
+
+
+def make_cycle_fn(meta: dict, cfg: SimConfig):
+    """Build ``cycle_fn(tables, state, rand, cycle) -> state`` — the
+    fused per-cycle transition over the core state arrays (no PRNG
+    key; ``rand`` carries this cycle's draws from :func:`split_rand`,
+    ``cycle`` is the in-chunk cycle index)."""
+    algo = Algo(cfg.algo)
+    n, p, v, nin = meta["N"], meta["P"], meta["V"], meta["NIN"]
+    p_local = meta["P_LOCAL"]
+    num_orders = meta["O"]
+    if algo == Algo.ODDEVEN and meta["NDIM"] != 2:
+        raise ValueError("odd-even routing is a 2D turn model; "
+                         f"topology has ndim={meta['NDIM']}")
+    b, q, l = cfg.buf_per_vc, cfg.src_queue_pkts, cfg.packet_len
+    pv = p * v
+    two_phase = algo in (Algo.VALIANT, Algo.ROMM)
+    wide = n >= _WIDE_N
+    # binary-search iteration count: the [0, n] interval at least halves
+    # every guarded step, so bit_length(n) steps always converge
+    search_iters = max(int(n).bit_length(), 1)
+
+    def sample_dst(cdf, ud):
+        """Upper-bound binary search per source row: the count of CDF
+        entries <= ud — bit-identical to the unfused dense
+        ``(cdf <= ud[:, None]).sum(1)`` because each row is
+        non-decreasing (cumsum of non-negative float32)."""
+        rows = jnp.arange(n)
+        lo = jnp.zeros(n, jnp.int32)
+        hi = jnp.full((n,), n, jnp.int32)
+        for _ in range(search_iters):
+            mid = (lo + hi) // 2
+            le = cdf[rows, jnp.clip(mid, 0, n - 1)] <= ud
+            upd = lo < hi
+            lo = jnp.where(upd & le, mid + 1, lo)
+            hi = jnp.where(upd & ~le, mid, hi)
+        return lo
+
+    def fifo_push(state, idx, ok, records):
+        """Append packed flit ``records`` (K, NF) to FIFOs ``idx`` where
+        ``ok`` — ONE scatter with a contiguous NF-word payload."""
+        slot = (state["fifo_start"][idx] + state["fifo_size"][idx]) % b
+        safe_idx = jnp.where(ok, idx, nin)  # out of range ⇒ dropped
+        state["flits"] = state["flits"].at[safe_idx, slot].set(
+            records, mode="drop")
+        state["fifo_size"] = state["fifo_size"].at[safe_idx].add(
+            1, mode="drop")
+        return state
+
+    def gen_metadata(t, rand, src, dst):
+        """Per-algo packet metadata (order, inter) from the hoisted
+        draws — same arithmetic as the unfused ``gen_metadata``."""
+        if algo == Algo.XY:
+            order = jnp.zeros(n, jnp.int32)
+        elif algo == Algo.YX:
+            order = jnp.full((n,), num_orders - 1, jnp.int32)
+        elif algo == Algo.O1TURN:
+            order = jnp.where(rand["ob"], num_orders - 1, 0).astype(
+                jnp.int32)
+        elif algo == Algo.BIDOR:
+            order = t.choice[src, dst]
+        else:
+            order = jnp.zeros(n, jnp.int32)
+        if algo == Algo.VALIANT:
+            inter = rand["ri"]
+        elif algo == Algo.ROMM:
+            cs, cd = t.coords[src], t.coords[dst]
+            lo = jnp.minimum(cs, cd)
+            hi = jnp.maximum(cs, cd)
+            ic = lo + (rand["ur"] * (hi - lo + 1)).astype(jnp.int32)
+            ic = jnp.clip(ic, lo, hi)
+            inter = (ic * t.strides).sum(-1)
+        else:
+            inter = jnp.full((n,), -1, jnp.int32)
+        return order, inter
+
+    def oddeven_route(t, cur, src, target, free_by_port):
+        """Chiu's minimal adaptive odd-even ROUTE + credit-based selection.
+
+        Ports: 0=+x(E) 1=−x(W) 2=+y 3=−y.  Returns the chosen port.
+        """
+        cx = t.coords[cur, 0]
+        sx = t.coords[src, 0]
+        dx = t.coords[target, 0] - cx
+        dy = t.coords[target, 1] - t.coords[cur, 1]
+        y_port = jnp.where(dy > 0, 2, 3)
+        east_ok = (dx > 0) & ((dy == 0)
+                              | (t.coords[target, 0] % 2 == 1) | (dx != 1))
+        y_ok_east = (dx > 0) & (dy != 0) & ((cx % 2 == 1) | (cx == sx))
+        west_ok = dx < 0
+        y_ok_west = (dx < 0) & (dy != 0) & (cx % 2 == 0)
+        y_ok_straight = (dx == 0) & (dy != 0)
+        x_port = jnp.where(dx > 0, 0, 1)
+        x_ok = east_ok | west_ok
+        y_ok = y_ok_east | y_ok_west | y_ok_straight
+        fx = jnp.take_along_axis(free_by_port, x_port[:, None], 1)[:, 0]
+        fy = jnp.take_along_axis(free_by_port, y_port[:, None], 1)[:, 0]
+        prefer_y = y_ok & ((~x_ok) | (fy > fx))
+        return jnp.where(prefer_y, y_port, x_port), x_ok, y_ok
+
+    def cycle_fn(t, state, rand, cycle):
+        # iotas built inside the body: under the Pallas trace they are
+        # kernel ops, not captured host constants (which pallas_call
+        # rejects); under the dense jit XLA folds them away identically
+        n_arange = jnp.arange(n)
+        nin_arange = jnp.arange(nin)
+        cycle = state["cycle0"] + cycle    # absolute cycle across segments
+        measuring = (cycle >= cfg.warmup) & (cycle < state["measure_until"])
+        state["meas_cnt"] += measuring.astype(jnp.int32)
+
+        # ---------------- 1. packet generation (open loop) -------------- #
+        u, ud = rand["u"], rand["ud"]
+        gen = (u < (t.p_gen * (state["rate"] / l))) \
+            & (cycle < state["inject_until"])
+        raw_dst = (sample_dst(t.cdf, ud) if wide
+                   else (t.cdf <= ud[:, None]).sum(1))
+        dst = jnp.clip(raw_dst, 0, n - 1).astype(jnp.int32)
+        order, inter = gen_metadata(t, rand, n_arange, dst)
+        space = state["q_size"] < q
+        push = gen & space
+        seq = state["next_seq"][n_arange, dst]
+        # row s bumps column dst[s] (rows distinct): scatter or one-hot
+        if wide:
+            state["next_seq"] = state["next_seq"].at[n_arange, dst].add(
+                push.astype(jnp.int32))
+        else:
+            state["next_seq"] = state["next_seq"] + (
+                push[:, None] & (n_arange[None, :] == dst[:, None]))
+        slot = (state["q_start"] + state["q_size"]) % q
+        row = jnp.where(push, n_arange, n)  # drop when not pushing
+        qrec = jnp.stack(
+            [dst, inter, order, jnp.full((n,), cycle, jnp.int32), seq], -1)
+        state["qpkts"] = state["qpkts"].at[row, slot].set(qrec, mode="drop")
+        state["q_size"] = state["q_size"] + push
+        state["offered"] += jnp.where(measuring, gen.sum(), 0)
+        state["dropped"] += jnp.where(measuring, (gen & ~space).sum(), 0)
+
+        # ---------------- 2. flit injection (1/cycle/node) -------------- #
+        hs = state["q_start"]
+        hpkt = state["qpkts"][n_arange, hs]  # (N, NQ)
+        h_dst = hpkt[:, Q_DST]
+        h_inter = hpkt[:, Q_INTER]
+        h_order = hpkt[:, Q_ORDER]
+        h_seq = hpkt[:, Q_SEQ]
+        h_time = hpkt[:, Q_TIME]
+        fl_head = state["prog"] == 0
+        fl_tail = state["prog"] == l - 1
+        phase0 = (h_inter < 0) | (h_inter == n_arange)
+        if algo in (Algo.XY, Algo.YX):
+            vc_in = (n_arange + h_dst) % v
+        elif algo in (Algo.O1TURN, Algo.BIDOR):
+            vc_in = h_order % v
+        elif two_phase:
+            vc_in = phase0.astype(jnp.int32) % v
+        else:  # ODDEVEN: local VC with more space
+            base = (n_arange * p + p_local) * v
+            sizes = jnp.stack([state["fifo_size"][base + k]
+                               for k in range(v)], 1)
+            vc_in = jnp.argmin(sizes, 1).astype(jnp.int32)
+        lf_idx = (n_arange * p + p_local) * v + vc_in
+        can = (state["q_size"] > 0) & (state["fifo_size"][lf_idx] < b)
+        inj_rec = jnp.stack(
+            [n_arange, h_dst, h_inter, h_seq, h_time,
+             jnp.zeros(n, jnp.int32), h_order, fl_head.astype(jnp.int32),
+             fl_tail.astype(jnp.int32), phase0.astype(jnp.int32)], -1)
+        state = fifo_push(state, lf_idx, can, inj_rec)
+        state["prog"] = jnp.where(can, state["prog"] + 1, state["prog"])
+        done = can & (state["prog"] >= l)
+        state["prog"] = jnp.where(done, 0, state["prog"])
+        state["q_start"] = jnp.where(done, (hs + 1) % q, hs)
+        state["q_size"] = state["q_size"] - done
+        state["injected"] += can.sum()
+
+        # ---------------- 3. head-of-line + routing --------------------- #
+        st_ = state["fifo_start"]
+        g_all = state["flits"][nin_arange, st_]  # (NIN, NF) one gather
+        g = dict(src=g_all[:, F_SRC], dst=g_all[:, F_DST],
+                 inter=g_all[:, F_INTER], seq=g_all[:, F_SEQ],
+                 time=g_all[:, F_TIME], hops=g_all[:, F_HOPS],
+                 order=g_all[:, F_ORDER], head=g_all[:, F_HEAD] != 0,
+                 tail=g_all[:, F_TAIL] != 0, phase=g_all[:, F_PHASE] != 0)
+        valid = state["fifo_size"] > 0
+        route_phase = g["phase"] | (g["inter"] < 0) | (g["inter"] == t.n_of)
+        target = jnp.where(route_phase, g["dst"], g["inter"])
+        target = jnp.clip(target, 0, n - 1)
+        at_dest = target == t.n_of
+        locked = state["lock_op"] >= 0
+
+        # receiver free space per (input, port): for adaptive selection
+        if algo == Algo.ODDEVEN:
+            recv_base = (t.neighbor * p + t.recv_port) * v  # (N, P)
+            free_pv = jnp.stack(
+                [b - state["fifo_size"][recv_base + k] for k in range(v)],
+                -1)  # (N, P, V)
+            free_port_total = free_pv.sum(-1)  # (N, P)
+            op_ad, _, _ = oddeven_route(
+                t, t.n_of, g["src"], target, free_port_total[t.n_of])
+            # VC choice: freer VC at the chosen port, must be un-held
+            held = state["out_held"][t.n_of, op_ad] >= 0  # (NIN, V)
+            f = free_pv[t.n_of, op_ad]  # (NIN, V)
+            f = jnp.where(held, -1, f)
+            ov_route = jnp.argmax(f, -1).astype(jnp.int32)
+            op_route = op_ad
+        else:
+            if algo == Algo.XY:
+                eff_order = jnp.zeros(nin, jnp.int32)
+            elif algo == Algo.YX:
+                eff_order = jnp.full((nin,), num_orders - 1, jnp.int32)
+            elif two_phase:
+                eff_order = jnp.zeros(nin, jnp.int32)
+            else:
+                eff_order = g["order"]
+            op_route = t.port[eff_order, t.n_of, target]
+            if algo in (Algo.XY, Algo.YX):
+                ov_route = t.v_of
+            elif two_phase:
+                ov_route = route_phase.astype(jnp.int32) % v
+            else:
+                ov_route = g["order"] % v
+        op = jnp.where(at_dest, p_local, op_route)
+        ov = jnp.where(at_dest, 0, ov_route)
+        op = jnp.where(locked, state["lock_op"], op)
+        ov = jnp.where(locked, state["lock_ov"], ov)
+
+        # ---------------- 4. eligibility -------------------------------- #
+        is_eject = op == p_local
+        nei = t.neighbor[t.n_of, jnp.clip(op, 0, p - 1)]
+        rp = t.recv_port[t.n_of, jnp.clip(op, 0, p - 1)]
+        recv_idx = (nei * p + rp) * v + ov
+        has_credit = is_eject | (state["fifo_size"][
+            jnp.clip(recv_idx, 0, nin - 1)] < b)
+        vc_free = state["out_held"][t.n_of, jnp.clip(op, 0, p - 1), ov] == -1
+        needs_alloc = g["head"] & ~locked & ~is_eject
+        cycf = cycle.astype(jnp.float32)
+        chan_live = (jnp.floor((cycf + 1.0) * t.chan_bw)
+                     - jnp.floor(cycf * t.chan_bw)) >= 1.0
+        chan_live = jnp.concatenate(
+            [chan_live, jnp.zeros((1,), bool)])  # sentinel: no channel
+        chan_ok = is_eject | chan_live[
+            t.chan_of[t.n_of, jnp.clip(op, 0, p - 1)]]
+        elig = valid & has_credit & chan_ok & (vc_free | ~needs_alloc)
+
+        # ---------------- 5. switch allocation (round-robin) ------------ #
+        # all output ports allocated at once: score (N, PV, P), winner per
+        # (node, port) column — ports are independent, so this is exactly
+        # the per-port round-robin pick
+        in_local = nin_arange % pv  # input index within its node
+        clip_op = jnp.clip(op, 0, p - 1)
+        elig2 = elig.reshape(n, pv)
+        op2 = op.reshape(n, pv)
+        mask_po = elig2[:, :, None] & (op2[:, :, None]
+                                       == jnp.arange(p)[None, None, :])
+        score = (jnp.arange(pv)[None, :, None]
+                 - state["rr"][:, None, :]) % pv
+        score = jnp.where(mask_po, score, _BIG)
+        win = jnp.argmin(score, 1).astype(jnp.int32)      # (N, P)
+        ok = score.min(1) < _BIG
+        grants = jnp.where(ok, win, -1)
+        state["rr"] = jnp.where(ok, (win + 1) % pv, state["rr"])
+
+        # ---------------- 6. move granted flits ------------------------- #
+        granted = grants >= 0  # (N, P)
+        # input-centric pop flag: input i moved iff it won its output port
+        popped = elig & (grants[t.n_of, clip_op] == in_local)
+        win_nin = jnp.where(granted,
+                            n_arange[:, None] * pv + grants, nin)  # drop idx
+        win_flat = jnp.clip(win_nin, 0, nin - 1).reshape(-1)
+        # winner records + routing decision, ONE gather of NF+3 words
+        g_ext = jnp.concatenate(
+            [g_all, op[:, None], ov[:, None],
+             route_phase.astype(jnp.int32)[:, None]], -1)
+        w_ext = g_ext[win_flat].reshape(n, p, NF + 3)
+        w_all = w_ext[..., :NF]
+        w_op = w_ext[..., NF]
+        w_ov = w_ext[..., NF + 1]
+        w_phase = w_ext[..., NF + 2]
+        w = dict(head=w_all[..., F_HEAD] != 0, tail=w_all[..., F_TAIL] != 0)
+        # pops (elementwise — ``popped`` marks at most one flit per input)
+        state["fifo_start"] = jnp.where(popped, (st_ + 1) % b, st_)
+        state["fifo_size"] = state["fifo_size"] - popped
+        # pushes (network ports only): one packed scatter
+        net = granted & (w_op != p_local)
+        dest_nei = t.neighbor[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
+        dest_rp = t.recv_port[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
+        dest_idx = (dest_nei * p + dest_rp) * v + w_ov
+        push_rec = w_all.at[..., F_HOPS].add(1)
+        push_rec = push_rec.at[..., F_PHASE].set(w_phase.astype(jnp.int32))
+        state = fifo_push(state, dest_idx.reshape(-1), net.reshape(-1),
+                          push_rec.reshape(-1, NF))
+        # wormhole locks (elementwise): set on head (non-tail), clear on tail
+        set_lock_i = popped & g["head"] & ~g["tail"]
+        clr_lock_i = popped & g["tail"]
+        state["lock_op"] = jnp.where(
+            set_lock_i, op, jnp.where(clr_lock_i, -1, state["lock_op"]))
+        state["lock_ov"] = jnp.where(
+            set_lock_i, ov, jnp.where(clr_lock_i, -1, state["lock_ov"]))
+        # out_held bookkeeping (elementwise over (N, P, V); net ports only)
+        hold_set = granted & w["head"] & ~w["tail"] & net
+        hold_clr = granted & w["tail"] & net
+        vmask = ((hold_set | hold_clr)[..., None]
+                 & (jnp.arange(v)[None, None, :] == w_ov[..., None]))
+        hold_val = jnp.where(hold_set, grants, -1)
+        state["out_held"] = jnp.where(vmask, hold_val[..., None],
+                                      state["out_held"])
+
+        # ---------------- 7. statistics --------------------------------- #
+        state["node_fwd"] = state["node_fwd"] + jnp.where(
+            measuring, granted.sum(1), 0)
+        state["chan_fwd"] = state["chan_fwd"] + (
+            net & measuring)[t.chan_src_n, t.chan_src_p]
+        state["chan_seen"] = state["chan_seen"] + (
+            net[t.chan_src_n, t.chan_src_p])
+        ej_n = granted[:, p_local]
+        wl = w_ext[:, p_local, :]  # (N, NF+3) local-port winner records
+        state["eject_total"] += ej_n.sum()
+        state["eject_flits"] = state["eject_flits"] + jnp.where(
+            measuring, ej_n, 0)
+        tail_ej = ej_n & (wl[:, F_TAIL] != 0)
+        lat = (cycle - wl[:, F_TIME]) + wl[:, F_HOPS] + 1  # +1: eject hop
+        lat_ok = tail_ej & (wl[:, F_TIME] >= cfg.warmup)
+        state["lat_sum"] += jnp.where(lat_ok, lat, 0).sum()
+        state["lat_cnt"] += lat_ok.sum()
+        state["lat_max"] = jnp.maximum(
+            state["lat_max"], jnp.where(lat_ok, lat, 0).max())
+        hbin = jnp.minimum(lat // cfg.lat_bin_width, cfg.lat_bins - 1)
+        state["lat_hist"] = state["lat_hist"].at[
+            jnp.where(lat_ok, hbin, cfg.lat_bins)].add(1, mode="drop")
+        # reorder tracking (≤ 1 tail eject per node per cycle: the local
+        # port) — per-flow rows updated by scatter at unique indices
+        te = tail_ej
+        src_v = wl[:, F_SRC]
+        seq_v = wl[:, F_SEQ]
+        src_safe = jnp.where(te, src_v, 0)
+        exp = state["exp_seq"][n_arange, src_safe]
+        bits = state["rbits"][n_arange, src_safe]
+        off = seq_v - exp
+        in_win = (off >= 0) & (off < 32)
+        off_c = jnp.clip(off, 0, 31).astype(jnp.uint32)
+        bits2 = jnp.where(te & in_win,
+                          bits | (jnp.uint32(1) << off_c),
+                          bits)
+        lowmask = (bits2 & ~(bits2 + 1))  # trailing ones
+        run = jax.lax.population_count(lowmask)
+        advance = te & ((bits2 & 1) == 1)
+        exp2 = jnp.where(advance, exp + run, exp)
+        run_c = jnp.minimum(run, 31).astype(jnp.uint32)
+        bits3 = jnp.where(advance,
+                          jnp.where(run >= 32, jnp.uint32(0), bits2 >> run_c),
+                          bits2)
+        if wide:
+            touch_row = jnp.where(te, n_arange, n)  # drop untouched nodes
+            state["exp_seq"] = state["exp_seq"].at[
+                touch_row, src_safe].set(exp2, mode="drop")
+            state["rbits"] = state["rbits"].at[
+                touch_row, src_safe].set(bits3, mode="drop")
+        else:
+            src_oh = te[:, None] & (n_arange[None, :] == src_safe[:, None])
+            state["exp_seq"] = jnp.where(src_oh, exp2[:, None],
+                                         state["exp_seq"])
+            state["rbits"] = jnp.where(src_oh, bits3[:, None],
+                                       state["rbits"])
+        occ = jax.lax.population_count(state["rbits"]).sum(1) * l
+        state["reorder_max"] = jnp.maximum(
+            state["reorder_max"],
+            jnp.where(measuring, occ.max(), 0).astype(jnp.int32))
+        return state
+
+    return cycle_fn

@@ -76,6 +76,14 @@ class CampaignSpec:
         scenario) cell runs through the control plane's event-driven loop
         (:func:`repro.noc.ctrl.run_controlled`), (rate, seed) points still
         batched as lanes of one vmapped state.
+      multi_device: ``shard_map`` lane parallelism — ``True`` forces the
+        explicit multi-device runner (lanes split over all local devices,
+        carry buffers donated), ``False`` pins single-device execution,
+        ``None`` (default) auto-enables whenever >1 device is visible and
+        the (rate, seed) lane count divides evenly.  Results are
+        bit-identical either way (``tests/test_multidevice.py``); on CPU
+        expose cores with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
 
     topo: Topology | None
@@ -88,6 +96,7 @@ class CampaignSpec:
     sat_occupancy: float = 0.9
     scenarios: tuple = ()
     topos: tuple[Topology, ...] = ()
+    multi_device: bool | None = None
 
     def __post_init__(self):
         if not (self.algos and self.patterns and self.rates and self.seeds):
@@ -235,7 +244,9 @@ def _run_cell(spec: CampaignSpec, cfg: SimConfig, tables, meta,
     done = 0
     while done < total:
         step_cycles = min(chunk, total - done)
-        runner = get_runner(meta, cfg, step_cycles)
+        runner = get_runner(meta, cfg, step_cycles,
+                            num_lanes=len(points),
+                            multi_device=spec.multi_device)
         batched = runner(tables, batched)
         done += step_cycles
         occ = queue_occupancy(tables, cfg, batched["q_size"], q_meta)
@@ -343,6 +354,7 @@ def run_campaign(spec: CampaignSpec, *,
                             nrank0=pat_nrank if algo == Algo.BIDOR
                             else None,
                             sat_occupancy=spec.sat_occupancy,
+                            multi_device=spec.multi_device,
                             verbose=verbose)
                         results = [ctrl_res.result_with_peak(i)
                                    for i in range(len(points))]

@@ -329,6 +329,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                    bidor_table: BiDORTable | None = None,
                    nrank0: NRankResult | None = None,
                    sat_occupancy: float | None = None,
+                   multi_device: bool | None = None,
                    verbose: bool = False) -> ControlledResult:
     """Run a simulation under an event schedule with a control policy.
 
@@ -336,6 +337,11 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     :func:`repro.noc.sim.run_sweep` (same per-point PRNG streams): with an
     empty scenario the chunked, hot-swapping loop is bit-identical to the
     single-call sweep (asserted by ``tests/test_ctrl.py``).
+    ``multi_device`` selects the ``shard_map`` lane-parallel runner for
+    every control epoch (semantics as in
+    :func:`repro.noc.sim.get_runner`); the per-cycle transition itself —
+    fused kernel vs. unfused jnp — follows ``cfg.use_kernel``, and both
+    knobs leave every statistic bit-identical.
 
     The run advances in control epochs (``scenario.replan.epoch`` cycles,
     event cycles added as extra boundaries).  At each boundary the
@@ -390,7 +396,8 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
 
     t0 = 0
     for t1 in bounds:
-        runner = get_runner(meta, cfg, t1 - t0)
+        runner = get_runner(meta, cfg, t1 - t0, num_lanes=nlanes,
+                            multi_device=multi_device)
         batched = runner(tables, batched)
         epoch_bounds.append((t0, t1))
         t0 = t1

@@ -9,7 +9,14 @@ single-cycle routing.  The paper's 2-cycle base hop latency is realized as
 identical for every algorithm, so all relative comparisons are preserved.
 
 The whole per-cycle pipeline is pure jnp and runs under ``lax.scan``; one
-jit-compilation per (topology, algorithm, packet-length) triple.
+jit-compilation per (topology, algorithm, packet-length) triple.  By
+default (``SimConfig.use_kernel``) the per-cycle transition is the fused
+flit-step kernel of :mod:`repro.kernels.simstep` — one on-chip pass over
+the packed flit records (Pallas on TPU/GPU, fused dense jnp on CPU),
+bit-identical to the unfused chain in :func:`_make_step`, which stays as
+the differential-testing oracle.  Campaign lane batches can additionally
+run under an explicit ``shard_map`` over all local devices with donated
+carry buffers (:func:`get_runner` ``multi_device``).
 
 **Routing is plan-table-driven.**  The simulator never recomputes a
 dimension-order decision: every per-cycle routing step is a gather over a
@@ -40,19 +47,14 @@ import numpy as np
 
 from repro.core.bidor import BiDORTable, dor_table
 from repro.core.topology import Topology
-from .simconfig import Algo, SimConfig, SimResult
+# Packed record layouts live in simconfig so the fused kernel package
+# (repro.kernels.simstep) can share them without importing this module.
+from .simconfig import (Algo, SimConfig, SimResult, NF, F_SRC, F_DST,
+                        F_INTER, F_SEQ, F_TIME, F_HOPS, F_ORDER, F_HEAD,
+                        F_TAIL, F_PHASE, NQ, Q_DST, Q_INTER, Q_ORDER,
+                        Q_TIME, Q_SEQ)
 
 _BIG = jnp.int32(1 << 30)
-
-# Packed flit-record layout: one (NIN, BUF, NF) int32 array instead of ten
-# (NIN, BUF) arrays — FIFO pushes/pops become a single scatter/gather with
-# a contiguous NF-word payload (the dominant per-cycle cost on CPU/TPU).
-NF = 10
-(F_SRC, F_DST, F_INTER, F_SEQ, F_TIME,
- F_HOPS, F_ORDER, F_HEAD, F_TAIL, F_PHASE) = range(NF)
-# Packed source-queue packet records: (N, Q, NQ) int32.
-NQ = 5
-(Q_DST, Q_INTER, Q_ORDER, Q_TIME, Q_SEQ) = range(NQ)
 
 
 class _Tables(NamedTuple):
@@ -240,7 +242,16 @@ def _popcount(x):
 
 def _make_step(meta: dict, cfg: SimConfig):
     """Build the per-cycle transition function (tables traced, so all
-    traffic patterns and injection rates share one compilation per algo)."""
+    traffic patterns and injection rates share one compilation per algo).
+
+    With ``cfg.use_kernel`` (the default) the transition is the fused
+    flit-step kernel (:mod:`repro.kernels.simstep`: one Pallas pass on
+    TPU/GPU, the fused dense jnp body on CPU) — bit-identical to the
+    unfused chain below, which remains the differential-testing oracle
+    and the ``simstep_scale`` benchmark baseline."""
+    if cfg.use_kernel:
+        from repro.kernels import simstep  # deferred: avoids an import
+        return simstep.make_step(meta, cfg)  # cycle with repro.noc
     algo = Algo(cfg.algo)
     n, p, v, nin = meta["N"], meta["P"], meta["V"], meta["NIN"]
     p_local = meta["P_LOCAL"]
@@ -607,17 +618,76 @@ def _get_runner(meta_key: tuple, cfg_key: tuple, num_cycles: int):
     return jax.jit(jax.vmap(run, in_axes=(None, 0)))
 
 
+@functools.lru_cache(maxsize=None)
+def _get_sharded_runner(meta_key: tuple, cfg_key: tuple, num_cycles: int,
+                        ndev: int):
+    """shard_map lane-parallel variant of :func:`_get_runner`.
+
+    Lanes are fully independent, so splitting the batch axis over an
+    explicit ("lane",) device mesh is exact — every lane runs the same
+    per-cycle ops on the same bits, each device just owns its slice.
+    The carry state is donated: chunked campaigns and the control
+    plane's epoch loop update multi-MB flit buffers in place instead of
+    reallocating them per call.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    meta = dict(meta_key)
+    cfg = SimConfig(**dict(cfg_key))
+    step = _make_step(meta, cfg)
+
+    def run(tables, state):
+        state, _ = jax.lax.scan(
+            lambda s, c: step(tables, s, c), state, jnp.arange(num_cycles))
+        state["cycle0"] = state["cycle0"] + num_cycles
+        return state
+
+    mesh = Mesh(np.array(jax.devices()[:ndev]), ("lane",))
+    fn = shard_map(jax.vmap(run, in_axes=(None, 0)), mesh=mesh,
+                   in_specs=(PartitionSpec(), PartitionSpec("lane")),
+                   out_specs=PartitionSpec("lane"), check_rep=False)
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 def _cfg_key(cfg: SimConfig) -> tuple:
     """Compile-relevant SimConfig fields (rate and seed are dynamic)."""
     return tuple(sorted(dict(
         algo=int(cfg.algo), num_vcs=cfg.num_vcs, buf_per_vc=cfg.buf_per_vc,
         packet_len=cfg.packet_len, src_queue_pkts=cfg.src_queue_pkts,
         cycles=cfg.cycles, warmup=cfg.warmup, drain=cfg.drain,
-        lat_bins=cfg.lat_bins, lat_bin_width=cfg.lat_bin_width).items()))
+        lat_bins=cfg.lat_bins, lat_bin_width=cfg.lat_bin_width,
+        use_kernel=bool(cfg.use_kernel)).items()))
 
 
-def get_runner(meta: dict, cfg: SimConfig, num_cycles: int):
-    """Public cached-runner accessor (used by :mod:`repro.noc.campaign`)."""
+def get_runner(meta: dict, cfg: SimConfig, num_cycles: int, *,
+               num_lanes: int | None = None,
+               multi_device: bool | None = None):
+    """Public cached-runner accessor (used by :mod:`repro.noc.campaign`
+    and :mod:`repro.noc.ctrl`).
+
+    ``multi_device`` selects the ``shard_map`` lane-parallel runner:
+    ``True`` forces it (raises if the ``num_lanes`` batch does not
+    divide over the local devices), ``False`` pins the single-device
+    runner, and ``None`` — the default — auto-enables it whenever more
+    than one local device is visible and ``num_lanes`` divides evenly.
+    Both runners produce bit-identical states (asserted by
+    ``tests/test_multidevice.py``)."""
+    ndev = jax.device_count()
+    want = (multi_device if multi_device is not None
+            else ndev > 1 and num_lanes is not None
+            and num_lanes % ndev == 0)
+    if want:
+        if ndev <= 1:
+            raise ValueError("multi_device=True with a single device; "
+                             "on CPU expose cores via XLA_FLAGS="
+                             "--xla_force_host_platform_device_count=N")
+        if num_lanes is None or num_lanes % ndev:
+            raise ValueError(
+                f"multi_device=True needs the lane count to divide over "
+                f"the devices ({num_lanes} lanes, {ndev} devices)")
+        return _get_sharded_runner(tuple(sorted(meta.items())),
+                                   _cfg_key(cfg), int(num_cycles), ndev)
     return _get_runner(tuple(sorted(meta.items())), _cfg_key(cfg),
                        int(num_cycles))
 

@@ -22,6 +22,19 @@ class Algo(enum.IntEnum):
     BIDOR = 6     # Q-StaR: N-Rank-guided XY/YX choice (this paper)
 
 
+# Packed flit-record layout: one (NIN, BUF, NF) int32 array instead of ten
+# (NIN, BUF) arrays — FIFO pushes/pops become a single scatter/gather with
+# a contiguous NF-word payload (the dominant per-cycle cost on CPU/TPU).
+# Shared by the unfused step (repro.noc.sim) and the fused kernel
+# (repro.kernels.simstep), which both operate on the same state pytree.
+NF = 10
+(F_SRC, F_DST, F_INTER, F_SEQ, F_TIME,
+ F_HOPS, F_ORDER, F_HEAD, F_TAIL, F_PHASE) = range(NF)
+# Packed source-queue packet records: (N, Q, NQ) int32.
+NQ = 5
+(Q_DST, Q_INTER, Q_ORDER, Q_TIME, Q_SEQ) = range(NQ)
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     """Cycle-level simulation parameters.
@@ -46,6 +59,12 @@ class SimConfig:
     reorder_window: int = 32      # per-flow sequence tracking window
     lat_bins: int = 96            # latency histogram bins (percentiles)
     lat_bin_width: int = 8        # cycles per histogram bin; last = overflow
+    # Per-cycle hot path: True runs the fused flit-step kernel
+    # (repro.kernels.simstep — Pallas on TPU/GPU, the fused dense jnp
+    # fallback on CPU); False runs the legacy unfused jnp step, kept as
+    # the differential-testing oracle (tests/test_simstep_kernel.py) and
+    # the simstep_scale benchmark baseline.  Both are bit-identical.
+    use_kernel: bool = True
 
     def __post_init__(self):
         if self.warmup + self.drain >= self.cycles:

@@ -1,7 +1,8 @@
 """Tier-1 collection hygiene.
 
 The suite must collect with zero errors in a bare environment (no
-``pip install`` possible).  Two mechanisms:
+``pip install`` possible), and the multi-device parity tests need fake
+host devices injected before jax initializes.  Three mechanisms:
 
 * ``src`` is prepended to ``sys.path`` so ``python -m pytest`` works even
   without ``PYTHONPATH=src``.
@@ -12,6 +13,10 @@ The suite must collect with zero errors in a bare environment (no
   do NOT require hypothesis: they run through the ``_propcheck`` facade,
   which falls back to a deterministic sampler (see
   ``tests/_propcheck.py``).
+* ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` is injected at
+  conftest import time (iff jax is not yet imported and the user did
+  not set a count); the ``multi_device_count`` fixture skips with the
+  reason when the injection could not happen.
 """
 
 from __future__ import annotations
@@ -19,6 +24,40 @@ from __future__ import annotations
 import os
 import sys
 
+import pytest
+
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 if os.path.isdir(_SRC):
     sys.path.insert(0, os.path.abspath(_SRC))
+
+# Expose fake host devices for the multi-device campaign tests
+# (tests/test_multidevice.py).  The flag only takes effect if it lands
+# before the first jax import of the process, so it is set here at
+# conftest import time — before any test module imports — and only when
+# nothing imported jax yet and the user has not chosen a count.  Lane
+# sharding is exact (bit-identical states, asserted by the parity
+# tests), so the rest of the suite is unaffected by running on 8
+# devices.  _FAKE_DEVICES records whether the flag landed; the fixture
+# below turns a miss into a skip-with-reason rather than a bogus pass.
+_FORCE = "--xla_force_host_platform_device_count"
+_FAKE_DEVICES = False
+if "jax" not in sys.modules and _FORCE not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FORCE}=8").strip()
+    _FAKE_DEVICES = True
+
+
+@pytest.fixture
+def multi_device_count() -> int:
+    """Device count for multi-device tests; skips (with the reason) when
+    the fake-device flag could not be injected or did not take."""
+    import jax
+
+    n = jax.device_count()
+    if n < 2:
+        why = ("jax was imported before conftest could set "
+               f"XLA_FLAGS={_FORCE}" if not _FAKE_DEVICES
+               else "the forced host-device count did not take effect")
+        pytest.skip(f"needs >1 jax device: {why}")
+    return n

@@ -1,10 +1,15 @@
 """Regenerate the golden campaign fixtures.
 
-Usage:  PYTHONPATH=src python tests/goldens/regen.py [--out DIR]
+Usage:  PYTHONPATH=src python tests/goldens/regen.py
+            [--out DIR] [--sim-path {fused,unfused}]
 
 Writes ``campaign_4x4.json`` / ``ctrl_4x4.json`` next to this file — or
 into ``--out DIR`` (e.g. in CI, which regenerates into a scratch dir and
 uploads the diff against the committed fixtures as a workflow artifact).
+``--sim-path`` selects the per-cycle transition (the fused flit-step
+kernel, the default, or the unfused oracle); CI regenerates with BOTH
+and diffs them, attesting the bit-identity contract on the pinned
+fixtures themselves.
 Overwrite the committed fixtures ONLY when a simulator change
 intentionally alters behaviour, and say so in the commit message — the
 golden test exists to make unintended changes loud.
@@ -27,7 +32,13 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "campaign_4x4.json")
 CTRL_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "ctrl_4x4.json")
 
 
-def golden_spec():
+# --sim-path choices: both per-cycle transitions must regenerate the
+# SAME fixtures (the fused kernel is bit-identical to the unfused
+# oracle), so CI regenerates with each and diffs the two.
+SIM_PATHS = {"fused": True, "unfused": False}
+
+
+def golden_spec(use_kernel: bool = True):
     from repro.core import mesh2d
     from repro.noc import Algo, CampaignSpec, SimConfig
 
@@ -37,11 +48,12 @@ def golden_spec():
         patterns=("uniform", "tornado"),
         rates=(0.15, 0.5),
         seeds=(0, 1),
-        base=SimConfig(cycles=1000, warmup=300, drain=100),
+        base=SimConfig(cycles=1000, warmup=300, drain=100,
+                       use_kernel=use_kernel),
     )
 
 
-def ctrl_spec():
+def ctrl_spec(use_kernel: bool = True):
     """Pinned fault-scenario campaign: one central link retrains at 25%
     width mid-measure; the stale and online control policies face it."""
     from repro.core import mesh2d
@@ -56,7 +68,7 @@ def ctrl_spec():
         patterns=("uniform",),
         rates=(0.35,),
         seeds=(0, 1),
-        base=SimConfig(cycles=2400, warmup=400),
+        base=SimConfig(cycles=2400, warmup=400, use_kernel=use_kernel),
         scenarios=(
             Scenario("linkfail_stale", events=fail, policy="stale",
                      replan=rc),
@@ -66,10 +78,10 @@ def ctrl_spec():
     )
 
 
-def compute_goldens() -> dict:
+def compute_goldens(use_kernel: bool = True) -> dict:
     from repro.noc import run_campaign
 
-    res = run_campaign(golden_spec())
+    res = run_campaign(golden_spec(use_kernel))
     points = {}
     for p in res.points:
         r = p.result
@@ -95,10 +107,10 @@ def compute_goldens() -> dict:
     }
 
 
-def compute_ctrl_goldens() -> dict:
+def compute_ctrl_goldens(use_kernel: bool = True) -> dict:
     from repro.noc import run_campaign
 
-    res = run_campaign(ctrl_spec())
+    res = run_campaign(ctrl_spec(use_kernel))
     points = {}
     for p in res.points:
         r = p.result
@@ -133,7 +145,15 @@ def main(argv=None):
     ap.add_argument("--out", default=None, metavar="DIR",
                     help="write the fixtures into DIR instead of "
                          "overwriting the committed ones (CI diffing)")
+    ap.add_argument("--sim-path", default="fused",
+                    choices=sorted(SIM_PATHS),
+                    help="per-cycle transition to regenerate with: the "
+                         "fused kernel (default, the simulator default) "
+                         "or the unfused oracle — both must produce "
+                         "identical fixtures, which CI attests by "
+                         "regenerating with each and diffing")
     args = ap.parse_args(argv)
+    use_kernel = SIM_PATHS[args.sim_path]
     golden_path, ctrl_path = GOLDEN_PATH, CTRL_GOLDEN_PATH
     if args.out:
         os.makedirs(args.out, exist_ok=True)
@@ -141,17 +161,18 @@ def main(argv=None):
                                    os.path.basename(GOLDEN_PATH))
         ctrl_path = os.path.join(args.out,
                                  os.path.basename(CTRL_GOLDEN_PATH))
-    goldens = compute_goldens()
+    goldens = compute_goldens(use_kernel)
     with open(golden_path, "w") as f:
         json.dump(goldens, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote {len(goldens['points'])} golden points to {golden_path}")
-    ctrl = compute_ctrl_goldens()
+    print(f"wrote {len(goldens['points'])} golden points to "
+          f"{golden_path} ({args.sim_path} sim path)")
+    ctrl = compute_ctrl_goldens(use_kernel)
     with open(ctrl_path, "w") as f:
         json.dump(ctrl, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {len(ctrl['points'])} ctrl golden points to "
-          f"{ctrl_path}")
+          f"{ctrl_path} ({args.sim_path} sim path)")
 
 
 if __name__ == "__main__":

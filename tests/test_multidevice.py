@@ -1,0 +1,125 @@
+"""Multi-device campaign parity: the ``shard_map`` lane-parallel runner
+must produce BIT-IDENTICAL results to single-device execution.
+
+Lanes — (rate, seed) campaign points — are fully independent, so
+splitting the batch axis over a ("lane",) device mesh is exact SPMD:
+same ops, same bits, per-device slices.  These tests pin that claim at
+the CampaignResult level (the unit every benchmark consumes) and at the
+raw state level, on the fake host devices injected by ``conftest.py``
+(the ``multi_device_count`` fixture skips with the reason when the
+XLA flag could not land before jax initialized).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import mesh2d, traffic
+from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
+from repro.noc import sim
+
+TOPO = mesh2d(4, 4)
+UNI = traffic.uniform(TOPO)
+
+
+def _spec(multi_device, lanes_rates, lanes_seeds, **kw):
+    return CampaignSpec(
+        topo=TOPO, algos=(Algo.XY, Algo.BIDOR),
+        patterns=(("uniform", UNI),),
+        rates=lanes_rates, seeds=lanes_seeds,
+        base=SimConfig(cycles=900, warmup=250, drain=100),
+        multi_device=multi_device, **kw)
+
+
+def _point_fields(res):
+    out = []
+    for p in res.points:
+        r = p.result
+        out.append((p.algo, p.pattern, p.rate, p.seed,
+                    r.injected_flits, r.ejected_flits, r.in_flight_flits,
+                    r.reorder_value, r.meas_cycles, r.throughput,
+                    r.avg_latency, r.p99_latency, r.link_load_max,
+                    tuple(np.asarray(r.node_load).tolist())))
+    return out
+
+
+def test_sharded_campaign_bit_identical(multi_device_count):
+    """8 lanes over the device mesh == the single-device batch, every
+    statistic equal to the last bit (floats included: both paths run
+    the same reductions on the same integers)."""
+    ndev = multi_device_count
+    rates, seeds = (0.1, 0.3, 0.5, 0.7), (0, 1)
+    assert (len(rates) * len(seeds)) % ndev == 0, \
+        "test grid must divide over the fake devices"
+    res_multi = run_campaign(_spec(True, rates, seeds))
+    res_single = run_campaign(_spec(False, rates, seeds))
+    assert _point_fields(res_multi) == _point_fields(res_single)
+
+
+def test_sharded_campaign_with_chunked_early_exit(multi_device_count):
+    """Chunked execution (the saturation early-exit path) hot-swaps the
+    runner every chunk; sharding must stay exact across chunk
+    boundaries with the donated carry."""
+    rates, seeds = (0.15, 0.45, 0.75, 1.0), (0, 1)
+    res_multi = run_campaign(_spec(True, rates, seeds, chunk=300))
+    res_single = run_campaign(_spec(False, rates, seeds, chunk=300))
+    assert _point_fields(res_multi) == _point_fields(res_single)
+
+
+def test_sharded_runner_state_parity_both_step_paths(multi_device_count):
+    """Raw runner-level parity for the fused AND unfused transitions:
+    the full state pytree (packed flits, locks, counters, keys) is
+    equal bit for bit after 400 cycles."""
+    ndev = multi_device_count
+    points = [(r, s) for r in (0.1, 0.3, 0.5, 0.7) for s in (0, 1)]
+    for use_kernel in (True, False):
+        cfg = SimConfig(cycles=400, warmup=100, use_kernel=use_kernel)
+        tables, meta = sim.build_tables(TOPO, UNI, None, cfg.num_vcs)
+        out_m = sim.get_runner(meta, cfg, 400, num_lanes=len(points),
+                               multi_device=True)(
+            tables, sim.make_states(meta, cfg, points))
+        out_s = sim.get_runner(meta, cfg, 400, num_lanes=len(points),
+                               multi_device=False)(
+            tables, sim.make_states(meta, cfg, points))
+        out_m, out_s = (dict(out_m), dict(out_s))
+        bad = [k for k in out_s
+               if not np.array_equal(np.asarray(out_m[k]),
+                                     np.asarray(out_s[k]))]
+        assert not bad, (use_kernel, bad)
+
+
+def test_multi_device_validates_lane_divisibility(multi_device_count):
+    ndev = multi_device_count
+    cfg = SimConfig(cycles=300, warmup=100)
+    tables, meta = sim.build_tables(TOPO, UNI, None, cfg.num_vcs)
+    with pytest.raises(ValueError, match="divide"):
+        sim.get_runner(meta, cfg, 300, num_lanes=ndev + 1,
+                       multi_device=True)
+
+
+def test_controlled_run_sharded_parity(multi_device_count):
+    """The control plane's epoch loop (event application + counter
+    reads between chunks) under the sharded runner equals the
+    single-device run, fault scenario included."""
+    from repro.noc import LinkFail, ReplanConfig, Scenario
+    from repro.noc.ctrl import run_controlled
+    from repro.core import build_plan
+
+    plan = build_plan(TOPO, UNI)
+    cfg = SimConfig(algo=Algo.BIDOR, cycles=1200, warmup=300)
+    scen = Scenario(
+        "linkfail_online",
+        events=(LinkFail(cycle=600, links=((5, 6), (6, 5)),
+                         bw_scale=0.25),),
+        policy="online", replan=ReplanConfig(epoch=300))
+    kw = dict(rates=[0.2, 0.3, 0.4, 0.5], seeds=[0, 1],
+              bidor_table=plan.table, nrank0=plan.nrank)
+    res_m = run_controlled(TOPO, UNI, cfg, scen, multi_device=True, **kw)
+    res_s = run_controlled(TOPO, UNI, cfg, scen, multi_device=False, **kw)
+    assert np.array_equal(res_m.link_peak, res_s.link_peak)
+    for a, b in zip(res_m.results, res_s.results):
+        assert dataclasses.asdict(
+            dataclasses.replace(a, node_load=0)) == dataclasses.asdict(
+            dataclasses.replace(b, node_load=0))
+        assert np.array_equal(a.node_load, b.node_load)

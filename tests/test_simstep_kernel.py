@@ -1,0 +1,227 @@
+"""Differential battery: the fused flit-step kernel vs. the unfused step.
+
+The contract is BIT-IDENTITY of the full state pytree — every packed
+flit record, FIFO pointer, wormhole lock, statistic counter and PRNG
+key — not statistical closeness.  Three layers:
+
+* exhaustive (topology × algorithm) parity from fresh state;
+* property-based parity from randomized MID-FLIGHT states (occupied
+  VCs, held output ports, partially drained queues): the unfused
+  oracle advances a fresh state by a sampled number of cycles at a
+  sampled rate — every state it can reach is by construction a valid
+  mid-flight state — then both paths step forward from that state and
+  must agree array-for-array;
+* the Pallas kernel in interpret mode (the CPU coverage path for the
+  compiled TPU/GPU route) against the same oracle.
+
+Runners come from ``sim.get_runner`` with ``use_kernel`` flipped, i.e.
+exactly the code paths campaigns execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro.core import build_plan, cmesh, mesh2d, torus, traffic
+from repro.kernels import simstep
+from repro.noc import sim
+from repro.noc.simconfig import Algo, SimConfig
+
+TOPOS = {
+    "mesh4x4": mesh2d(4, 4),
+    "torus4x4": torus(4, 4),
+    "cmesh3x3c2": cmesh(3, 3, 2),
+}
+# one algorithm per distinct code path: deterministic DOR, plan-table
+# quasi-static, random order, two-phase random intermediate, adaptive
+ALGOS = (Algo.XY, Algo.BIDOR, Algo.O1TURN, Algo.ROMM, Algo.ODDEVEN)
+
+
+@functools.lru_cache(maxsize=None)
+def _cell(topo_name: str, algo: Algo):
+    """(tables, meta, cfgs) for one differential cell, cached so the
+    property test reuses jit compilations across examples."""
+    topo = TOPOS[topo_name]
+    tm = traffic.uniform(topo)
+    table = build_plan(topo, tm).table if algo == Algo.BIDOR else None
+    cfg_u = SimConfig(algo=algo, cycles=4000, warmup=50, use_kernel=False)
+    tables, meta = sim.build_tables(topo, tm, table, cfg_u.num_vcs)
+    return tables, meta, cfg_u, cfg_u.replace(use_kernel=True)
+
+
+def _assert_states_equal(a, b, ctx):
+    bad = [k for k in a if not np.array_equal(a[k], b[k])]
+    assert not bad, f"fused diverged from unfused on {bad} ({ctx})"
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_fused_bit_identical_from_fresh_state(topo_name, algo):
+    """Every (topology, algorithm) cell: 150 cycles from fresh state,
+    full state pytree equal bit for bit (two saturating-ish lanes)."""
+    if algo == Algo.ODDEVEN and TOPOS[topo_name].ndim != 2:
+        pytest.skip("odd-even is 2D-only")
+    tables, meta, cfg_u, cfg_f = _cell(topo_name, algo)
+    points = [(0.25, 0), (0.8, 1)]
+    out_u = jax.device_get(sim.get_runner(meta, cfg_u, 150)(
+        tables, sim.make_states(meta, cfg_u, points)))
+    out_f = jax.device_get(sim.get_runner(meta, cfg_f, 150)(
+        tables, sim.make_states(meta, cfg_f, points)))
+    _assert_states_equal(out_u, out_f, f"{topo_name}/{algo.name}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(sorted(TOPOS)), st.sampled_from(ALGOS),
+       st.sampled_from([40, 90, 160]),      # oracle warm-in (mid-flight)
+       st.floats(0.05, 1.2), st.integers(0, 2**16),
+       st.booleans())                       # drain the tail (inject halt)
+def test_fused_bit_identical_from_midflight_state(topo_name, algo, warm,
+                                                  rate, seed, drain):
+    """Parity from randomized mid-flight states.  The unfused oracle
+    advances ``warm`` cycles at a random rate/seed — leaving occupied
+    VC FIFOs, held output ports and partially drained source queues —
+    then both paths run 60 further cycles from that exact state (with
+    injection optionally halted, exercising the drain phase) and the
+    resulting pytrees must match bit for bit."""
+    tables, meta, cfg_u, cfg_f = _cell(topo_name, algo)
+    points = [(float(rate), int(seed) % 1000)]
+    mid = sim.get_runner(meta, cfg_u, int(warm))(
+        tables, sim.make_states(meta, cfg_u, points))
+    if drain:  # injection stops mid-run: partially drained queues
+        mid = dict(mid)
+        mid["inject_until"] = jnp.full_like(mid["inject_until"],
+                                            int(warm) + 20)
+    out_u = jax.device_get(sim.get_runner(meta, cfg_u, 60)(tables, mid))
+    out_f = jax.device_get(sim.get_runner(meta, cfg_f, 60)(tables, mid))
+    _assert_states_equal(
+        out_u, out_f,
+        f"{topo_name}/{algo.name} warm={warm} rate={rate:.3f} "
+        f"seed={seed} drain={drain}")
+
+
+@pytest.mark.parametrize("algo", [Algo.XY, Algo.BIDOR, Algo.ODDEVEN])
+def test_pallas_interpret_matches_unfused(algo):
+    """The actual Pallas kernel (interpret mode on CPU — same kernel
+    the compiled TPU/GPU path lowers) against the unfused oracle,
+    through warm-up into a loaded network — both unbatched and under
+    the jit(vmap(scan(...))) composition every campaign runner uses."""
+    tables, meta, cfg_u, _ = _cell("mesh4x4", algo)
+    step_u = sim._make_step(meta, cfg_u)
+    step_p = simstep.make_step(meta, cfg_u, use_pallas=True,
+                               interpret=True)
+    st0 = sim.fresh_state(meta, cfg_u)
+    st0["rate"] = jnp.float32(0.5)
+    st0["key"] = sim.point_key(3, 0.5)
+
+    def run(step, state):
+        state, _ = jax.lax.scan(lambda s, c: step(tables, s, c), state,
+                                jnp.arange(80))
+        return jax.device_get(state)
+
+    _assert_states_equal(run(step_u, st0), run(step_p, st0),
+                         f"pallas-interpret/{algo.name}")
+
+    def run_batched(step, batched):
+        def one(state):
+            state, _ = jax.lax.scan(lambda s, c: step(tables, s, c),
+                                    state, jnp.arange(60))
+            return state
+        return jax.device_get(jax.jit(jax.vmap(one))(batched))
+
+    batched = sim.make_states(meta, cfg_u, [(0.3, 0), (0.7, 1)])
+    _assert_states_equal(run_batched(step_u, batched),
+                         run_batched(step_p, batched),
+                         f"pallas-interpret-vmapped/{algo.name}")
+
+
+def test_wide_rewrites_bit_identical_when_forced():
+    """The N >= _WIDE_N rewrites (binary-search destination sampling,
+    scatter next_seq/reorder updates) checked against the oracle on a
+    small mesh by forcing the gate open — the cheap fast-loop coverage
+    of the code path that normally only runs at 16x16+."""
+    from repro.kernels.simstep import ref as simstep_ref
+
+    tables, meta, cfg_u, _ = _cell("mesh4x4", Algo.O1TURN)
+    step_u = sim._make_step(meta, cfg_u)
+    old = simstep_ref._WIDE_N
+    simstep_ref._WIDE_N = 1
+    try:
+        step_w = simstep.make_step(meta, cfg_u, use_pallas=False)
+    finally:
+        simstep_ref._WIDE_N = old
+    st0 = sim.fresh_state(meta, cfg_u)
+    st0["rate"] = jnp.float32(0.6)
+    st0["key"] = sim.point_key(9, 0.6)
+
+    def run(step, state):
+        state, _ = jax.lax.scan(lambda s, c: step(tables, s, c), state,
+                                jnp.arange(120))
+        return jax.device_get(state)
+
+    _assert_states_equal(run(step_u, st0), run(step_w, st0),
+                         "forced-wide/O1TURN")
+
+
+@pytest.mark.slow
+def test_fused_bit_identical_16x16_wide_path():
+    """True-scale coverage of the size-gated rewrites: 16x16 (N = 256,
+    the _WIDE_N threshold) fused vs unfused, bit for bit."""
+    topo = mesh2d(16, 16)
+    tm = traffic.uniform(topo)
+    cfg_u = SimConfig(cycles=4000, warmup=30, use_kernel=False)
+    tables, meta = sim.build_tables(topo, tm, None, cfg_u.num_vcs)
+    points = [(0.3, 0)]
+    out_u = jax.device_get(sim.get_runner(meta, cfg_u, 120)(
+        tables, sim.make_states(meta, cfg_u, points)))
+    cfg_f = cfg_u.replace(use_kernel=True)
+    out_f = jax.device_get(sim.get_runner(meta, cfg_f, 120)(
+        tables, sim.make_states(meta, cfg_f, points)))
+    _assert_states_equal(out_u, out_f, "mesh16x16/XY")
+
+
+def test_pallas_auto_gates_on_vmem_footprint():
+    """The auto path must never hand a state that cannot fit on chip to
+    the whole-array kernel: the 4x4 footprint sits under the budget,
+    the 32x32 one over it (the dense fused body takes over there)."""
+    from repro.kernels.simstep import ops as simstep_ops
+
+    cfg = SimConfig()
+    _, meta_small = sim.build_tables(TOPOS["mesh4x4"],
+                                     traffic.uniform(TOPOS["mesh4x4"]),
+                                     None, cfg.num_vcs)
+    big = mesh2d(32, 32)
+    _, meta_big = sim.build_tables(big, traffic.uniform(big), None,
+                                   cfg.num_vcs)
+    small_b = simstep_ops.state_footprint_bytes(meta_small, cfg)
+    big_b = simstep_ops.state_footprint_bytes(meta_big, cfg)
+    assert small_b < simstep_ops.VMEM_BUDGET_BYTES < big_b, \
+        (small_b, big_b)
+
+
+def test_fused_is_the_default_and_flag_reaches_runner():
+    """SimConfig defaults to the fused kernel and the flag is part of
+    the compilation cache key (flipping it cannot alias runners)."""
+    assert SimConfig().use_kernel is True
+    k_f = sim._cfg_key(SimConfig())
+    k_u = sim._cfg_key(SimConfig(use_kernel=False))
+    assert k_f != k_u
+    assert dict(k_f)["use_kernel"] is True
+
+
+def test_split_rand_matches_unfused_key_schedule():
+    """The hoisted RNG consumes the lane key exactly like the unfused
+    step: new key == first subkey of the 5-way split, and the draws
+    come from the same subkeys."""
+    key = jax.random.PRNGKey(7)
+    new, rand = simstep.split_rand(key, Algo.O1TURN, 16, 2)
+    k, kg, kd, km, _ = jax.random.split(key, 5)
+    k1, _, _ = jax.random.split(km, 3)
+    assert np.array_equal(new, k)
+    assert np.array_equal(rand["u"], jax.random.uniform(kg, (16,)))
+    assert np.array_equal(rand["ud"], jax.random.uniform(kd, (16,)))
+    assert np.array_equal(rand["ob"],
+                          jax.random.bernoulli(k1, 0.5, (16,)))
