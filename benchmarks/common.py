@@ -11,6 +11,42 @@ QUICK = os.environ.get("BENCH_QUICK", "1") == "1"
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                        "bench")
+SERVICE_ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "campaigns")
+
+
+def run_service_campaign(spec, *, name: str, bidor_tables=None,
+                         verbose: bool = True):
+    """Run a stage's campaign grid through the campaign service.
+
+    The job directory is ``artifacts/campaigns/<name>-<spec hash>`` —
+    the hash suffix keeps QUICK and full-length variants of one stage in
+    separate jobs.  Knobs (both settable via ``benchmarks.run`` flags):
+
+    * ``CAMPAIGN_RESUME=1``   — keep completed cells from a previous
+      invocation (skip them bit-identically); default is a fresh run.
+    * ``CAMPAIGN_MAX_CELLS=N`` — execute at most N cells then stop (the
+      controlled-interruption knob of CI's resume-equivalence check).
+
+    Returns ``(CampaignResult | None, CampaignJob)``; a None result
+    means the cell budget interrupted the job — re-invoke with
+    ``CAMPAIGN_RESUME=1`` to continue.
+    """
+    from repro.noc import run_campaign_service, spec_fingerprint
+
+    max_cells = int(os.environ.get("CAMPAIGN_MAX_CELLS", "0")) or None
+    resume = os.environ.get("CAMPAIGN_RESUME", "0") == "1"
+    job_id = f"{name}-{spec_fingerprint(spec)[:10]}"
+    res, job = run_campaign_service(
+        spec, root=SERVICE_ROOT, job_id=job_id,
+        bidor_tables=bidor_tables, resume=resume, max_cells=max_cells,
+        verbose=verbose)
+    if res is None:
+        st = job.status()
+        print(f"campaign job {job.job_id}: cell budget hit at "
+              f"{st.done_cells}/{st.total_cells} cells; re-run with "
+              f"--resume to continue", flush=True)
+    return res, job
 
 
 def out_path(name: str) -> str:

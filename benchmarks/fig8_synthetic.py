@@ -2,16 +2,18 @@
 Uniform, Shuffle, Permutation, Overturn on the edge-I/O 5×5 NoC (§4.1).
 
 Implemented as ONE declarative campaign: the full
-(pattern × algorithm × rate) grid runs through
-:func:`repro.noc.campaign.run_campaign`; every (rate, seed) point of a
-cell executes inside a single jitted, vmapped call.
+(pattern × algorithm × rate) grid runs as a resumable campaign-service
+job (``repro.noc.service``); every (rate, seed) point of a cell executes
+inside a single jitted, vmapped call, each completed cell checkpoints to
+``artifacts/campaigns/`` and streams its CSV rows, and an interrupted
+run (``--max-cells``) continues bit-identically with ``--resume``.
 """
 
 from __future__ import annotations
 
 from repro.core import mesh2d_edge_io
-from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
-from .common import QUICK, write_csv
+from repro.noc import Algo, CampaignSpec, SimConfig
+from .common import QUICK, run_service_campaign, write_csv
 
 PATTERNS = ("uniform", "shuffle", "permutation", "overturn")
 ALGOS = (Algo.XY, Algo.O1TURN, Algo.VALIANT, Algo.ROMM, Algo.ODDEVEN,
@@ -27,7 +29,9 @@ def main():
         topo=topo, algos=ALGOS, patterns=PATTERNS, rates=rates,
         base=SimConfig(cycles=cycles, warmup=cycles // 3),
         chunk=cycles // 4)
-    res = run_campaign(spec, verbose=True)
+    res, _job = run_service_campaign(spec, name="fig8")
+    if res is None:          # cell budget hit; resume to finish
+        return None
     for pattern in PATTERNS:
         for algo in ALGOS:
             sat = res.saturation_throughput(algo, pattern)

@@ -6,6 +6,8 @@ beyond-paper ICI analyses.
   fig8      paper Fig. 8  — throughput/latency/reorder vs injection rate
   fig9      paper Fig. 9  — realistic Clos-leaf workload
   campaign  scaling       — batched campaign vs sequential simulate calls
+  campaign_service  jobs  — resumable campaign-as-a-service guard:
+              interrupt/resume byte-identity + warm plan-cache re-run
   simstep_scale  sim cost — fused flit-step kernel vs unfused per-cycle
               path, 8×8 → 32×32, + shard_map lane mode (parity asserted)
   dynamics  control plane — oracle/stale/online replanning under faults
@@ -22,6 +24,12 @@ names abort upfront (before anything runs) with the valid list.
 ``--nrank-max-nodes`` / ``--nrank-budget-ms`` are the flag equivalents of
 the ``NRANK_SCALE_MAX_NODES`` / ``NRANK_BUDGET_MS`` env knobs (the flag
 wins when both are set).
+
+Campaign stages (fig8, topo_sweep, campaign_service) run through the
+campaign service (``repro.noc.service``): each job checkpoints per cell
+under ``artifacts/campaigns/`` and streams its CSV.  ``--max-cells N``
+budgets a run to N cells (controlled interruption); ``--resume``
+continues an interrupted job bit-identically instead of starting fresh.
 """
 
 from __future__ import annotations
@@ -99,6 +107,67 @@ def bench_campaign():
     write_csv("campaign_speedup.csv",
               ["algo", "points", "sequential_s", "batched_s", "speedup",
                "stats_identical"], rows)
+
+
+def bench_campaign_service():
+    """Campaign-as-a-service guard: a small (2 algos × 2 patterns ×
+    2 scenarios) job run through ``repro.noc.service``.
+
+    Honors ``--max-cells`` / ``--resume`` like every service stage, so CI
+    drives it as: interrupt after a couple of cells, resume to
+    completion.  Once complete, the stage itself proves the resume
+    contract — a fresh uninterrupted job of the same spec must produce a
+    byte-identical ``results.csv`` — and the plan-cache contract: the
+    fresh job, sharing the persistent plan cache, must make ZERO
+    ``build_plans_batched`` calls.  The streamed CSV is copied to
+    ``artifacts/bench/campaign_service.csv``.
+    """
+    from repro.core import mesh2d
+    from repro.noc import (Algo, CampaignSpec, LinkFail, ReplanConfig,
+                           Scenario, SimConfig)
+    import repro.noc.campaign as campaign_mod
+    from .common import QUICK, out_path, run_service_campaign
+
+    cycles = 1200 if QUICK else 6000
+    topo = mesh2d(4, 4)
+    spec = CampaignSpec(
+        topo=topo, algos=(Algo.XY, Algo.BIDOR),
+        patterns=("uniform", "transpose"), rates=(0.1, 0.3), seeds=(0,),
+        base=SimConfig(cycles=cycles, warmup=cycles // 3,
+                       drain=cycles // 10),
+        scenarios=(
+            Scenario("calm"),
+            Scenario("linkfail",
+                     events=(LinkFail(cycle=cycles // 2,
+                                      links=((5, 6), (6, 5))),),
+                     policy="oracle",
+                     replan=ReplanConfig(epoch=cycles // 4))))
+    res, job = run_service_campaign(spec, name="campaign_service")
+    if res is None:          # interrupted by the cell budget
+        return
+
+    # fresh single-shot reference job: resumed CSV must match its bytes
+    from repro.noc import run_campaign_service
+    ref_res, ref_job = run_campaign_service(
+        spec, root=os.path.dirname(job.dir),
+        job_id=job.job_id + "-ref", resume=False, verbose=False)
+    with open(job.csv_path, "rb") as f:
+        got = f.read()
+    with open(ref_job.csv_path, "rb") as f:
+        want = f.read()
+    assert got == want, (
+        "resumed campaign CSV differs from the uninterrupted reference "
+        f"({len(got)} vs {len(want)} bytes)")
+    # ref job ran with a warm plan cache: zero plan builds is the cache
+    # contract (its executor never called build_plans_batched)
+    stats = ref_job.plan_cache.stats.as_dict()
+    assert stats["device_builds"] == 0 and stats["hits"] > 0, (
+        f"warm re-run rebuilt plans: {stats}")
+    with open(out_path("campaign_service.csv"), "wb") as f:
+        f.write(got)
+    print(f"campaign_service: {job.status().done_cells} cells, "
+          f"resume byte-identical ({len(got)} bytes CSV), warm "
+          f"plan-cache stats {stats}")
 
 
 def bench_simstep_scale():
@@ -369,6 +438,7 @@ STAGES = {
     "fig8": _stage_fig8,
     "fig9": _stage_fig9,
     "campaign": bench_campaign,
+    "campaign_service": bench_campaign_service,
     "simstep_scale": bench_simstep_scale,
     "dynamics": _stage_dynamics,
     "topo_sweep": _stage_topo_sweep,
@@ -401,6 +471,14 @@ def main(argv: list[str] | None = None) -> None:
                     help="assert the fused 16x16 per-cycle cost stays "
                          "under this budget (flag form of "
                          "SIMSTEP_BUDGET_MS)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume interrupted campaign-service jobs, "
+                         "skipping completed cells bit-identically "
+                         "(flag form of CAMPAIGN_RESUME=1)")
+    ap.add_argument("--max-cells", type=int, default=None,
+                    help="execute at most N campaign cells per service "
+                         "job then stop (controlled interruption; flag "
+                         "form of CAMPAIGN_MAX_CELLS)")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
     if args.nrank_max_nodes is not None:
         os.environ["NRANK_SCALE_MAX_NODES"] = str(args.nrank_max_nodes)
@@ -410,6 +488,10 @@ def main(argv: list[str] | None = None) -> None:
         os.environ["SIMSTEP_MAX_NODES"] = str(args.simstep_max_nodes)
     if args.simstep_budget_ms is not None:
         os.environ["SIMSTEP_BUDGET_MS"] = str(args.simstep_budget_ms)
+    if args.resume:
+        os.environ["CAMPAIGN_RESUME"] = "1"
+    if args.max_cells is not None:
+        os.environ["CAMPAIGN_MAX_CELLS"] = str(args.max_cells)
 
     want = [ALIASES.get(s, s) for s in args.stages] or list(STAGES)
     unknown = sorted(set(want) - set(STAGES))

@@ -38,7 +38,9 @@ def zoo():
 
 
 def main() -> None:
-    from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
+    from repro.noc import Algo, CampaignSpec, SimConfig
+
+    from .common import run_service_campaign
 
     cycles = 1500 if QUICK else 12_000
     spec = CampaignSpec(
@@ -51,7 +53,9 @@ def main() -> None:
         base=SimConfig(cycles=cycles, warmup=cycles // 3,
                        drain=cycles // 15),
     )
-    res = run_campaign(spec, verbose=True)
+    res, _job = run_service_campaign(spec, name="topo_sweep")
+    if res is None:          # cell budget hit; resume to finish
+        return
     write_csv("topo_sweep.csv", res.CSV_HEADER, res.to_rows())
     print(res.summary())
 

@@ -1,0 +1,182 @@
+"""Persistent content-addressed cache of Q-StaR plans.
+
+A mega-sweep re-plans the same (topology, traffic, fault-mask) triples
+over and over: every re-run of a campaign, every resumed job, and every
+scenario whose initial plan equals a previous cell's rebuilds bit-identical
+choice tables from scratch.  This module makes the plan a cacheable
+artifact:
+
+* **Keying is by content, not identity.**  :func:`plan_key` hashes the
+  topology fingerprint (name, dims, wrap, coords, channels, io_weights,
+  channel_bw — everything the plan math reads), the traffic matrix bytes,
+  the down-channel fault mask, and the plan hyper-parameters
+  (``k_orders``, ``w_th``, ``iter_th``, resolved precision).  Two specs
+  that build the same plan share one entry, whatever Python objects they
+  came from.
+* **Entries are atomic npz files.**  One ``<key>.npz`` per plan under the
+  cache directory, written to a temp name and ``os.replace``d into place
+  (the ``repro.train.checkpoint`` idiom) — readers never see a partial
+  entry, and concurrent writers of the same key are idempotent.
+* **Only cold (``w0``-less) builds are cached.**  A warm-started replan
+  depends on the carried fixed point, which is run-history, not content —
+  caching it would alias different histories onto one key.
+* **Stats are first-class.**  :attr:`PlanCache.stats` counts hits, misses
+  and stores; ``repro.core.plan_fast`` bumps ``device_builds`` whenever a
+  jitted plan computation actually runs, so tests can assert a warm
+  re-run skipped compilation entirely.
+
+The cache stores the *plan outputs* (choice/costs/unroutable + the N-Rank
+arrays); trace-time statics (port tables, dimension orders) are rebuilt
+from the topology via :func:`repro.core.plan_fast.plan_statics`, which is
+host-side and cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from .bidor import BiDORTable
+from .nrank import NRankResult
+from .qstar import QStarPlan
+from .topology import Topology
+
+__all__ = ["PlanCache", "plan_key", "topology_fingerprint"]
+
+
+def _hash_update_array(h, a: np.ndarray) -> None:
+    a = np.ascontiguousarray(a)
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+
+
+def topology_fingerprint(topo: Topology) -> str:
+    """Stable content hash of everything the planner reads from a
+    topology (also the manifest key of campaign-service jobs)."""
+    h = hashlib.sha256()
+    h.update(topo.name.encode())
+    h.update(json.dumps([list(topo.dims),
+                         [bool(w) for w in topo.wrap]]).encode())
+    for a in (topo.coords, topo.channels, topo.io_weights,
+              topo.channel_bw):
+        _hash_update_array(h, np.asarray(a))
+    return h.hexdigest()
+
+
+def plan_key(topo: Topology, traffic: np.ndarray, *,
+             down_channels=None, k_orders: bool = False,
+             w_th: float, iter_th: int, precision: str) -> str:
+    """Content key of one cold plan build (see module docstring)."""
+    h = hashlib.sha256()
+    h.update(topology_fingerprint(topo).encode())
+    _hash_update_array(h, np.asarray(traffic, np.float64))
+    if down_channels is None:
+        down = np.zeros(0, np.int64)
+    else:
+        down = np.asarray(down_channels)
+        if down.dtype == bool:
+            down = np.nonzero(down)[0]
+        down = np.unique(down.astype(np.int64))
+    _hash_update_array(h, down)
+    h.update(json.dumps({"k_orders": bool(k_orders),
+                         "w_th": float(w_th), "iter_th": int(iter_th),
+                         "precision": str(precision)}).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    stores: int = 0
+    # bumped by repro.core.plan_fast whenever a jitted plan computation
+    # actually executes — the "did we re-jit / re-plan?" test signal
+    device_builds: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """On-disk plan store; safe to share between jobs and processes."""
+
+    def __init__(self, directory: str):
+        self.dir = str(directory)
+        os.makedirs(self.dir, exist_ok=True)
+        self.stats = CacheStats()
+
+    # ---------------------------------------------------------------- #
+    def _path(self, key: str) -> str:
+        return os.path.join(self.dir, f"{key}.npz")
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def get(self, key: str, topo: Topology) -> QStarPlan | None:
+        """Load the plan stored under ``key`` (None on miss).
+
+        ``topo`` must be the topology the key was computed from — the
+        statics (port tables, orders) are rebuilt from it rather than
+        stored, so an entry is a few small arrays, not a topology dump.
+        """
+        path = self._path(key)
+        if not os.path.exists(path):
+            self.stats.misses += 1
+            return None
+        from .plan_fast import plan_statics
+        with np.load(path, allow_pickle=False) as z:
+            d = {k: z[k] for k in z.files}
+        statics = plan_statics(topo, binary_only=not bool(d["k_orders"]))
+        unroutable = (d["unroutable"].astype(bool)
+                      if d["unroutable"].size else None)
+        table = BiDORTable(
+            choice=d["choice"].astype(np.int8), orders=statics.orders,
+            costs=d["costs"], port_tables=statics.port_tables,
+            unroutable=unroutable)
+        nr = NRankResult(
+            w_nr=d["w_nr"], w0=d["w0"], w_final=d["w_final"],
+            iterations=int(d["iterations"]), p=d["p"], p_drn=d["p_drn"],
+            w_possibility=d["w_possibility"])
+        self.stats.hits += 1
+        return QStarPlan(topology=topo, traffic=d["traffic"], nrank=nr,
+                         table=table)
+
+    def put(self, key: str, plan: QStarPlan, *,
+            k_orders: bool = False) -> None:
+        """Store a plan atomically (idempotent for a given key)."""
+        path = self._path(key)
+        if os.path.exists(path):
+            return
+        t = plan.table
+        nr = plan.nrank
+        payload = dict(
+            choice=t.choice,
+            costs=np.asarray(t.costs, np.float64),
+            unroutable=(t.unroutable if t.unroutable is not None
+                        else np.zeros(0, bool)),
+            w_nr=np.asarray(nr.w_nr, np.float64),
+            w0=np.asarray(nr.w0, np.float64),
+            w_final=np.asarray(nr.w_final, np.float64),
+            iterations=np.int64(nr.iterations),
+            p=np.asarray(nr.p, np.float64),
+            p_drn=np.asarray(nr.p_drn, np.float64),
+            w_possibility=np.asarray(nr.w_possibility, np.float64),
+            traffic=np.asarray(plan.traffic, np.float64),
+            k_orders=np.bool_(k_orders),
+        )
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **payload)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self.stats.stores += 1

@@ -68,13 +68,22 @@ from .routes import dimension_orders, next_hop_table, next_port_table
 from .topology import Topology
 
 __all__ = ["build_plan_fast", "build_plans_batched", "plan_statics",
-           "joint_possibility_fast"]
+           "joint_possibility_fast", "plan_cache_key"]
+
+# Jitted plan computations actually executed (cache bypasses bump nothing):
+# the "did a warm re-run re-plan?" signal for tests and service logs.
+DEVICE_BUILDS = 0
+
+
+def _resolve_precision(precision: str) -> str:
+    if precision == "auto":
+        return "fp64" if jax.default_backend() == "cpu" else "fp32"
+    return precision
 
 
 def _precision_scope(precision: str):
     """Context manager selecting the accumulation dtype of the fast path."""
-    if precision == "auto":
-        precision = "fp64" if jax.default_backend() == "cpu" else "fp32"
+    precision = _resolve_precision(precision)
     if precision == "fp64":
         return jax.experimental.enable_x64()
     if precision != "fp32":
@@ -409,13 +418,40 @@ def _assemble_plan(topo: Topology, traffic: np.ndarray, statics: PlanStatics,
                      table=table)
 
 
+def plan_cache_key(topo: Topology, traffic, *, down_channels=None,
+                   k_orders: bool = False, w_th: float = W_TH,
+                   iter_th: int = ITER_TH,
+                   precision: str = "auto") -> str:
+    """The content key a cold ``build_plan_fast`` call with these
+    arguments uses against a :class:`repro.core.plan_cache.PlanCache` —
+    callers that pre-screen the cache (the campaign executor) must key
+    identically, including precision resolution."""
+    from .plan_cache import plan_key
+    return plan_key(topo, traffic, down_channels=down_channels,
+                    k_orders=k_orders, w_th=w_th, iter_th=iter_th,
+                    precision=_resolve_precision(precision))
+
+
+def _cache_lookup(cache, topo, traffic, down_channels, k_orders, w_th,
+                  iter_th, precision, w0):
+    """(key, hit) for the persistent plan cache; (None, None) when the
+    build is uncacheable (warm-started) or no cache is in play."""
+    if cache is None or w0 is not None:
+        return None, None
+    key = plan_cache_key(topo, traffic, down_channels=down_channels,
+                         k_orders=k_orders, w_th=w_th, iter_th=iter_th,
+                         precision=precision)
+    return key, cache.get(key, topo)
+
+
 def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
                     k_orders: bool = False,
                     w_th: float = W_TH, iter_th: int = ITER_TH,
                     w0: np.ndarray | None = None,
                     down_channels=None,
                     precision: str = "auto",
-                    use_pallas: bool | None = None) -> QStarPlan:
+                    use_pallas: bool | None = None,
+                    cache=None) -> QStarPlan:
     """Device-resident Q-StaR pipeline — ``build_plan(mode="channel")``
     as one jitted call (possibility → joint → evolution → BiDOR, no host
     round-trips).
@@ -427,11 +463,23 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
     host-side and passed as data so every fault pattern reuses the one
     compiled plan) and the eq. 10 minimization; ``table.unroutable``
     flags pairs no dimension order can serve.
+
+    ``cache`` is an optional :class:`repro.core.plan_cache.PlanCache`:
+    cold (``w0``-less) builds are served from / stored into it by content
+    key, skipping the device computation entirely on a hit.
     """
+    global DEVICE_BUILDS
+    key, hit = _cache_lookup(cache, topo, traffic, down_channels,
+                             k_orders, w_th, iter_th, precision, w0)
+    if hit is not None:
+        return hit
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
     down, dist, live, down_pair = _fault_arrays(topo, statics,
                                                 down_channels)
+    DEVICE_BUILDS += 1
+    if cache is not None:
+        cache.stats.device_builds += 1
     with _precision_scope(precision):
         t = jnp.asarray(np.asarray(traffic, np.float64))
         w0_eff = jnp.asarray(np.asarray(
@@ -441,7 +489,10 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
                            jnp.asarray(live), jnp.asarray(down_pair),
                            jnp.asarray(float(w_th)), jnp.int32(iter_th))
         out = jax.device_get(out)
-    return _assemble_plan(topo, traffic, statics, out, bool(down.size))
+    plan = _assemble_plan(topo, traffic, statics, out, bool(down.size))
+    if key is not None:
+        cache.put(key, plan, k_orders=k_orders)
+    return plan
 
 
 def build_plans_batched(topo: Topology, traffics, *,
@@ -450,7 +501,8 @@ def build_plans_batched(topo: Topology, traffics, *,
                         w_th: float = W_TH, iter_th: int = ITER_TH,
                         down_channels=None,
                         precision: str = "auto",
-                        use_pallas: bool | None = None) -> list[QStarPlan]:
+                        use_pallas: bool | None = None,
+                        cache=None) -> list[QStarPlan]:
     """Plans for many traffic matrices on one topology in a single vmapped
     device call — the campaign's (pattern, scenario) axis.  Each returned
     plan is identical to its ``build_plan_fast`` equivalent (vmapped
@@ -459,7 +511,12 @@ def build_plans_batched(topo: Topology, traffics, *,
     ``down_channels`` (one fault pattern shared by the whole batch, e.g. a
     ``fault_region_mesh``'s dead channels) masks the failed channels out of
     every plan exactly as in :func:`build_plan_fast`.
+
+    ``cache`` serves/stores cold lanes by content key (see
+    :func:`build_plan_fast`); when every lane hits, no device computation
+    runs at all.
     """
+    global DEVICE_BUILDS
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
     down, dist, live, down_pair = _fault_arrays(topo, statics,
@@ -467,12 +524,37 @@ def build_plans_batched(topo: Topology, traffics, *,
     tms = [np.asarray(t, np.float64) for t in traffics]
     if w0s is None:
         w0s = [None] * len(tms)
+    if cache is not None:
+        cached: dict[int, QStarPlan] = {}
+        keys: dict[int, str] = {}
+        for i, (tm, w0) in enumerate(zip(tms, w0s)):
+            key, hit = _cache_lookup(cache, topo, tm, down_channels,
+                                     k_orders, w_th, iter_th, precision,
+                                     w0)
+            if hit is not None:
+                cached[i] = hit
+            elif key is not None:
+                keys[i] = key
+        if len(cached) < len(tms):
+            need = [i for i in range(len(tms)) if i not in cached]
+            built = build_plans_batched(
+                topo, [tms[i] for i in need],
+                w0s=[w0s[i] for i in need], k_orders=k_orders,
+                w_th=w_th, iter_th=iter_th, down_channels=down_channels,
+                precision=precision, use_pallas=use_pallas)
+            for i, plan in zip(need, built):
+                cached[i] = plan
+                if i in keys:
+                    cache.put(keys[i], plan, k_orders=k_orders)
+            cache.stats.device_builds += 1
+        return [cached[i] for i in range(len(tms))]
     n = statics.n
     # the single-plan chunking budgets ~one (block, N, N) mask; a vmapped
     # batch multiplies that by its lane count, so large batches advance
     # in slices that keep the peak working set bounded
     group = max(1, (1 << 26) // max(_v_block(n) * n * n, 1))
     plans = []
+    DEVICE_BUILDS += 1
     with _precision_scope(precision):
         for lo in range(0, len(tms), group):
             tms_g, w0s_g = tms[lo:lo + group], w0s[lo:lo + group]

@@ -2,15 +2,21 @@
 
 from .simconfig import Algo, SimConfig, SimResult
 from .sim import run_sim, run_sweep, run_trace, run_trace_sweep
-from .campaign import (CampaignPoint, CampaignResult, CampaignSpec,
+from .campaign import (CampaignExecutor, CampaignPoint, CampaignResult,
+                       CampaignSpec, CellKey, CellOutcome, campaign_cells,
                        run_campaign)
 from .ctrl import (ControlledResult, DriftDetector, LinkFail, LinkRecover,
                    Replan, ReplanConfig, Scenario, TrafficDrift,
                    TrafficEstimator, run_controlled)
+from .service import (CampaignJob, CellCheckpoint, JobStatus,
+                      run_campaign_service, spec_fingerprint)
 
 __all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
            "run_trace", "run_trace_sweep", "CampaignSpec", "CampaignPoint",
-           "CampaignResult", "run_campaign",
+           "CampaignResult", "run_campaign", "CampaignExecutor", "CellKey",
+           "CellOutcome", "campaign_cells",
            "ControlledResult", "DriftDetector", "LinkFail", "LinkRecover",
            "Replan", "ReplanConfig", "Scenario", "TrafficDrift",
-           "TrafficEstimator", "run_controlled"]
+           "TrafficEstimator", "run_controlled",
+           "CampaignJob", "CellCheckpoint", "JobStatus",
+           "run_campaign_service", "spec_fingerprint"]

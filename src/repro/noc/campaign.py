@@ -30,6 +30,7 @@ wall-clock, with grid accessors for plotting/tables.
 from __future__ import annotations
 
 import dataclasses
+import re
 import time
 from typing import Sequence
 
@@ -44,7 +45,8 @@ from .sim import (build_tables, get_runner, make_states, postprocess,
 from .simconfig import Algo, SimConfig, SimResult
 
 __all__ = ["CampaignSpec", "CampaignPoint", "CampaignResult",
-           "run_campaign"]
+           "run_campaign", "CellKey", "CellOutcome", "campaign_cells",
+           "CampaignExecutor", "csv_rows"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,14 +151,24 @@ class CampaignPoint:
 class CampaignResult:
     """Structured campaign output.
 
-    ``points`` is ordered (pattern, algo, rate, seed) nested-loop major.
-    ``wall_clock_s`` maps (algo name, pattern) cells to the wall-clock of
-    their single batched call chain (compile time included on first use).
+    ``points`` is ordered (topo, pattern, algo, scenario, rate, seed)
+    nested-loop major.  ``wall_clock_s`` maps one key per cell to the
+    wall-clock of its single batched call chain (compile time included on
+    first use).  The key shape follows the active axes:
+
+    * ``(algo name, pattern)`` — classic single-topology static grid;
+    * ``(algo name, pattern, scenario)`` — with a ``scenarios`` axis;
+    * ``(topo, algo name, pattern)`` /
+      ``(topo, algo name, pattern, scenario)`` — with a ``topos`` axis
+      (the topology name is *prepended*).
+
+    :meth:`summary` labels each part explicitly, so logs stay readable
+    whatever the key arity.
     """
 
     spec: CampaignSpec
     points: list[CampaignPoint]
-    wall_clock_s: dict[tuple[str, str], float]
+    wall_clock_s: dict[tuple[str, ...], float]
     total_wall_clock_s: float
 
     def select(self, algo: Algo | None = None, pattern: str | None = None,
@@ -181,23 +193,78 @@ class CampaignResult:
             out.append(p)
         return out
 
-    def grid(self, field: str, algo: Algo, pattern: str) -> np.ndarray:
-        """(num_rates, num_seeds) array of a SimResult field for a cell."""
+    def _resolve_axis(self, name: str, value: str | None,
+                      options: tuple[str, ...]) -> str:
+        """Default a cell axis for single-valued campaigns; on a
+        multi-valued axis an explicit value is REQUIRED — silently
+        pooling points across scenarios/topologies is exactly the
+        last-write-wins corruption this guard exists to prevent."""
+        if value is not None:
+            if value not in options:
+                raise KeyError(f"unknown {name} {value!r}; campaign has "
+                               f"{list(options)}")
+            return value
+        if len(options) == 1:
+            return options[0]
+        raise ValueError(
+            f"ambiguous {name} axis: this campaign has "
+            f"{list(options)}; pass {name}=... to the accessor")
+
+    @property
+    def scenario_names(self) -> tuple[str, ...]:
+        return tuple(s.name for s in self.spec.scenarios) or ("static",)
+
+    @property
+    def topo_names(self) -> tuple[str, ...]:
+        return tuple(t.name for t in self.spec.topo_axis)
+
+    def grid(self, field: str, algo: Algo, pattern: str,
+             scenario: str | None = None,
+             topo: str | None = None) -> np.ndarray:
+        """(num_rates, num_seeds) array of a SimResult field for ONE cell.
+
+        ``scenario`` / ``topo`` select along the scenario and topology
+        axes; they default only when the campaign has a single value on
+        that axis, and raise otherwise (an ambiguous selection would
+        overlay every scenario/topology into one grid, last write wins).
+        """
+        scenario = self._resolve_axis("scenario", scenario,
+                                      self.scenario_names)
+        topo = self._resolve_axis("topo", topo, self.topo_names)
         rates, seeds = list(self.spec.rates), list(self.spec.seeds)
         g = np.zeros((len(rates), len(seeds)))
-        for p in self.select(algo=algo, pattern=pattern):
-            g[rates.index(p.rate), seeds.index(p.seed)] = getattr(
-                p.result, field)
+        filled = np.zeros((len(rates), len(seeds)), bool)
+        for p in self.select(algo=algo, pattern=pattern,
+                             scenario=scenario, topo=topo):
+            ij = rates.index(p.rate), seeds.index(p.seed)
+            if filled[ij]:
+                raise ValueError(
+                    f"duplicate point for (rate={p.rate}, seed={p.seed}) "
+                    f"in cell ({algo.name}, {pattern!r}, {scenario!r}, "
+                    f"{topo!r}) — pattern names are not unique in this "
+                    f"campaign; use explicit (name, matrix) labels")
+            filled[ij] = True
+            g[ij] = getattr(p.result, field)
+        if not filled.all():
+            raise ValueError(
+                f"cell ({algo.name}, {pattern!r}, {scenario!r}, {topo!r}) "
+                f"is missing {int((~filled).sum())} of the "
+                f"{filled.size} (rate, seed) points")
         return g
 
-    def mean_over_seeds(self, field: str, algo: Algo,
-                        pattern: str) -> np.ndarray:
-        return self.grid(field, algo, pattern).mean(axis=1)
+    def mean_over_seeds(self, field: str, algo: Algo, pattern: str,
+                        scenario: str | None = None,
+                        topo: str | None = None) -> np.ndarray:
+        return self.grid(field, algo, pattern, scenario=scenario,
+                         topo=topo).mean(axis=1)
 
-    def saturation_throughput(self, algo: Algo, pattern: str) -> float:
+    def saturation_throughput(self, algo: Algo, pattern: str,
+                              scenario: str | None = None,
+                              topo: str | None = None) -> float:
         """Max seed-averaged accepted throughput across the rate sweep."""
-        return float(self.mean_over_seeds("throughput", algo,
-                                          pattern).max())
+        return float(self.mean_over_seeds(
+            "throughput", algo, pattern, scenario=scenario,
+            topo=topo).max())
 
     CSV_HEADER = ["topo", "scenario", "pattern", "algo", "rate", "seed",
                   "throughput",
@@ -206,26 +273,51 @@ class CampaignResult:
                   "saturated", "meas_cycles"]
 
     def to_rows(self) -> list[list]:
-        rows = []
-        for p in self.points:
-            r = p.result
-            rows.append([p.topo, p.scenario, p.pattern, p.algo.name,
-                         p.rate, p.seed,
-                         f"{r.throughput:.4f}", f"{r.offered:.4f}",
-                         f"{r.avg_latency:.1f}", f"{r.p50_latency:.1f}",
-                         f"{r.p90_latency:.1f}", f"{r.p99_latency:.1f}",
-                         f"{r.max_latency:.0f}", f"{r.lcv:.3f}",
-                         f"{r.link_load_max:.4f}", r.reorder_value,
-                         int(r.saturated), r.meas_cycles])
-        return rows
+        return csv_rows(self.points)
+
+    def _wall_key_labels(self, key: tuple[str, ...]) -> list[str]:
+        """Name the parts of one ``wall_clock_s`` key (see the class
+        docstring for the shape rules)."""
+        parts = list(key)
+        labels = []
+        if len(self.spec.topo_axis) > 1:
+            labels.append("topo")
+        labels += ["algo", "pattern"]
+        if self.spec.scenarios:
+            labels.append("scenario")
+        if len(labels) != len(parts):   # foreign/legacy key: best effort
+            return [str(p) for p in parts]
+        return [f"{l}={p}" for l, p in zip(labels, parts)]
 
     def summary(self) -> str:
         lines = [f"campaign: {self.spec.num_points} points in "
                  f"{self.total_wall_clock_s:.1f}s wall-clock"]
         for key, dt in self.wall_clock_s.items():
-            cell = " ".join(f"{part:12s}" for part in key)
+            cell = " ".join(f"{part:14s}"
+                            for part in self._wall_key_labels(key))
             lines.append(f"  cell {cell} {dt:6.2f}s")
         return "\n".join(lines)
+
+
+def csv_rows(points: Sequence[CampaignPoint]) -> list[list]:
+    """CSV rows (matching ``CampaignResult.CSV_HEADER``) for a point list.
+
+    Module-level so the campaign service can stream a cell's rows the
+    moment the cell completes, with byte-identical formatting to a full
+    ``CampaignResult.to_rows`` dump.
+    """
+    rows = []
+    for p in points:
+        r = p.result
+        rows.append([p.topo, p.scenario, p.pattern, p.algo.name,
+                     p.rate, p.seed,
+                     f"{r.throughput:.4f}", f"{r.offered:.4f}",
+                     f"{r.avg_latency:.1f}", f"{r.p50_latency:.1f}",
+                     f"{r.p90_latency:.1f}", f"{r.p99_latency:.1f}",
+                     f"{r.max_latency:.0f}", f"{r.lcv:.3f}",
+                     f"{r.link_load_max:.4f}", r.reorder_value,
+                     int(r.saturated), r.meas_cycles])
+    return rows
 
 
 def _run_cell(spec: CampaignSpec, cfg: SimConfig, tables, meta,
@@ -249,42 +341,171 @@ def _run_cell(spec: CampaignSpec, cfg: SimConfig, tables, meta,
                             multi_device=spec.multi_device)
         batched = runner(tables, batched)
         done += step_cycles
-        occ = queue_occupancy(tables, cfg, batched["q_size"], q_meta)
-        sat |= occ >= spec.sat_occupancy
-        if done < total and sat.all() and done > cfg.warmup:
-            break  # every lane saturated: steady-state verdict reached
+        if done > cfg.warmup:
+            # saturation accumulates from post-warmup reads only — a
+            # transient warmup spike must not permanently latch a lane
+            occ = queue_occupancy(tables, cfg, batched["q_size"], q_meta)
+            sat |= occ >= spec.sat_occupancy
+            if done < total and sat.all():
+                break  # every lane saturated: verdict reached
     return jax.device_get(batched), sat
 
 
-def run_campaign(spec: CampaignSpec, *,
-                 bidor_tables: dict[str, np.ndarray] | None = None,
-                 verbose: bool = False) -> CampaignResult:
-    """Execute the full campaign grid.
+# --------------------------------------------------------------------- #
+# resumable cell machinery (the campaign service's unit of work)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class CellKey:
+    """Coordinates of one campaign cell in the spec's enumeration order.
 
-    BiDOR plans are built per pattern from that pattern's own matrix (the
-    paper's offline-statistics assumption); pass ``bidor_tables`` (pattern
-    name → (N, N) choice table) to override, e.g. with aggregate-trace
-    plans.
-
-    With ``spec.scenarios`` set, each (algo, pattern, scenario) cell runs
-    the control plane's event-driven loop instead of the static cell —
-    the scenario's events (link failures, drift epochs) apply mid-run and
-    its policy decides when plans hot-swap.  ``SimResult.link_load_max``
-    then reports the *time-resolved* peak (max over control epochs of the
-    max bandwidth-normalized link load), since a mid-run failure changes
-    the normalization.
+    ``index`` is the cell's position in :func:`campaign_cells` order —
+    the canonical topo → pattern item → algo → scenario nesting — which
+    is also the order of ``CampaignResult.points`` (lane-major within a
+    cell).  ``item_i`` carries the *pattern item index*, not just the
+    name: explicit ``(name, matrix)`` patterns may repeat a name with
+    different matrices.  ``scen_i`` is -1 for the static (no-scenario)
+    cell.
     """
-    t_start = time.perf_counter()
-    cfg0 = spec.base
-    points = [(float(r), int(s)) for r in spec.rates for s in spec.seeds]
-    out_points: list[CampaignPoint] = []
-    wall: dict[tuple, float] = {}
-    topo_axis = spec.topo_axis
-    multi_topo = len(topo_axis) > 1
-    for topo in topo_axis:
-        items = spec.pattern_items(topo)
-        # dead channels (e.g. a fault-region mesh) mask the plan build
+
+    index: int
+    topo_i: int
+    topo: str
+    item_i: int
+    pattern: str
+    algo: Algo
+    scen_i: int
+    scenario: str
+
+    @property
+    def slug(self) -> str:
+        """Filesystem-safe unique cell name (checkpoint file stem)."""
+        parts = (self.topo, f"i{self.item_i}", self.pattern,
+                 self.algo.name, self.scenario)
+        clean = "_".join(re.sub(r"[^A-Za-z0-9.+-]+", "-", p)
+                         for p in parts)
+        return f"cell{self.index:04d}_{clean}"
+
+    def wall_key(self, spec: CampaignSpec) -> tuple[str, ...]:
+        """The cell's ``CampaignResult.wall_clock_s`` key."""
+        key: tuple[str, ...] = (self.algo.name, self.pattern)
+        if self.scen_i >= 0:
+            key = key + (self.scenario,)
+        if len(spec.topo_axis) > 1:
+            key = (self.topo,) + key
+        return key
+
+
+@dataclasses.dataclass
+class CellOutcome:
+    """One executed cell: its per-lane results plus wall-clock."""
+
+    key: CellKey
+    results: list[SimResult]    # one per (rate, seed) lane, rate-major
+    wall_s: float
+
+
+def _pattern_names(spec: CampaignSpec) -> list[str]:
+    """Pattern-axis names without resolving matrices (cheap enumeration)."""
+    return [p if isinstance(p, str) else str(p[0]) for p in spec.patterns]
+
+
+def campaign_cells(spec: CampaignSpec) -> list[CellKey]:
+    """Enumerate the spec's cells in canonical execution order.
+
+    The nesting (topo → pattern item → algo → scenario) matches the
+    historical ``run_campaign`` loop exactly, so ``CampaignResult.points``
+    built from this order is identical to a pre-service campaign's.
+    """
+    names = _pattern_names(spec)
+    cells: list[CellKey] = []
+    index = 0
+    for topo_i, topo in enumerate(spec.topo_axis):
+        for item_i, pat_name in enumerate(names):
+            for algo in spec.algos:
+                for scen_i, scen in enumerate(spec.scenarios or (None,)):
+                    cells.append(CellKey(
+                        index=index, topo_i=topo_i, topo=topo.name,
+                        item_i=item_i, pattern=pat_name, algo=algo,
+                        scen_i=-1 if scen is None else scen_i,
+                        scenario="static" if scen is None else scen.name))
+                    index += 1
+    return cells
+
+
+@dataclasses.dataclass
+class _ItemPrep:
+    """Per-(topology, pattern item) execution inputs."""
+
+    name: str
+    tm: np.ndarray
+    table: object | None       # BiDORTable (None when BiDOR absent)
+    nrank: object | None       # warm-start fixed point for replans
+    bidor_tm: np.ndarray       # admission-controlled generation matrix
+
+
+class CampaignExecutor:
+    """Executes campaign cells one at a time, in any order.
+
+    Holds everything a cell run needs — the resolved pattern matrices,
+    BiDOR plans (admission-controlled for degraded topologies), and the
+    lane list — prepared lazily per topology so resuming a job at cell k
+    does not re-plan topologies whose cells are all complete.
+
+    ``plan_cache`` (a :class:`repro.core.plan_cache.PlanCache`) serves
+    plan builds by content key; when every pattern of a topology hits,
+    ``build_plans_batched`` is not called at all for that topology.
+    """
+
+    def __init__(self, spec: CampaignSpec, *,
+                 bidor_tables: dict[str, np.ndarray] | None = None,
+                 plan_cache=None, verbose: bool = False):
+        self.spec = spec
+        self.bidor_tables = bidor_tables
+        self.plan_cache = plan_cache
+        self.verbose = verbose
+        self.points = [(float(r), int(s))
+                       for r in spec.rates for s in spec.seeds]
+        self._prepped: dict[int, list[_ItemPrep]] = {}
+
+    # ------------------------------------------------------------- #
+    def _build_plans(self, topo: Topology, items, need: list[int]):
+        """Plans for the needed pattern items, through the cache when
+        one is configured (misses batched into one device call)."""
+        plans: dict[int, object] = {}
+        if not need:
+            return plans
         down = topo.down_channels
+        dc = down if down.size else None
+        cache = self.plan_cache
+        if cache is None:
+            built = build_plans_batched(topo, [items[i][1] for i in need],
+                                        down_channels=dc)
+            return dict(zip(need, built))
+        from repro.core.plan_fast import plan_cache_key
+        miss: list[tuple[int, str]] = []
+        for i in need:
+            key = plan_cache_key(topo, items[i][1], down_channels=dc)
+            hit = cache.get(key, topo)
+            if hit is not None:
+                plans[i] = hit
+            else:
+                miss.append((i, key))
+        if miss:
+            built = build_plans_batched(
+                topo, [items[i][1] for i, _ in miss], down_channels=dc)
+            for (i, key), plan in zip(miss, built):
+                plans[i] = plan
+                cache.put(key, plan)
+            cache.stats.device_builds += 1
+        return plans
+
+    def _prep_topo(self, topo_i: int) -> list[_ItemPrep]:
+        if topo_i in self._prepped:
+            return self._prepped[topo_i]
+        spec = self.spec
+        bidor_tables = self.bidor_tables
+        topo = spec.topo_axis[topo_i]
+        items = spec.pattern_items(topo)
         # one vmapped device call plans every pattern that needs one (the
         # campaign's pattern axis; scenario replans reuse these as their
         # warm-start seeds).  Keyed by item index: explicit (name, matrix)
@@ -294,11 +515,8 @@ def run_campaign(spec: CampaignSpec, *,
             need = [i for i, (name, _) in enumerate(items)
                     if not (bidor_tables and name in bidor_tables)
                     or spec.scenarios]
-            if need:
-                built = build_plans_batched(
-                    topo, [items[i][1] for i in need],
-                    down_channels=down if down.size else None)
-                plans = dict(zip(need, built))
+            plans = self._build_plans(topo, items, need)
+        prepped: list[_ItemPrep] = []
         for item_i, (pat_name, tm) in enumerate(items):
             pat_table = None
             pat_nrank = None  # seed fixed point: scenario replans warm-start
@@ -323,56 +541,102 @@ def run_campaign(spec: CampaignSpec, *,
             if (pat_table is not None and pat_table.unroutable is not None
                     and pat_table.unroutable.any()):
                 bidor_tm = np.where(pat_table.unroutable, 0.0, tm)
-            for algo in spec.algos:
-                cfg = cfg0.replace(algo=algo)
-                for scen in (spec.scenarios or (None,)):
-                    t0 = time.perf_counter()
-                    cell_tm = bidor_tm if algo == Algo.BIDOR else tm
-                    if scen is None:
-                        tables, meta = build_tables(
-                            topo, cell_tm,
-                            pat_table if algo == Algo.BIDOR else None,
-                            cfg.num_vcs)
-                        host, sat = _run_cell(spec, cfg, tables, meta,
-                                              points)
-                        results = []
-                        for i, (rate, seed) in enumerate(points):
-                            o = jax.tree.map(lambda x: x[i], host)
-                            results.append(postprocess(
-                                o, cfg, topo, rate=rate, seed=seed,
-                                saturated=bool(sat[i])))
-                        scen_name = "static"
-                        key = (algo.name, pat_name)
-                    else:
-                        from .ctrl import run_controlled
-                        ctrl_res = run_controlled(
-                            topo, cell_tm, cfg, scen,
-                            rates=[float(r) for r in spec.rates],
-                            seeds=list(spec.seeds),
-                            bidor_table=pat_table if algo == Algo.BIDOR
-                            else None,
-                            nrank0=pat_nrank if algo == Algo.BIDOR
-                            else None,
-                            sat_occupancy=spec.sat_occupancy,
-                            multi_device=spec.multi_device,
-                            verbose=verbose)
-                        results = [ctrl_res.result_with_peak(i)
-                                   for i in range(len(points))]
-                        scen_name = scen.name
-                        key = (algo.name, pat_name, scen.name)
-                    if multi_topo:
-                        key = (topo.name,) + key
-                    dt = time.perf_counter() - t0
-                    wall[key] = dt
-                    for (rate, seed), res in zip(points, results):
-                        out_points.append(CampaignPoint(
-                            algo=algo, pattern=pat_name, rate=rate,
-                            seed=seed, result=res, scenario=scen_name,
-                            topo=topo.name))
-                    if verbose:
-                        print(f"campaign cell {topo.name:16s} "
-                              f"{pat_name:12s} {algo.name:8s} "
-                              f"{scen_name:12s} {len(points)} pts "
-                              f"in {dt:.2f}s", flush=True)
+            prepped.append(_ItemPrep(name=pat_name, tm=tm, table=pat_table,
+                                     nrank=pat_nrank, bidor_tm=bidor_tm))
+        self._prepped[topo_i] = prepped
+        return prepped
+
+    # ------------------------------------------------------------- #
+    def run_cell(self, key: CellKey, *, checkpoint=None) -> CellOutcome:
+        """Execute one cell (all its (rate, seed) lanes, one batch).
+
+        ``checkpoint`` — optional epoch-boundary checkpointer handed to
+        the control plane for scenario cells (see
+        ``repro.noc.ctrl.run_controlled``); static cells run in one
+        chunked call and checkpoint only at completion.
+        """
+        spec = self.spec
+        topo = spec.topo_axis[key.topo_i]
+        prep = self._prep_topo(key.topo_i)[key.item_i]
+        algo = key.algo
+        cfg = spec.base.replace(algo=algo)
+        scen = spec.scenarios[key.scen_i] if key.scen_i >= 0 else None
+        t0 = time.perf_counter()
+        cell_tm = prep.bidor_tm if algo == Algo.BIDOR else prep.tm
+        if scen is None:
+            tables, meta = build_tables(
+                topo, cell_tm,
+                prep.table if algo == Algo.BIDOR else None, cfg.num_vcs)
+            host, sat = _run_cell(spec, cfg, tables, meta, self.points)
+            results = []
+            for i, (rate, seed) in enumerate(self.points):
+                o = jax.tree.map(lambda x: x[i], host)
+                results.append(postprocess(
+                    o, cfg, topo, rate=rate, seed=seed,
+                    saturated=bool(sat[i])))
+        else:
+            from .ctrl import run_controlled
+            ctrl_res = run_controlled(
+                topo, cell_tm, cfg, scen,
+                rates=[float(r) for r in spec.rates],
+                seeds=list(spec.seeds),
+                bidor_table=prep.table if algo == Algo.BIDOR else None,
+                nrank0=prep.nrank if algo == Algo.BIDOR else None,
+                sat_occupancy=spec.sat_occupancy,
+                multi_device=spec.multi_device,
+                checkpoint=checkpoint,
+                verbose=self.verbose)
+            results = [ctrl_res.result_with_peak(i)
+                       for i in range(len(self.points))]
+        dt = time.perf_counter() - t0
+        if self.verbose:
+            print(f"campaign cell {key.topo:16s} {key.pattern:12s} "
+                  f"{algo.name:8s} {key.scenario:12s} "
+                  f"{len(self.points)} pts in {dt:.2f}s", flush=True)
+        return CellOutcome(key=key, results=results, wall_s=dt)
+
+    def cell_points(self, outcome: CellOutcome) -> list[CampaignPoint]:
+        """The cell's CampaignPoints, in canonical lane order."""
+        k = outcome.key
+        return [CampaignPoint(algo=k.algo, pattern=k.pattern, rate=rate,
+                              seed=seed, result=res, scenario=k.scenario,
+                              topo=k.topo)
+                for (rate, seed), res in zip(self.points, outcome.results)]
+
+
+def run_campaign(spec: CampaignSpec, *,
+                 bidor_tables: dict[str, np.ndarray] | None = None,
+                 plan_cache=None,
+                 verbose: bool = False) -> CampaignResult:
+    """Execute the full campaign grid.
+
+    BiDOR plans are built per pattern from that pattern's own matrix (the
+    paper's offline-statistics assumption); pass ``bidor_tables`` (pattern
+    name → (N, N) choice table) to override, e.g. with aggregate-trace
+    plans.  ``plan_cache`` serves/stores those builds by content key (see
+    :class:`repro.core.plan_cache.PlanCache`).
+
+    With ``spec.scenarios`` set, each (algo, pattern, scenario) cell runs
+    the control plane's event-driven loop instead of the static cell —
+    the scenario's events (link failures, drift epochs) apply mid-run and
+    its policy decides when plans hot-swap.  ``SimResult.link_load_max``
+    then reports the *time-resolved* peak (max over control epochs of the
+    max bandwidth-normalized link load), since a mid-run failure changes
+    the normalization.
+
+    This is the blocking, in-memory driver over the resumable cell
+    machinery; ``repro.noc.service`` runs the same cells as a
+    checkpointed job.
+    """
+    t_start = time.perf_counter()
+    executor = CampaignExecutor(spec, bidor_tables=bidor_tables,
+                                plan_cache=plan_cache, verbose=verbose)
+    out_points: list[CampaignPoint] = []
+    wall: dict[tuple, float] = {}
+    for key in campaign_cells(spec):
+        outcome = executor.run_cell(key)
+        wall[key.wall_key(spec)] = outcome.wall_s
+        out_points.extend(executor.cell_points(outcome))
     return CampaignResult(spec=spec, points=out_points, wall_clock_s=wall,
                           total_wall_clock_s=time.perf_counter() - t_start)
+

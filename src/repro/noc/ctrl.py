@@ -46,8 +46,9 @@ from repro.core.bidor import BiDORTable, bidor, greedy_refine
 from repro.core.nrank import NRankResult, initial_weights, nrank_channel
 from repro.core.plan_fast import build_plan_fast
 from repro.core.topology import Topology
-from .sim import (build_tables, get_runner, make_states, postprocess,
-                  queue_occupancy, retarget_tables, source_queue_meta)
+from .sim import (build_tables, get_runner, make_states,
+                  maybe_shard_states, postprocess, queue_occupancy,
+                  retarget_tables, source_queue_meta)
 from .simconfig import Algo, SimConfig, SimResult
 
 __all__ = [
@@ -322,6 +323,42 @@ def _apply_events(events, bw, topo, base_bw):
     return bw, traffic, rate_scale, kinds
 
 
+_NR_FIELDS = ("w_nr", "w0", "w_final", "p", "p_drn", "w_possibility")
+
+
+def _ctrl_snapshot(batched, *, bound_i, sat, link_peak, bw, cur_traffic,
+                   cur_gen, cur_unroutable, fault_pending, estimator,
+                   detector, replans, table, nr_prev):
+    """Serializable (arrays, meta) state of a controlled run at the TOP
+    of boundary iteration ``bound_i``: everything up to
+    ``bounds[bound_i - 1]`` (events, replans, counters) applied, the next
+    epoch not yet run.  ``_ctrl_restore`` inverts it bit-identically."""
+    arrays = {f"s_{k}": np.asarray(v)
+              for k, v in jax.device_get(batched).items()}
+    arrays.update(sat=sat, link_peak=link_peak, bw=bw,
+                  cur_traffic=cur_traffic, cur_gen=cur_gen)
+    if cur_unroutable is not None:
+        arrays["cur_unroutable"] = np.asarray(cur_unroutable, bool)
+    if estimator._m is not None:
+        arrays["est_m"] = estimator._m
+    if detector._ref is not None:
+        arrays["det_ref"] = detector._ref
+    if table is not None:
+        arrays["tab_choice"] = np.asarray(table.choice, np.int8)
+    if nr_prev is not None:
+        for f in _NR_FIELDS:
+            arrays[f"nr_{f}"] = np.asarray(getattr(nr_prev, f),
+                                           np.float64)
+    meta = dict(bound_i=int(bound_i),
+                fault_pending=bool(fault_pending),
+                last_distance=float(detector.last_distance),
+                has_nr=nr_prev is not None,
+                nr_iterations=(int(nr_prev.iterations)
+                               if nr_prev is not None else 0),
+                replans=[dataclasses.asdict(r) for r in replans])
+    return arrays, meta
+
+
 def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                    scenario: Scenario | None = None, *,
                    rates: list[float] | None = None,
@@ -330,6 +367,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                    nrank0: NRankResult | None = None,
                    sat_occupancy: float | None = None,
                    multi_device: bool | None = None,
+                   checkpoint=None,
                    verbose: bool = False) -> ControlledResult:
     """Run a simulation under an event schedule with a control policy.
 
@@ -347,6 +385,17 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     event cycles added as extra boundaries).  At each boundary the
     environment applies due events, the controller reads the on-device
     counters, and — policy permitting — re-plans and hot-swaps tables.
+
+    ``checkpoint`` — optional epoch-boundary checkpointer (duck-typed:
+    ``save(arrays, meta)`` persists a flat ``dict[str, np.ndarray]`` plus
+    a JSON-able meta dict; ``load()`` returns the latest such pair or
+    None).  At the top of every boundary the full run state (sim pytree,
+    environment, estimator/detector, warm-start fixed point, replan log)
+    is saved; on entry a stored snapshot is restored and the completed
+    epochs skipped.  The boundary grid is deterministic, so the resumed
+    run replays the identical chunk lengths (same cached compilations)
+    and its results are bit-identical to the uninterrupted run
+    (``tests/test_service.py``).
     """
     scenario = scenario or Scenario("static")
     rc = scenario.replan or ReplanConfig()
@@ -371,6 +420,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     base_bw = np.asarray(topo.channel_bw, np.float64)
     bw = base_bw.copy()
     cur_traffic = np.asarray(traffic, np.float64)
+    cur_gen = cur_traffic    # what the sim currently *generates* from
     fault_pending = False
     cur_unroutable = None    # active admission-control mask (shed pairs)
 
@@ -394,8 +444,67 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     sat_th = rc.sat_occupancy if sat_occupancy is None else sat_occupancy
     sat = np.zeros(nlanes, bool)
 
-    t0 = 0
-    for t1 in bounds:
+    # ---- resume from an epoch-boundary snapshot, if one exists ---- #
+    resume_i = 0
+    snap = checkpoint.load() if checkpoint is not None else None
+    if snap is not None:
+        arrays, cmeta = snap
+        resume_i = int(cmeta["bound_i"])
+        batched = maybe_shard_states(
+            {k[2:]: jnp.asarray(v) for k, v in arrays.items()
+             if k.startswith("s_")})
+        sat = np.asarray(arrays["sat"], bool).copy()
+        link_peak = np.asarray(arrays["link_peak"], np.float64).copy()
+        bw = np.asarray(arrays["bw"], np.float64)
+        cur_traffic = np.asarray(arrays["cur_traffic"], np.float64)
+        cur_gen = np.asarray(arrays["cur_gen"], np.float64)
+        cur_unroutable = (np.asarray(arrays["cur_unroutable"], bool)
+                          if "cur_unroutable" in arrays else None)
+        fault_pending = bool(cmeta["fault_pending"])
+        estimator._m = (np.asarray(arrays["est_m"], np.float64)
+                        if "est_m" in arrays else None)
+        detector._ref = (np.asarray(arrays["det_ref"], np.float64)
+                         if "det_ref" in arrays else None)
+        detector.last_distance = float(cmeta["last_distance"])
+        replans = [Replan(**r) for r in cmeta["replans"]]
+        if cmeta["has_nr"]:
+            nr_prev = NRankResult(
+                iterations=int(cmeta["nr_iterations"]),
+                **{f: arrays[f"nr_{f}"] for f in _NR_FIELDS})
+        # re-point the sim tables at the checkpointed environment (a
+        # value-identical hot-swap: retarget is deterministic in its
+        # inputs, so unchanged fields rebuild to the same values)
+        choice = arrays.get("tab_choice")
+        if choice is not None and table is not None:
+            # keep the live table in sync so a LATER snapshot (second
+            # interruption) records the replanned choice, not the seed's
+            table = dataclasses.replace(table, choice=choice)
+        tables = retarget_tables(
+            tables, topo, traffic=cur_gen,
+            choice=(choice if cfg.algo == Algo.BIDOR
+                    and choice is not None else None),
+            channel_bw=bw)
+        q_meta = source_queue_meta(tables, cfg)
+        prev_seq = np.asarray(arrays["s_next_seq"], np.int64)
+        prev_seen = np.asarray(arrays["s_chan_seen"], np.int64)
+        prev_fwd = np.asarray(arrays["s_chan_fwd"], np.int64)
+        prev_meas = np.asarray(arrays["s_meas_cnt"], np.int64)
+        t_prev = 0
+        for j in range(resume_i):
+            epoch_bounds.append((t_prev, bounds[j]))
+            t_prev = bounds[j]
+
+    t0 = bounds[resume_i - 1] if resume_i else 0
+    for bound_i in range(resume_i, len(bounds)):
+        t1 = bounds[bound_i]
+        if checkpoint is not None and bound_i > resume_i:
+            checkpoint.save(*_ctrl_snapshot(
+                batched, bound_i=bound_i, sat=sat, link_peak=link_peak,
+                bw=bw, cur_traffic=cur_traffic, cur_gen=cur_gen,
+                cur_unroutable=cur_unroutable,
+                fault_pending=fault_pending, estimator=estimator,
+                detector=detector, replans=replans, table=table,
+                nr_prev=nr_prev))
         runner = get_runner(meta, cfg, t1 - t0, num_lanes=nlanes,
                             multi_device=multi_device)
         batched = runner(tables, batched)
@@ -418,8 +527,11 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                 loads = d_fwd[i, live] / float(d_meas[i]) / bw[live]
                 link_peak[i] = max(link_peak[i], float(loads.max()))
 
-        sat |= queue_occupancy(tables, cfg, batched["q_size"],
-                               q_meta) >= sat_th
+        if t1 > cfg.warmup:
+            # saturation accumulates from post-warmup reads only — a
+            # transient warmup spike must not permanently latch a lane
+            sat |= queue_occupancy(tables, cfg, batched["q_size"],
+                                   q_meta) >= sat_th
 
         estimator.update(d_seq.sum(axis=0))
         drifted = detector.update(d_seen.sum(axis=0))
@@ -444,6 +556,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                 traffic=gen_traffic,
                 channel_bw=bw if "fault" in event_kinds else None)
             if gen_traffic is not None:
+                cur_gen = gen_traffic
                 q_meta = source_queue_meta(tables, cfg)
             if new_traffic is not None:
                 cur_traffic = new_traffic
@@ -489,6 +602,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
             gen = np.where(cur_unroutable, 0.0, cur_traffic)
         tables = retarget_tables(tables, topo, choice=table.choice,
                                  traffic=gen)
+        cur_gen = gen
         q_meta = source_queue_meta(tables, cfg)
         detector.reset()
         fault_pending = False

@@ -1,0 +1,441 @@
+"""Campaign-as-a-service: resumable, cached, streaming mega-sweeps.
+
+``run_campaign`` is one blocking call — fine for a minute-long grid,
+useless for the hours-long sweeps behind the paper's headline numbers,
+which must survive preemption and stream partial results.  This module
+makes a campaign a *job*:
+
+* **Per-cell checkpointing.**  A cell — one (topo, pattern item, algo,
+  scenario) batch — is the unit of work (``repro.noc.campaign``'s
+  resumable cell machinery).  As each completes, its per-lane
+  ``SimResult``s, saturation flags and wall-clock land under
+  ``artifacts/campaigns/<job_id>/cells/`` as one atomic npz (the
+  ``repro.train.checkpoint`` write-then-rename idiom), and its CSV rows
+  are appended to the job's ``results.csv``.
+* **Mid-cell checkpointing.**  Scenario cells additionally snapshot the
+  full control-loop state at every epoch boundary
+  (``run_controlled(checkpoint=...)``), so even a single hours-long
+  dynamic cell resumes from its last boundary instead of cycle 0.
+* **Resume is bit-identical.**  The job manifest is keyed on a content
+  hash of the ``CampaignSpec`` (:func:`spec_fingerprint`); re-running the
+  same spec against the same directory skips completed cells, re-emits
+  their stored results, and continues.  Cells are deterministic given the
+  spec (per-point PRNG streams, deterministic boundary grids), so the
+  final ``CampaignResult`` — and the final ``results.csv``, byte for
+  byte — is identical however many times the job was interrupted
+  (``tests/test_service.py``).
+* **Plan caching.**  Jobs share a persistent
+  :class:`repro.core.plan_cache.PlanCache` (default
+  ``<root>/plan-cache``), keyed on (topology fingerprint, traffic matrix
+  bytes, fault mask, hyper-parameters): a warm re-run rebuilds zero
+  plans — ``build_plans_batched`` is not called at all.
+* **Streaming.**  ``results.csv`` grows append-only while the job runs;
+  a resume rewrites it from the completed cells' checkpoints (identical
+  bytes — the stream is derived state, the npz cells are truth) before
+  appending fresh cells.  Partial results are usable mid-flight.
+
+The driver is :class:`CampaignJob`: synchronous ``run()`` (optionally
+budgeted via ``max_cells`` — the interruption knob CI's
+resume-equivalence check uses), async ``start()``/``wait()`` on a
+daemon thread, ``status()``/``result()`` accessors.
+:func:`run_campaign_service` wraps the common run-to-completion case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.plan_cache import PlanCache, topology_fingerprint
+from .campaign import (CampaignExecutor, CampaignPoint, CampaignResult,
+                       CampaignSpec, CellKey, CellOutcome, campaign_cells,
+                       csv_rows)
+from .simconfig import Algo, SimConfig, SimResult
+
+__all__ = ["CampaignJob", "JobStatus", "CellCheckpoint",
+           "run_campaign_service", "spec_fingerprint"]
+
+DEFAULT_ROOT = os.path.join("artifacts", "campaigns")
+
+
+# --------------------------------------------------------------------- #
+# spec fingerprinting (the manifest key)
+# --------------------------------------------------------------------- #
+def _traffic_hash(tm) -> str:
+    import hashlib
+    a = np.ascontiguousarray(np.asarray(tm, np.float64))
+    return hashlib.sha256(a.tobytes()).hexdigest()
+
+
+def _event_desc(ev) -> dict:
+    d = {"kind": type(ev).__name__, "cycle": int(ev.cycle)}
+    if hasattr(ev, "links"):
+        d["links"] = [[int(u), int(n)] for u, n in ev.links]
+    if hasattr(ev, "bw_scale"):
+        d["bw_scale"] = float(ev.bw_scale)
+    if hasattr(ev, "traffic"):
+        d["traffic"] = _traffic_hash(ev.traffic)
+    if hasattr(ev, "rate_scale"):
+        d["rate_scale"] = float(ev.rate_scale)
+    return d
+
+
+def spec_fingerprint(spec: CampaignSpec) -> str:
+    """Content hash of everything that determines a campaign's results.
+
+    Topologies hash by full content (:func:`topology_fingerprint`),
+    explicit traffic matrices by bytes, scenarios by their event
+    schedules (drift matrices hashed) and replan knobs.  ``multi_device``
+    is deliberately EXCLUDED: lane sharding is bit-identical by
+    construction, so a job may resume on a different device count.
+    """
+    import hashlib
+    desc = {
+        "topos": [topology_fingerprint(t) for t in spec.topo_axis],
+        "algos": [a.name for a in spec.algos],
+        "patterns": [p if isinstance(p, str)
+                     else [str(p[0]), _traffic_hash(p[1])]
+                     for p in spec.patterns],
+        "rates": [float(r) for r in spec.rates],
+        "seeds": [int(s) for s in spec.seeds],
+        "base": {f.name: (int(v) if isinstance(v, (bool, int, Algo))
+                          else float(v))
+                 for f in dataclasses.fields(SimConfig)
+                 for v in [getattr(spec.base, f.name)]},
+        "chunk": int(spec.chunk),
+        "sat_occupancy": float(spec.sat_occupancy),
+        "scenarios": [{
+            "name": s.name, "policy": s.policy,
+            "events": [_event_desc(e) for e in s.events],
+            "replan": (dataclasses.asdict(s.replan)
+                       if s.replan is not None else None),
+        } for s in spec.scenarios],
+    }
+    blob = json.dumps(desc, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+# --------------------------------------------------------------------- #
+# atomic file helpers (the repro.train.checkpoint idiom)
+# --------------------------------------------------------------------- #
+def _atomic_savez(path: str, payload: dict) -> None:
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+class CellCheckpoint:
+    """Single-file atomic (arrays, meta) checkpoint — the duck-typed
+    epoch-boundary checkpointer ``run_controlled`` consumes.  Meta rides
+    inside the npz as a JSON bytes array, so save/replace is one atomic
+    rename and a partial write can never be observed."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+
+    def save(self, arrays: dict, meta: dict) -> None:
+        payload = dict(arrays)
+        payload["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        _atomic_savez(self.path, payload)
+
+    def load(self):
+        if not os.path.exists(self.path):
+            return None
+        with np.load(self.path, allow_pickle=False) as z:
+            d = {k: z[k] for k in z.files}
+        meta = json.loads(bytes(d.pop("__meta__")).decode())
+        return d, meta
+
+    def clear(self) -> None:
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+
+
+# --------------------------------------------------------------------- #
+# cell outcome (de)serialization
+# --------------------------------------------------------------------- #
+_RESULT_FIELDS = [f.name for f in dataclasses.fields(SimResult)]
+
+
+def _save_outcome(path: str, outcome: CellOutcome) -> None:
+    payload = {"wall_s": np.float64(outcome.wall_s)}
+    for name in _RESULT_FIELDS:
+        vals = [getattr(r, name) for r in outcome.results]
+        if name == "node_load":
+            payload[name] = np.stack([np.asarray(v, np.float64)
+                                      for v in vals])
+        elif name == "algo":
+            payload[name] = np.asarray([int(v) for v in vals], np.int64)
+        else:
+            payload[name] = np.asarray(vals)
+    _atomic_savez(path, payload)
+
+
+def _load_outcome(path: str, key: CellKey) -> CellOutcome:
+    with np.load(path, allow_pickle=False) as z:
+        d = {k: z[k] for k in z.files}
+    n = d["algo"].shape[0]
+    results = []
+    for i in range(n):
+        kw = {}
+        for name in _RESULT_FIELDS:
+            v = d[name][i]
+            if name == "node_load":
+                kw[name] = np.asarray(v, np.float64)
+            elif name == "algo":
+                kw[name] = Algo(int(v))
+            elif v.dtype == np.bool_:
+                kw[name] = bool(v)
+            elif np.issubdtype(v.dtype, np.integer):
+                kw[name] = int(v)
+            else:
+                kw[name] = float(v)
+        results.append(SimResult(**kw))
+    return CellOutcome(key=key, results=results,
+                       wall_s=float(d["wall_s"]))
+
+
+# --------------------------------------------------------------------- #
+# the job
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class JobStatus:
+    job_id: str
+    total_cells: int
+    done_cells: int
+    running: bool
+    complete: bool
+
+
+class CampaignJob:
+    """A campaign as a resumable on-disk job (see module docstring).
+
+    ``root/<job_id>/`` layout::
+
+        manifest.json    spec fingerprint + cell table (written once)
+        cells/<slug>.npz completed-cell results (atomic, one per cell)
+        ckpt/<slug>.npz  epoch-boundary snapshot of the in-flight
+                         scenario cell (deleted when the cell completes)
+        results.csv      streaming CSV, appended as cells complete
+
+    ``job_id`` defaults to a prefix of the spec fingerprint, so the same
+    spec always maps to the same directory and ``resume=True`` (the
+    default) picks up exactly where a previous process stopped.  A
+    directory whose manifest hashes a *different* spec is refused.
+
+    ``plan_cache``: a :class:`PlanCache`, a directory path, ``"shared"``
+    (default — ``<root>/plan-cache``, shared by every job under the
+    root), or None to disable plan caching.
+    """
+
+    def __init__(self, spec: CampaignSpec, *, root: str = DEFAULT_ROOT,
+                 job_id: str | None = None,
+                 bidor_tables: dict[str, np.ndarray] | None = None,
+                 plan_cache="shared",
+                 resume: bool = True,
+                 verbose: bool = False):
+        self.spec = spec
+        self.fingerprint = spec_fingerprint(spec)
+        self.job_id = job_id or f"job-{self.fingerprint[:12]}"
+        self.dir = os.path.join(root, self.job_id)
+        self.cells_dir = os.path.join(self.dir, "cells")
+        self.ckpt_dir = os.path.join(self.dir, "ckpt")
+        self.csv_path = os.path.join(self.dir, "results.csv")
+        self.verbose = verbose
+        if plan_cache == "shared":
+            plan_cache = PlanCache(os.path.join(root, "plan-cache"))
+        elif isinstance(plan_cache, str):
+            plan_cache = PlanCache(plan_cache)
+        self.plan_cache = plan_cache
+        self.cells = campaign_cells(spec)
+        self.executor = CampaignExecutor(
+            spec, bidor_tables=bidor_tables, plan_cache=plan_cache,
+            verbose=verbose)
+        os.makedirs(self.cells_dir, exist_ok=True)
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        self._init_manifest(resume)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------- #
+    def _init_manifest(self, resume: bool) -> None:
+        path = os.path.join(self.dir, "manifest.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                manifest = json.load(f)
+            if manifest["spec_fingerprint"] != self.fingerprint:
+                raise ValueError(
+                    f"job dir {self.dir} holds a different campaign "
+                    f"(manifest fingerprint "
+                    f"{manifest['spec_fingerprint'][:12]}..., this spec "
+                    f"{self.fingerprint[:12]}...); pick another job_id")
+            if not resume:
+                for k in self.cells:
+                    p = self._cell_path(k)
+                    if os.path.exists(p):
+                        os.unlink(p)
+                    CellCheckpoint(self._ckpt_path(k)).clear()
+                if os.path.exists(self.csv_path):
+                    os.unlink(self.csv_path)
+            return
+        manifest = {
+            "job_id": self.job_id,
+            "spec_fingerprint": self.fingerprint,
+            "created_unix": time.time(),
+            "num_points": self.spec.num_points,
+            "num_cells": len(self.cells),
+            "csv_header": CampaignResult.CSV_HEADER,
+            "cells": [{
+                "index": k.index, "slug": k.slug, "topo": k.topo,
+                "pattern": k.pattern, "algo": k.algo.name,
+                "scenario": k.scenario,
+            } for k in self.cells],
+        }
+        _atomic_write_text(path, json.dumps(manifest, indent=1))
+
+    def _cell_path(self, key: CellKey) -> str:
+        return os.path.join(self.cells_dir, f"{key.slug}.npz")
+
+    def _ckpt_path(self, key: CellKey) -> str:
+        return os.path.join(self.ckpt_dir, f"{key.slug}.npz")
+
+    # ------------------------------------------------------------- #
+    def completed_cells(self) -> list[CellKey]:
+        return [k for k in self.cells
+                if os.path.exists(self._cell_path(k))]
+
+    def status(self) -> JobStatus:
+        done = len(self.completed_cells())
+        return JobStatus(
+            job_id=self.job_id, total_cells=len(self.cells),
+            done_cells=done,
+            running=self._thread is not None and self._thread.is_alive(),
+            complete=done == len(self.cells))
+
+    # ------------------------------------------------------------- #
+    def _append_csv(self, f, outcome: CellOutcome) -> None:
+        for row in csv_rows(self.executor.cell_points(outcome)):
+            f.write(",".join(str(v) for v in row) + "\n")
+        f.flush()
+
+    def run(self, max_cells: int | None = None) -> bool:
+        """Execute remaining cells in order; True when the job is done.
+
+        Completed cells are loaded, not re-run; the streaming CSV is
+        rewritten from their stored results (byte-identical — the cell
+        npz files are the source of truth) and then appended per fresh
+        cell.  ``max_cells`` budgets the number of *executed* cells
+        before returning — the controlled-interruption knob used by the
+        resume tests and CI.
+        """
+        executed = 0
+        with open(self.csv_path, "w") as f:
+            f.write(",".join(CampaignResult.CSV_HEADER) + "\n")
+            for key in self.cells:
+                path = self._cell_path(key)
+                if os.path.exists(path):
+                    self._append_csv(f, _load_outcome(path, key))
+                    continue
+                if max_cells is not None and executed >= max_cells:
+                    return False
+                ckpt = CellCheckpoint(self._ckpt_path(key))
+                outcome = self.executor.run_cell(
+                    key, checkpoint=ckpt if key.scen_i >= 0 else None)
+                _save_outcome(path, outcome)
+                ckpt.clear()
+                executed += 1
+                self._append_csv(f, outcome)
+        return True
+
+    # ------------------------------------------------------------- #
+    def start(self, max_cells: int | None = None) -> "CampaignJob":
+        """Run the job on a daemon thread (async dispatch)."""
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(f"job {self.job_id} is already running")
+        self._error = None
+
+        def _target():
+            try:
+                self.run(max_cells)
+            except BaseException as e:   # surfaced by wait()
+                self._error = e
+
+        self._thread = threading.Thread(
+            target=_target, name=f"campaign-{self.job_id}", daemon=True)
+        self._thread.start()
+        return self
+
+    def wait(self, timeout: float | None = None) -> JobStatus:
+        """Join the background run; re-raises its error, if any."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self._error is not None:
+            raise self._error
+        return self.status()
+
+    # ------------------------------------------------------------- #
+    def result(self) -> CampaignResult:
+        """Assemble the CampaignResult from the per-cell checkpoints.
+
+        Requires a complete job; points come back in canonical order, so
+        the result is interchangeable with a ``run_campaign`` return.
+        """
+        points: list[CampaignPoint] = []
+        wall: dict[tuple, float] = {}
+        total = 0.0
+        for key in self.cells:
+            path = self._cell_path(key)
+            if not os.path.exists(path):
+                raise RuntimeError(
+                    f"job {self.job_id} incomplete: cell {key.slug} has "
+                    f"no checkpoint (run() or resume first)")
+            outcome = _load_outcome(path, key)
+            points.extend(self.executor.cell_points(outcome))
+            wall[key.wall_key(self.spec)] = outcome.wall_s
+            total += outcome.wall_s
+        return CampaignResult(spec=self.spec, points=points,
+                              wall_clock_s=wall, total_wall_clock_s=total)
+
+
+def run_campaign_service(spec: CampaignSpec, *, root: str = DEFAULT_ROOT,
+                         job_id: str | None = None,
+                         bidor_tables=None, plan_cache="shared",
+                         resume: bool = True,
+                         max_cells: int | None = None,
+                         verbose: bool = False):
+    """Run (or resume) a campaign job to completion and return its
+    :class:`CampaignResult`; with ``max_cells`` set the job may stop
+    early, returning ``(None, job)`` — callers re-invoke to continue.
+
+    Returns ``(result | None, job)``.
+    """
+    job = CampaignJob(spec, root=root, job_id=job_id,
+                      bidor_tables=bidor_tables, plan_cache=plan_cache,
+                      resume=resume, verbose=verbose)
+    complete = job.run(max_cells)
+    return (job.result() if complete else None), job

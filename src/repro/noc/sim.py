@@ -161,9 +161,18 @@ def queue_occupancy(tables: _Tables, cfg: SimConfig,
     nodes — the lane-saturation criterion shared by the campaign
     early-exit and the control plane's saturation flag.  ``meta`` is the
     precomputed :func:`source_queue_meta`; omitting it re-derives the
-    mask from the device tables on every call."""
+    mask from the device tables on every call.
+
+    A pattern with no I/O-capable sources (all-zero generation rows,
+    e.g. a fully-shed fault-region matrix) has ``qcap == 0``; its lanes
+    can never queue a packet, so their occupancy is 0.0 by definition —
+    NOT NaN, which would poison the ``>=`` saturation comparison and the
+    early-exit downstream."""
     io_mask, qcap = source_queue_meta(tables, cfg) if meta is None else meta
-    return np.asarray(jax.device_get(q_size))[:, io_mask].sum(1) / qcap
+    q = np.asarray(jax.device_get(q_size))
+    if qcap <= 0:
+        return np.zeros(q.shape[0])
+    return q[:, io_mask].sum(1) / qcap
 
 
 def retarget_tables(tables: _Tables, topo: Topology, *,

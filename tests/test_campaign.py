@@ -101,6 +101,51 @@ def test_unsaturated_lane_prevents_early_exit():
     assert low.meas_cycles == base.measure  # ran to completion
 
 
+def test_warmup_spike_does_not_latch_saturation():
+    """The saturation latch must only accumulate post-warmup occupancy
+    reads: at rate 3.0 the source queues overflow during warmup, but
+    injection stops at cycle 1100 and the long drain empties them before
+    any post-warmup read — the sticky-latch bug reported them saturated
+    forever."""
+    base = SimConfig(cycles=2600, warmup=1000, drain=1500,
+                     src_queue_pkts=16)
+    spec = CampaignSpec(
+        topo=TOPO, algos=(Algo.XY,), patterns=(("uni", UNI),),
+        rates=(3.0,), seeds=(0,), base=base, chunk=500,
+        sat_occupancy=0.5)
+    res = run_campaign(spec)
+    (p,) = res.points
+    assert not p.result.saturated
+    assert p.result.meas_cycles == base.measure  # no early exit either
+
+
+def test_accessors_refuse_ambiguous_axes():
+    """grid()/mean_over_seeds()/saturation_throughput() on a campaign
+    with >1 scenario or topology must demand the axis explicitly —
+    pooling would overlay every scenario/topo last-write-wins."""
+    from repro.core import torus
+    from repro.noc import Scenario
+    from repro.noc.campaign import CampaignResult
+
+    spec = CampaignSpec(
+        topo=None, topos=(TOPO, torus(4, 4)), algos=(Algo.XY,),
+        patterns=(("uni", UNI),), rates=(0.1,), seeds=(0,), base=BASE,
+        scenarios=(Scenario("a"), Scenario("b")))
+    res = CampaignResult(spec=spec, points=[], wall_clock_s={},
+                         total_wall_clock_s=0.0)
+    with pytest.raises(ValueError, match="ambiguous scenario"):
+        res.grid("throughput", Algo.XY, "uni")
+    with pytest.raises(ValueError, match="ambiguous topo"):
+        res.grid("throughput", Algo.XY, "uni", scenario="a")
+    with pytest.raises(KeyError, match="unknown scenario"):
+        res.grid("throughput", Algo.XY, "uni", scenario="nope",
+                 topo=TOPO.name)
+    # fully qualified but absent points: missing-cell error, not zeros
+    with pytest.raises(ValueError, match="missing"):
+        res.grid("throughput", Algo.XY, "uni", scenario="a",
+                 topo=TOPO.name)
+
+
 def test_pattern_names_resolve_through_registry():
     spec = CampaignSpec(
         topo=TOPO, algos=(Algo.XY,), patterns=("uniform", "tornado"),

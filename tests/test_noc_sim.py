@@ -129,3 +129,22 @@ def test_no_deadlock_at_high_load():
         r = _run(algo, rate=1.5)
         # sustained ejection in the measurement window
         assert r.throughput > 0.1, (algo, r.throughput)
+
+
+def test_queue_occupancy_zero_capacity_is_zero_not_nan():
+    """An all-zero traffic matrix has no I/O-capable sources, so the
+    queue capacity is 0; occupancy must be exactly 0.0 — a NaN here
+    poisons the >= saturation comparison and latches the early exit."""
+    from repro.noc.sim import (build_tables, queue_occupancy,
+                               source_queue_meta)
+
+    cfg = SimConfig(**FAST)
+    tables, _meta = build_tables(TOPO, np.zeros_like(UNI), None,
+                                 cfg.num_vcs)
+    io_mask, qcap = source_queue_meta(tables, cfg)
+    assert qcap == 0.0 and not io_mask.any()
+    occ = queue_occupancy(tables, cfg, np.ones((3, TOPO.num_nodes)),
+                          (io_mask, qcap))
+    assert occ.shape == (3,)
+    assert np.all(occ == 0.0)
+    assert np.all(np.isfinite(occ))

@@ -1,0 +1,235 @@
+"""Campaign service: kill-and-resume bit-identity, persistent plan
+caching, mid-cell control-loop checkpointing, and the multi-axis result
+accessors the service streams into."""
+
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import build_plan, mesh2d, torus, traffic
+from repro.noc import (Algo, CampaignSpec, LinkFail, ReplanConfig,
+                       Scenario, SimConfig, TrafficDrift, run_campaign,
+                       run_campaign_service, run_controlled)
+from repro.noc.service import CampaignJob, CellCheckpoint, spec_fingerprint
+
+TOPO = mesh2d(3, 3)
+UNI = traffic.uniform(TOPO)
+BASE = SimConfig(cycles=1200, warmup=300, drain=100)
+
+# full bidirectional link between nodes 0 and 1
+LINK01 = ((0, 1), (1, 0))
+
+SCALAR_FIELDS = ("injected_flits", "ejected_flits", "in_flight_flits",
+                 "reorder_value", "meas_cycles", "saturated",
+                 "avg_latency", "max_latency", "throughput", "offered",
+                 "lcv", "p50_latency", "p90_latency", "p99_latency",
+                 "link_load_max")
+
+
+def _spec(**kw):
+    d = dict(
+        topo=TOPO, algos=(Algo.XY, Algo.BIDOR),
+        patterns=(("uni", UNI),), rates=(0.1, 0.3), seeds=(0,),
+        base=BASE,
+        scenarios=(Scenario("calm"),
+                   Scenario("fail", events=(LinkFail(600, LINK01),),
+                            policy="oracle",
+                            replan=ReplanConfig(epoch=400))))
+    d.update(kw)
+    return CampaignSpec(**d)
+
+
+def _assert_points_identical(pts_a, pts_b):
+    assert len(pts_a) == len(pts_b)
+    for p, q in zip(pts_a, pts_b):
+        assert (p.algo, p.pattern, p.rate, p.seed, p.scenario, p.topo) \
+            == (q.algo, q.pattern, q.rate, q.seed, q.scenario, q.topo)
+        for f in SCALAR_FIELDS:
+            assert getattr(p.result, f) == getattr(q.result, f), f
+        assert np.array_equal(p.result.node_load, q.result.node_load)
+
+
+def test_kill_and_resume_is_bit_identical(tmp_path):
+    """A job interrupted after every single cell and resumed to the end
+    must produce the same CSV byte-for-byte, and the same result
+    bit-for-bit, as an uninterrupted job and as plain run_campaign."""
+    spec = _spec()
+    root = str(tmp_path)
+    runs = 0
+    while True:
+        res, job = run_campaign_service(spec, root=root, job_id="itr",
+                                        max_cells=1)
+        runs += 1
+        assert runs <= 16, "job failed to converge"
+        if res is not None:
+            break
+    # exactly one executed cell per invocation
+    assert runs == len(job.cells)
+
+    fres, fjob = run_campaign_service(spec, root=root, job_id="fresh")
+    with open(job.csv_path, "rb") as a, open(fjob.csv_path, "rb") as b:
+        assert a.read() == b.read()
+    _assert_points_identical(res.points, fres.points)
+    # the job directory alone reconstructs the result
+    _assert_points_identical(res.points, job.result().points)
+    # and the service is transparent w.r.t. the blocking engine
+    ref = run_campaign(spec)
+    _assert_points_identical(res.points, ref.points)
+
+
+def test_job_refuses_foreign_spec_and_fingerprint_is_content_keyed(
+        tmp_path):
+    spec = _spec()
+    root = str(tmp_path)
+    CampaignJob(spec, root=root, job_id="j")
+    # same content -> same fingerprint, even through a copy
+    assert spec_fingerprint(copy.deepcopy(spec)) == spec_fingerprint(spec)
+    # different content (one extra rate) -> refused in the same dir
+    other = _spec(rates=(0.1, 0.3, 0.5))
+    assert spec_fingerprint(other) != spec_fingerprint(spec)
+    with pytest.raises(ValueError, match="different campaign"):
+        CampaignJob(other, root=root, job_id="j")
+
+
+def test_warm_plan_cache_skips_all_plan_builds(tmp_path, monkeypatch):
+    """Re-running a spec against a warm shared plan cache must make ZERO
+    build_plans_batched calls — the campaign pre-screens every needed
+    plan against the cache before batching the misses."""
+    import repro.noc.campaign as campaign_mod
+
+    calls = []
+    real = campaign_mod.build_plans_batched
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(campaign_mod, "build_plans_batched", counting)
+    spec = CampaignSpec(topo=TOPO, algos=(Algo.BIDOR,),
+                        patterns=(("uni", UNI),), rates=(0.1,),
+                        seeds=(0,), base=BASE)
+    root = str(tmp_path)
+    res_cold, job_cold = run_campaign_service(spec, root=root,
+                                              job_id="cold")
+    assert calls, "cold run must build plans on device"
+    assert job_cold.plan_cache.stats.stores > 0
+
+    calls.clear()
+    res_warm, job_warm = run_campaign_service(spec, root=root,
+                                              job_id="warm")
+    assert calls == [], "warm run re-built plans despite the cache"
+    st = job_warm.plan_cache.stats.as_dict()
+    assert st["device_builds"] == 0
+    assert st["misses"] == 0
+    assert st["hits"] > 0
+    # cached plans route identically to freshly built ones
+    _assert_points_identical(res_cold.points, res_warm.points)
+
+
+def test_midcell_checkpoint_resumes_bit_identically(tmp_path):
+    """Interrupting a controlled run at an epoch boundary and resuming
+    from the snapshot must reproduce the uninterrupted run exactly —
+    every lane statistic, the link peaks, and the replan log."""
+    topo = mesh2d(3, 3)
+    tm = traffic.uniform(topo)
+    drift = traffic.tornado(topo)
+    cfg = SimConfig(algo=Algo.BIDOR, cycles=2000, warmup=400, drain=200)
+    scen = Scenario("dyn",
+                    events=(LinkFail(700, LINK01),
+                            TrafficDrift(1200, drift)),
+                    policy="oracle", replan=ReplanConfig(epoch=400))
+    plan = build_plan(topo, tm)
+    kw = dict(rates=[0.1, 0.3], seeds=[0], bidor_table=plan.table)
+
+    class Rec:
+        """In-memory checkpointer: records every snapshot, optionally
+        preloaded with one to resume from."""
+
+        def __init__(self, preload=None):
+            self.snaps = []
+            self.preload = preload
+
+        def save(self, arrays, meta):
+            self.snaps.append(
+                ({k: np.array(v) for k, v in arrays.items()},
+                 json.loads(json.dumps(meta))))
+
+        def load(self):
+            return self.preload
+
+    rec = Rec()
+    base = run_controlled(topo, tm, cfg, scen, checkpoint=rec, **kw)
+    assert len(rec.snaps) >= 3
+    assert base.replans, "oracle policy must have replanned"
+
+    plain = run_controlled(topo, tm, cfg, scen, **kw)
+
+    def check(r):
+        assert r.epoch_bounds == base.epoch_bounds
+        assert [dataclasses_tuple(x) for x in r.replans] \
+            == [dataclasses_tuple(x) for x in base.replans]
+        assert np.array_equal(r.link_peak, base.link_peak)
+        for a, b in zip(r.results, base.results):
+            for f in SCALAR_FIELDS:
+                assert getattr(a, f) == getattr(b, f), f
+            assert np.array_equal(a.node_load, b.node_load)
+
+    import dataclasses as _dc
+
+    def dataclasses_tuple(x):
+        return _dc.astuple(x)
+
+    check(plain)  # recording a snapshot must not perturb the run
+    # resume from a mid-run snapshot (after the fault replan) and from
+    # the last one — both land on the identical final state
+    for snap in (rec.snaps[1], rec.snaps[-1]):
+        r = run_controlled(topo, tm, cfg, scen, checkpoint=Rec(snap),
+                           **kw)
+        check(r)
+    # and through the on-disk npz round-trip the service actually uses
+    ck = CellCheckpoint(str(tmp_path / "snap.npz"))
+    ck.save(*rec.snaps[1])
+    r = run_controlled(topo, tm, cfg, scen, checkpoint=ck, **kw)
+    check(r)
+    ck.clear()
+    assert ck.load() is None
+
+
+def test_multi_axis_grid_matches_per_axis_recomputation():
+    """grid()/mean_over_seeds()/saturation_throughput() on a 2-topo ×
+    2-scenario campaign agree with manual recomputation from select()
+    on every (scenario, topo) pair."""
+    spec = CampaignSpec(
+        topo=None, topos=(TOPO, torus(3, 3)), algos=(Algo.XY,),
+        patterns=("uniform",), rates=(0.1, 0.3), seeds=(0, 1),
+        base=BASE,
+        scenarios=(Scenario("calm"),
+                   Scenario("fail", events=(LinkFail(600, LINK01),))))
+    res = run_campaign(spec)
+    assert len(res.points) == 2 * 2 * 2 * 2  # topo x scen x rate x seed
+    for tname in res.topo_names:
+        for sname in res.scenario_names:
+            g = res.grid("throughput", Algo.XY, "uniform",
+                         scenario=sname, topo=tname)
+            assert g.shape == (2, 2)
+            for i, rate in enumerate(spec.rates):
+                for j, seed in enumerate(spec.seeds):
+                    (p,) = res.select(algo=Algo.XY, pattern="uniform",
+                                      rate=rate, seed=seed,
+                                      scenario=sname, topo=tname)
+                    assert g[i, j] == p.result.throughput
+            m = res.mean_over_seeds("throughput", Algo.XY, "uniform",
+                                    scenario=sname, topo=tname)
+            assert np.array_equal(m, g.mean(axis=1))
+            sat = res.saturation_throughput(Algo.XY, "uniform",
+                                            scenario=sname, topo=tname)
+            assert sat == g.mean(axis=1).max()
+    # the two topologies genuinely differ (guards against the pooled
+    # last-write-wins bug resurfacing as identical grids)
+    g_mesh = res.grid("avg_latency", Algo.XY, "uniform",
+                      scenario="calm", topo=TOPO.name)
+    g_torus = res.grid("avg_latency", Algo.XY, "uniform",
+                       scenario="calm", topo=torus(3, 3).name)
+    assert not np.array_equal(g_mesh, g_torus)
