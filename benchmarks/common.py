@@ -16,7 +16,7 @@ SERVICE_ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
 
 
 def run_service_campaign(spec, *, name: str, bidor_tables=None,
-                         verbose: bool = True):
+                         verbose: bool = True, trace: bool = False):
     """Run a stage's campaign grid through the campaign service.
 
     The job directory is ``artifacts/campaigns/<name>-<spec hash>`` —
@@ -40,7 +40,7 @@ def run_service_campaign(spec, *, name: str, bidor_tables=None,
     res, job = run_campaign_service(
         spec, root=SERVICE_ROOT, job_id=job_id,
         bidor_tables=bidor_tables, resume=resume, max_cells=max_cells,
-        verbose=verbose)
+        verbose=verbose, trace=trace)
     if res is None:
         st = job.status()
         print(f"campaign job {job.job_id}: cell budget hit at "

@@ -17,10 +17,17 @@ beyond-paper ICI analyses.
   roofline  deliverable g — per-(arch × shape × mesh) roofline table
   nrank_scale  plan cost  — numpy vs device plan builds, 8×8 → 64×64
                (the quasi-static budget; "nrank" is kept as an alias)
+  obs_report  flight recorder — telemetry-probed linkfail campaign with
+              ctrl-plane tracing, rendered into ``artifacts/obs/``; the
+              online-vs-stale gap must be visible from the in-sim probes
+              alone, and telemetry overhead is measured (budgetable via
+              ``--obs-budget-ratio`` / OBS_BUDGET_RATIO)
 
 Set BENCH_QUICK=0 for full-length simulations.  Run as
 ``PYTHONPATH=src python -m benchmarks.run [names...]``; unknown stage
 names abort upfront (before anything runs) with the valid list.
+``--json [PATH]`` additionally writes machine-readable per-stage
+summaries (wall, ok, stage metrics) to PATH, or stdout with ``-``.
 ``--nrank-max-nodes`` / ``--nrank-budget-ms`` are the flag equivalents of
 the ``NRANK_SCALE_MAX_NODES`` / ``NRANK_BUDGET_MS`` env knobs (the flag
 wins when both are set).
@@ -391,6 +398,123 @@ def bench_nrank_scale():
                    "iters"], rows)
 
 
+def bench_obs_report():
+    """Flight recorder end-to-end: a telemetry-probed, ctrl-traced
+    linkfail campaign (stale vs online policies), rendered into
+    ``artifacts/obs/<job_id>/``.
+
+    Asserts, from the recorded artifacts alone (no SimResult access):
+
+    * the Chrome-trace file is Perfetto-parseable and schema-valid, and
+      records the drift→replan→hot-swap chain with wall timings;
+    * the in-sim probes reproduce the dynamics story: after the online
+      policy's replan, its time-resolved peak-link-load trajectory drops
+      below the stale policy's (which stays pinned at the saturated
+      degraded link);
+    * telemetry overhead: the probed run's per-cycle cost vs the same
+      cell with telemetry off — reported always, asserted under
+      ``OBS_BUDGET_RATIO`` (``--obs-budget-ratio``) when set.
+
+    Returns the stage's metrics dict (surfaced by ``--json``).
+    """
+    import json
+    import jax
+    from repro.core import mesh2d, traffic
+    from repro.noc import (Algo, CampaignSpec, LinkFail, ReplanConfig,
+                           Scenario, SimConfig)
+    from repro.noc import sim
+    from repro.obs.report import render_job
+    from repro.obs.trace import read_trace, validate_events
+    from .common import QUICK, run_service_campaign
+
+    cycles = 900 if QUICK else 4000
+    epoch = cycles // 6
+    topo = mesh2d(4, 4)
+    fail_cycle = 2 * epoch
+    fail = LinkFail(cycle=fail_cycle, links=((5, 6), (6, 5)))
+    base = SimConfig(cycles=cycles, warmup=epoch, drain=epoch,
+                     injection_rate=0.3, telemetry=True, tel_slots=18)
+    spec = CampaignSpec(
+        topo=topo, algos=(Algo.BIDOR,), patterns=("transpose",),
+        rates=(0.3,), seeds=(0,), base=base,
+        scenarios=(
+            Scenario("stale", events=(fail,), policy="stale",
+                     replan=ReplanConfig(epoch=epoch)),
+            Scenario("online", events=(fail,), policy="online",
+                     replan=ReplanConfig(epoch=epoch))))
+    res, job = run_service_campaign(spec, name="obs_report", trace=True)
+    if res is None:          # interrupted by the cell budget
+        return None
+
+    # ---- render the job's artifacts ---- #
+    obs_root = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "obs")
+    summary = render_job(job.dir, os.path.join(obs_root, job.job_id))
+
+    # ---- trace plane: Perfetto-parseable, replan chain recorded ---- #
+    events = read_trace(job.trace_path)
+    problems = validate_events(events)
+    assert not problems, f"trace schema problems: {problems[:5]}"
+    names = {e["name"] for e in events}
+    assert {"epoch", "LinkFail", "replan", "hot_swap"} <= names, (
+        f"ctrl-plane chain missing from trace: have {sorted(names)}")
+    replans = [e for e in events if e["name"] == "replan"]
+    assert all(e.get("dur", 0) > 0 for e in replans), (
+        "replan spans must carry wall durations")
+
+    # ---- probe plane: the online-vs-stale gap, from telemetry only --- #
+    tels = {k.scenario: job.cell_telemetry(k) for k in job.cells}
+    assert all(t is not None for t in tels.values()), "telemetry missing"
+    starts = tels["stale"].slot_starts()
+    # compare after the online replan has settled (one epoch past it)
+    post = [s for s in tels["stale"].active_slots()
+            if starts[s] >= fail_cycle + epoch]
+    assert post, "no telemetry slots after the replan window"
+    stale_mean = float(tels["stale"].peak_link_load()[0][post].mean())
+    online_mean = float(tels["online"].peak_link_load()[0][post].mean())
+    print(f"obs_report: post-replan peak link load (probes alone): "
+          f"stale {stale_mean:.3f} vs online {online_mean:.3f} over "
+          f"{len(post)} slots")
+    assert online_mean < stale_mean - 0.02, (
+        f"online replan gap not visible from probes: "
+        f"stale {stale_mean:.3f} vs online {online_mean:.3f}")
+
+    # ---- overhead: telemetry on vs off, same cell ---- #
+    tm = traffic.uniform(topo)
+    per_cycle = {}
+    for tel_on in (False, True):
+        cfg = SimConfig(algo=Algo.XY, cycles=300, warmup=100,
+                        telemetry=tel_on)
+        tables, meta = sim.build_tables(topo, tm, None, cfg.num_vcs)
+        runner = sim.get_runner(meta, cfg, 300)
+        out = runner(tables, sim.make_states(meta, cfg, [(0.3, 0)]))
+        jax.block_until_ready(out)                   # compile warm
+        best = float("inf")
+        for _ in range(3):
+            states = sim.make_states(meta, cfg, [(0.3, 0)])
+            t0 = time.perf_counter()
+            jax.block_until_ready(runner(tables, states))
+            best = min(best, time.perf_counter() - t0)
+        per_cycle[tel_on] = best / 300 * 1e3
+    ratio = per_cycle[True] / per_cycle[False]
+    print(f"obs_report: telemetry overhead {per_cycle[False]:.4f} -> "
+          f"{per_cycle[True]:.4f} ms/cycle ({ratio:.2f}x)")
+    budget = float(os.environ.get("OBS_BUDGET_RATIO", "0"))
+    if budget:
+        assert ratio <= budget, (
+            f"telemetry overhead {ratio:.2f}x over the {budget:.2f}x "
+            f"budget")
+
+    metrics = {"trace_events": len(events), "replans": len(replans),
+               "stale_peak_mean": round(stale_mean, 4),
+               "online_peak_mean": round(online_mean, 4),
+               "telemetry_overhead_ratio": round(ratio, 3),
+               "traj_rows": summary["traj_rows"],
+               "report": os.path.join(summary["out_dir"], "report.md")}
+    print("obs_report:", json.dumps(metrics, sort_keys=True))
+    return metrics
+
+
 def _stage_fig1():
     from . import fig1_load
     fig1_load.main()
@@ -445,6 +569,7 @@ STAGES = {
     "linkload": _stage_linkload,
     "roofline": _stage_roofline,
     "nrank_scale": bench_nrank_scale,
+    "obs_report": bench_obs_report,
 }
 ALIASES = {"nrank": "nrank_scale"}
 
@@ -479,6 +604,14 @@ def main(argv: list[str] | None = None) -> None:
                     help="execute at most N campaign cells per service "
                          "job then stop (controlled interruption; flag "
                          "form of CAMPAIGN_MAX_CELLS)")
+    ap.add_argument("--obs-budget-ratio", type=float, default=None,
+                    help="assert the telemetry-on per-cycle cost stays "
+                         "under this multiple of telemetry-off (flag "
+                         "form of OBS_BUDGET_RATIO)")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="write machine-readable per-stage summaries "
+                         "(JSON) to PATH; '-' or no value -> stdout")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
     if args.nrank_max_nodes is not None:
         os.environ["NRANK_SCALE_MAX_NODES"] = str(args.nrank_max_nodes)
@@ -492,6 +625,8 @@ def main(argv: list[str] | None = None) -> None:
         os.environ["CAMPAIGN_RESUME"] = "1"
     if args.max_cells is not None:
         os.environ["CAMPAIGN_MAX_CELLS"] = str(args.max_cells)
+    if args.obs_budget_ratio is not None:
+        os.environ["OBS_BUDGET_RATIO"] = str(args.obs_budget_ratio)
 
     want = [ALIASES.get(s, s) for s in args.stages] or list(STAGES)
     unknown = sorted(set(want) - set(STAGES))
@@ -504,12 +639,39 @@ def main(argv: list[str] | None = None) -> None:
             f"(aliases: {', '.join(f'{a}->{b}' for a, b in ALIASES.items())})")
 
     t_all = time.time()
-    for name in want:
-        print(f"\n================ {name} ================", flush=True)
-        t0 = time.time()
-        STAGES[name]()
-        print(f"[{name} done in {time.time() - t0:.1f}s]", flush=True)
-    print(f"\nall benchmarks done in {time.time() - t_all:.1f}s")
+    records: list[dict] = []
+    try:
+        for name in want:
+            print(f"\n================ {name} ================",
+                  flush=True)
+            t0 = time.time()
+            try:
+                ret = STAGES[name]()
+            except BaseException as e:
+                records.append({"stage": name, "ok": False,
+                                "wall_s": round(time.time() - t0, 2),
+                                "error": repr(e)})
+                raise
+            records.append({"stage": name, "ok": True,
+                            "wall_s": round(time.time() - t0, 2),
+                            "metrics": ret if isinstance(ret, dict)
+                            else None})
+            print(f"[{name} done in {time.time() - t0:.1f}s]",
+                  flush=True)
+        print(f"\nall benchmarks done in {time.time() - t_all:.1f}s")
+    finally:
+        if args.json is not None:
+            import json as json_mod
+            blob = json_mod.dumps(
+                {"stages": records,
+                 "total_wall_s": round(time.time() - t_all, 2),
+                 "ok": all(r["ok"] for r in records)},
+                indent=1, sort_keys=True)
+            if args.json == "-":
+                print(blob, flush=True)
+            else:
+                with open(args.json, "w") as f:
+                    f.write(blob + "\n")
 
 
 if __name__ == "__main__":

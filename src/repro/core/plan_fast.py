@@ -61,6 +61,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 from .bidor import TIE_TOL, BiDORTable
 from .nrank import ITER_TH, W_TH, NRankResult, initial_weights
 from .qstar import QStarPlan
@@ -451,7 +453,7 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
                     down_channels=None,
                     precision: str = "auto",
                     use_pallas: bool | None = None,
-                    cache=None) -> QStarPlan:
+                    cache=None, tracer=None) -> QStarPlan:
     """Device-resident Q-StaR pipeline — ``build_plan(mode="channel")``
     as one jitted call (possibility → joint → evolution → BiDOR, no host
     round-trips).
@@ -467,16 +469,25 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
     ``cache`` is an optional :class:`repro.core.plan_cache.PlanCache`:
     cold (``w0``-less) builds are served from / stored into it by content
     key, skipping the device computation entirely on a hit.
+
+    ``tracer`` (a :class:`repro.obs.trace.TraceWriter`) records the
+    build as a span — statics/compile+device wall split in its args —
+    and cache hits as instants.
     """
     global DEVICE_BUILDS
+    tracer = tracer if tracer is not None else NULL_TRACER
     key, hit = _cache_lookup(cache, topo, traffic, down_channels,
                              k_orders, w_th, iter_th, precision, w0)
     if hit is not None:
+        tracer.instant("plan_cache_hit", cat="plan",
+                       args={"nodes": topo.num_nodes})
         return hit
+    t_all = tracer.now_us()
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
     down, dist, live, down_pair = _fault_arrays(topo, statics,
                                                 down_channels)
+    t_dev = tracer.now_us()
     DEVICE_BUILDS += 1
     if cache is not None:
         cache.stats.device_builds += 1
@@ -490,6 +501,13 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
                            jnp.asarray(float(w_th)), jnp.int32(iter_th))
         out = jax.device_get(out)
     plan = _assemble_plan(topo, traffic, statics, out, bool(down.size))
+    t_end = tracer.now_us()
+    tracer.complete(
+        "build_plan_fast", t_all, t_end - t_all, cat="plan",
+        args={"nodes": topo.num_nodes, "warm": w0 is not None,
+              "faults": int(down.size),
+              "statics_ms": round((t_dev - t_all) / 1e3, 3),
+              "device_ms": round((t_end - t_dev) / 1e3, 3)})
     if key is not None:
         cache.put(key, plan, k_orders=k_orders)
     return plan
@@ -502,7 +520,7 @@ def build_plans_batched(topo: Topology, traffics, *,
                         down_channels=None,
                         precision: str = "auto",
                         use_pallas: bool | None = None,
-                        cache=None) -> list[QStarPlan]:
+                        cache=None, tracer=None) -> list[QStarPlan]:
     """Plans for many traffic matrices on one topology in a single vmapped
     device call — the campaign's (pattern, scenario) axis.  Each returned
     plan is identical to its ``build_plan_fast`` equivalent (vmapped
@@ -514,9 +532,11 @@ def build_plans_batched(topo: Topology, traffics, *,
 
     ``cache`` serves/stores cold lanes by content key (see
     :func:`build_plan_fast`); when every lane hits, no device computation
-    runs at all.
+    runs at all.  ``tracer`` records the batched build as a span and
+    per-lane cache hits/misses as instants.
     """
     global DEVICE_BUILDS
+    tracer = tracer if tracer is not None else NULL_TRACER
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
     down, dist, live, down_pair = _fault_arrays(topo, statics,
@@ -533,15 +553,20 @@ def build_plans_batched(topo: Topology, traffics, *,
                                      w0)
             if hit is not None:
                 cached[i] = hit
+                tracer.instant("plan_cache_hit", cat="plan",
+                               args={"lane": i, "nodes": topo.num_nodes})
             elif key is not None:
                 keys[i] = key
+                tracer.instant("plan_cache_miss", cat="plan",
+                               args={"lane": i, "nodes": topo.num_nodes})
         if len(cached) < len(tms):
             need = [i for i in range(len(tms)) if i not in cached]
             built = build_plans_batched(
                 topo, [tms[i] for i in need],
                 w0s=[w0s[i] for i in need], k_orders=k_orders,
                 w_th=w_th, iter_th=iter_th, down_channels=down_channels,
-                precision=precision, use_pallas=use_pallas)
+                precision=precision, use_pallas=use_pallas,
+                tracer=tracer)
             for i, plan in zip(need, built):
                 cached[i] = plan
                 if i in keys:
@@ -555,6 +580,7 @@ def build_plans_batched(topo: Topology, traffics, *,
     group = max(1, (1 << 26) // max(_v_block(n) * n * n, 1))
     plans = []
     DEVICE_BUILDS += 1
+    t_span = tracer.now_us()
     with _precision_scope(precision):
         for lo in range(0, len(tms), group):
             tms_g, w0s_g = tms[lo:lo + group], w0s[lo:lo + group]
@@ -572,6 +598,10 @@ def build_plans_batched(topo: Topology, traffics, *,
                 lane = {k: np.asarray(v)[i] for k, v in out.items()}
                 plans.append(_assemble_plan(topo, tm, statics, lane,
                                             have_down=bool(down.size)))
+    tracer.complete("build_plans_batched", t_span,
+                    tracer.now_us() - t_span, cat="plan",
+                    args={"nodes": topo.num_nodes, "lanes": len(tms),
+                          "faults": int(down.size)})
     return plans
 
 

@@ -47,6 +47,10 @@ def state_footprint_bytes(meta: dict, cfg: SimConfig) -> int:
              + n * p * v + n * p                # out_held, rr
              + 8 * nin + 10 * n + 5 * c         # per-input/node/chan vecs
              + o * n * n + 2 * n * n)           # port tables, choice, cdf
+    if cfg.telemetry:
+        # repro.obs.probe ring buffers ride the state pytree too
+        words += cfg.tel_slots * (c + 1 + 4 + cfg.tel_occ_bins
+                                  + cfg.lat_bins)
     return 4 * words
 
 

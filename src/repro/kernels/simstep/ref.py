@@ -49,6 +49,7 @@ from repro.noc.simconfig import (Algo, SimConfig, NF, F_SRC, F_DST,
                                  F_INTER, F_SEQ, F_TIME, F_HOPS, F_ORDER,
                                  F_HEAD, F_TAIL, F_PHASE, Q_DST, Q_INTER,
                                  Q_ORDER, Q_TIME, Q_SEQ)
+from repro.obs.probe import resolved_epoch
 
 # Python literal, not a jnp scalar: the Pallas path traces the cycle
 # body as a kernel, which must not capture concrete device arrays.
@@ -61,7 +62,11 @@ _WIDE_N = 256
 
 # State keys the cycle body transforms — everything in
 # ``repro.noc.sim.fresh_state`` except the PRNG key, which the step
-# wrapper (ops.make_step) advances outside the kernel.
+# wrapper (ops.make_step) advances outside the kernel.  With
+# ``SimConfig.telemetry`` the state additionally carries the
+# ``repro.obs.probe.TEL_KEYS`` ring buffers; the kernel wrapper is
+# generic over the state dict's keys, so they flow through both
+# backends unchanged.
 CORE_KEYS = (
     "flits", "fifo_start", "fifo_size", "lock_op", "lock_ov", "out_held",
     "rr", "qpkts", "q_start", "q_size", "prog", "next_seq", "exp_seq",
@@ -107,6 +112,7 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
     b, q, l = cfg.buf_per_vc, cfg.src_queue_pkts, cfg.packet_len
     pv = p * v
     two_phase = algo in (Algo.VALIANT, Algo.ROMM)
+    tel_epoch = resolved_epoch(cfg)  # 0 ⇔ telemetry off
     wide = n >= _WIDE_N
     # binary-search iteration count: the [0, n] interval at least halves
     # every guarded step, so bit_length(n) steps always converge
@@ -455,6 +461,27 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         state["reorder_max"] = jnp.maximum(
             state["reorder_max"],
             jnp.where(measuring, occ.max(), 0).astype(jnp.int32))
+
+        # ------------- 8. telemetry probes (optional) ------------------- #
+        # Identical op for op to the unfused oracle's block: reads
+        # existing cycle values, writes only the tel_* ring buffers,
+        # consumes no RNG — core statistics stay bit-identical with
+        # telemetry on or off, on both backends.
+        if tel_epoch:
+            slot = (cycle // tel_epoch) % cfg.tel_slots
+            state["tel_cycles"] = state["tel_cycles"].at[slot].add(1)
+            state["tel_chan"] = state["tel_chan"].at[slot].add(
+                net[t.chan_src_n, t.chan_src_p].astype(jnp.int32))
+            state["tel_counts"] = state["tel_counts"].at[slot].add(
+                jnp.stack([gen.sum(), push.sum(), (gen & ~space).sum(),
+                           tail_ej.sum()]).astype(jnp.int32))
+            nb = cfg.tel_occ_bins
+            obin = jnp.minimum(state["q_size"].sum() * nb // (n * q),
+                               nb - 1)
+            state["tel_qocc"] = state["tel_qocc"].at[slot, obin].add(1)
+            state["tel_lat"] = state["tel_lat"].at[
+                slot, jnp.where(tail_ej, hbin, cfg.lat_bins)].add(
+                1, mode="drop")
         return state
 
     return cycle_fn

@@ -40,8 +40,11 @@ import numpy as np
 from repro.core import traffic as traffic_mod
 from repro.core.plan_fast import build_plans_batched
 from repro.core.topology import Topology
+from repro.obs.log import EventLog
+from repro.obs.probe import Telemetry
+from repro.obs.trace import NULL_TRACER
 from .sim import (build_tables, get_runner, make_states, postprocess,
-                  queue_occupancy, source_queue_meta)
+                  queue_occupancy, source_queue_meta, static_bw_slots)
 from .simconfig import Algo, SimConfig, SimResult
 
 __all__ = ["CampaignSpec", "CampaignPoint", "CampaignResult",
@@ -402,6 +405,10 @@ class CellOutcome:
     key: CellKey
     results: list[SimResult]    # one per (rate, seed) lane, rate-major
     wall_s: float
+    # per-lane probe rings when cfg.telemetry is on (None otherwise);
+    # bw-normalized — static cells against the topology's bandwidths,
+    # scenario cells against the per-slot fault-tracking timeline
+    telemetry: "Telemetry | None" = None
 
 
 def _pattern_names(spec: CampaignSpec) -> list[str]:
@@ -458,11 +465,13 @@ class CampaignExecutor:
 
     def __init__(self, spec: CampaignSpec, *,
                  bidor_tables: dict[str, np.ndarray] | None = None,
-                 plan_cache=None, verbose: bool = False):
+                 plan_cache=None, verbose: bool = False, tracer=None):
         self.spec = spec
         self.bidor_tables = bidor_tables
         self.plan_cache = plan_cache
         self.verbose = verbose
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.log = EventLog(verbose=verbose)
         self.points = [(float(r), int(s))
                        for r in spec.rates for s in spec.seeds]
         self._prepped: dict[int, list[_ItemPrep]] = {}
@@ -479,7 +488,8 @@ class CampaignExecutor:
         cache = self.plan_cache
         if cache is None:
             built = build_plans_batched(topo, [items[i][1] for i in need],
-                                        down_channels=dc)
+                                        down_channels=dc,
+                                        tracer=self.tracer)
             return dict(zip(need, built))
         from repro.core.plan_fast import plan_cache_key
         miss: list[tuple[int, str]] = []
@@ -488,11 +498,16 @@ class CampaignExecutor:
             hit = cache.get(key, topo)
             if hit is not None:
                 plans[i] = hit
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "plan_cache_hit", cat="plan",
+                        args={"item": i, "topo": topo.name, "store": True})
             else:
                 miss.append((i, key))
         if miss:
             built = build_plans_batched(
-                topo, [items[i][1] for i, _ in miss], down_channels=dc)
+                topo, [items[i][1] for i, _ in miss], down_channels=dc,
+                tracer=self.tracer)
             for (i, key), plan in zip(miss, built):
                 plans[i] = plan
                 cache.put(key, plan)
@@ -562,7 +577,9 @@ class CampaignExecutor:
         cfg = spec.base.replace(algo=algo)
         scen = spec.scenarios[key.scen_i] if key.scen_i >= 0 else None
         t0 = time.perf_counter()
+        tc0 = self.tracer.now_us() if self.tracer.enabled else 0.0
         cell_tm = prep.bidor_tm if algo == Algo.BIDOR else prep.tm
+        telemetry = None
         if scen is None:
             tables, meta = build_tables(
                 topo, cell_tm,
@@ -574,6 +591,9 @@ class CampaignExecutor:
                 results.append(postprocess(
                     o, cfg, topo, rate=rate, seed=seed,
                     saturated=bool(sat[i])))
+            telemetry = Telemetry.from_state(host, cfg)
+            if telemetry is not None:
+                telemetry = telemetry.with_bw(static_bw_slots(topo, cfg))
         else:
             from .ctrl import run_controlled
             ctrl_res = run_controlled(
@@ -585,15 +605,26 @@ class CampaignExecutor:
                 sat_occupancy=spec.sat_occupancy,
                 multi_device=spec.multi_device,
                 checkpoint=checkpoint,
-                verbose=self.verbose)
+                verbose=self.verbose,
+                tracer=self.tracer)
             results = [ctrl_res.result_with_peak(i)
                        for i in range(len(self.points))]
+            telemetry = ctrl_res.telemetry
         dt = time.perf_counter() - t0
-        if self.verbose:
-            print(f"campaign cell {key.topo:16s} {key.pattern:12s} "
-                  f"{algo.name:8s} {key.scenario:12s} "
-                  f"{len(self.points)} pts in {dt:.2f}s", flush=True)
-        return CellOutcome(key=key, results=results, wall_s=dt)
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "cell", tc0, self.tracer.now_us() - tc0, cat="campaign",
+                args={"slug": key.slug, "topo": key.topo,
+                      "pattern": key.pattern, "algo": algo.name,
+                      "scenario": key.scenario,
+                      "lanes": len(self.points)})
+        self.log.event("cell_done",
+                       f"campaign cell {key.topo:16s} {key.pattern:12s} "
+                       f"{algo.name:8s} {key.scenario:12s} "
+                       f"{len(self.points)} pts in {dt:.2f}s",
+                       cell=key.slug, wall_s=round(dt, 3))
+        return CellOutcome(key=key, results=results, wall_s=dt,
+                           telemetry=telemetry)
 
     def cell_points(self, outcome: CellOutcome) -> list[CampaignPoint]:
         """The cell's CampaignPoints, in canonical lane order."""
@@ -607,7 +638,8 @@ class CampaignExecutor:
 def run_campaign(spec: CampaignSpec, *,
                  bidor_tables: dict[str, np.ndarray] | None = None,
                  plan_cache=None,
-                 verbose: bool = False) -> CampaignResult:
+                 verbose: bool = False,
+                 tracer=None) -> CampaignResult:
     """Execute the full campaign grid.
 
     BiDOR plans are built per pattern from that pattern's own matrix (the
@@ -630,7 +662,8 @@ def run_campaign(spec: CampaignSpec, *,
     """
     t_start = time.perf_counter()
     executor = CampaignExecutor(spec, bidor_tables=bidor_tables,
-                                plan_cache=plan_cache, verbose=verbose)
+                                plan_cache=plan_cache, verbose=verbose,
+                                tracer=tracer)
     out_points: list[CampaignPoint] = []
     wall: dict[tuple, float] = {}
     for key in campaign_cells(spec):

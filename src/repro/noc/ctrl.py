@@ -46,6 +46,9 @@ from repro.core.bidor import BiDORTable, bidor, greedy_refine
 from repro.core.nrank import NRankResult, initial_weights, nrank_channel
 from repro.core.plan_fast import build_plan_fast
 from repro.core.topology import Topology
+from repro.obs.log import EventLog
+from repro.obs.probe import Telemetry, resolved_epoch
+from repro.obs.trace import NULL_TRACER
 from .sim import (build_tables, get_runner, make_states,
                   maybe_shard_states, postprocess, queue_occupancy,
                   retarget_tables, source_queue_meta)
@@ -224,7 +227,7 @@ class Replan:
 def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
            prev: "object | None" = None, *,
            warm: bool = True, greedy_sweeps: int = 2,
-           use_fast: bool = True,
+           use_fast: bool = True, tracer=None,
            ) -> tuple[BiDORTable, "object"]:
     """One quasi-static re-planning step against a degraded fabric.
 
@@ -255,7 +258,8 @@ def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
         w0 = initial_weights(traffic) + np.asarray(prev.w_final, np.float64)
     if use_fast:
         plan = build_plan_fast(plan_topo, traffic, w0=w0,
-                               down_channels=down if down.size else None)
+                               down_channels=down if down.size else None,
+                               tracer=tracer)
         table, nr = plan.table, plan.nrank
     else:
         # N-Rank sees the degraded connectivity (hard-failed channels
@@ -288,6 +292,9 @@ class ControlledResult:
     # metric; a saturated degraded link pins it at ≈ 1)
     link_peak: np.ndarray
     epoch_bounds: list           # [(t0, t1), ...] control epochs
+    # in-sim probe rings (cfg.telemetry on), bw-normalized against the
+    # bandwidth in effect per telemetry slot (faults tracked)
+    telemetry: "Telemetry | None" = None
 
     def result_with_peak(self, i: int) -> SimResult:
         """Lane i's SimResult with the time-resolved link peak in
@@ -323,12 +330,36 @@ def _apply_events(events, bw, topo, base_bw):
     return bw, traffic, rate_scale, kinds
 
 
+def _bw_slots(bw_hist, epoch: int, slots: int, total: int) -> np.ndarray:
+    """Per-slot channel bandwidth for telemetry load normalization.
+
+    ``bw_hist`` is [(cycle, bw), ...] — the bandwidth vector in effect
+    from each cycle on (faults and recoveries append entries).  A slot is
+    normalized by the bw in effect at the END of its last accumulation
+    window; when the ring wraps, the later window wins, consistent with
+    its counts dominating the accumulated slot.
+    """
+    out = np.zeros((slots, bw_hist[0][1].shape[0]))
+    for j in range(slots):
+        last = min(j * epoch + epoch, total) - 1   # slot's last cycle
+        t = j * epoch + epoch * slots
+        while t < total:                            # ring wraps
+            last = min(t + epoch, total) - 1
+            t += epoch * slots
+        bw = bw_hist[0][1]
+        for cyc, b in bw_hist:
+            if cyc <= last:
+                bw = b
+        out[j] = bw
+    return out
+
+
 _NR_FIELDS = ("w_nr", "w0", "w_final", "p", "p_drn", "w_possibility")
 
 
 def _ctrl_snapshot(batched, *, bound_i, sat, link_peak, bw, cur_traffic,
                    cur_gen, cur_unroutable, fault_pending, estimator,
-                   detector, replans, table, nr_prev):
+                   detector, replans, table, nr_prev, bw_hist=None):
     """Serializable (arrays, meta) state of a controlled run at the TOP
     of boundary iteration ``bound_i``: everything up to
     ``bounds[bound_i - 1]`` (events, replans, counters) applied, the next
@@ -345,11 +376,14 @@ def _ctrl_snapshot(batched, *, bound_i, sat, link_peak, bw, cur_traffic,
         arrays["det_ref"] = detector._ref
     if table is not None:
         arrays["tab_choice"] = np.asarray(table.choice, np.int8)
+    if bw_hist:
+        arrays["bwh"] = np.stack([b for _, b in bw_hist])
     if nr_prev is not None:
         for f in _NR_FIELDS:
             arrays[f"nr_{f}"] = np.asarray(getattr(nr_prev, f),
                                            np.float64)
     meta = dict(bound_i=int(bound_i),
+                bwh_cycles=[int(c) for c, _ in (bw_hist or [])],
                 fault_pending=bool(fault_pending),
                 last_distance=float(detector.last_distance),
                 has_nr=nr_prev is not None,
@@ -368,7 +402,8 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                    sat_occupancy: float | None = None,
                    multi_device: bool | None = None,
                    checkpoint=None,
-                   verbose: bool = False) -> ControlledResult:
+                   verbose: bool = False,
+                   tracer=None) -> ControlledResult:
     """Run a simulation under an event schedule with a control policy.
 
     Lanes are the (rate, seed) grid, batched exactly as
@@ -396,7 +431,15 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     run replays the identical chunk lengths (same cached compilations)
     and its results are bit-identical to the uninterrupted run
     (``tests/test_service.py``).
+
+    ``tracer`` — optional :class:`repro.obs.trace.TraceWriter`; when
+    present the loop emits ctrl-plane events (epoch spans, drift scores,
+    detection firings, environment events, replan spans, table
+    hot-swaps).  Epoch spans block on device completion to time real
+    work, so tracing perturbs wall time but never results.
     """
+    tracer = tracer if tracer is not None else NULL_TRACER
+    log = EventLog(verbose=verbose)
     scenario = scenario or Scenario("static")
     rc = scenario.replan or ReplanConfig()
     policy = scenario.policy
@@ -419,6 +462,7 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     # environment state
     base_bw = np.asarray(topo.channel_bw, np.float64)
     bw = base_bw.copy()
+    bw_hist = [(0, bw.copy())]   # (cycle, bw) — telemetry normalization
     cur_traffic = np.asarray(traffic, np.float64)
     cur_gen = cur_traffic    # what the sim currently *generates* from
     fault_pending = False
@@ -456,6 +500,12 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
         sat = np.asarray(arrays["sat"], bool).copy()
         link_peak = np.asarray(arrays["link_peak"], np.float64).copy()
         bw = np.asarray(arrays["bw"], np.float64)
+        if "bwh" in arrays and cmeta.get("bwh_cycles"):
+            bwh = np.asarray(arrays["bwh"], np.float64)
+            bw_hist = [(int(c), bwh[k].copy())
+                       for k, c in enumerate(cmeta["bwh_cycles"])]
+        else:   # pre-telemetry snapshot: current bw stands in for history
+            bw_hist = [(0, bw.copy())]
         cur_traffic = np.asarray(arrays["cur_traffic"], np.float64)
         cur_gen = np.asarray(arrays["cur_gen"], np.float64)
         cur_unroutable = (np.asarray(arrays["cur_unroutable"], bool)
@@ -504,10 +554,18 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
                 cur_unroutable=cur_unroutable,
                 fault_pending=fault_pending, estimator=estimator,
                 detector=detector, replans=replans, table=table,
-                nr_prev=nr_prev))
+                nr_prev=nr_prev, bw_hist=bw_hist))
         runner = get_runner(meta, cfg, t1 - t0, num_lanes=nlanes,
                             multi_device=multi_device)
+        te0 = tracer.now_us() if tracer.enabled else 0.0
         batched = runner(tables, batched)
+        if tracer.enabled:
+            # block so the span times the device work, not the dispatch
+            jax.block_until_ready(batched)
+            tracer.complete(
+                "epoch", te0, tracer.now_us() - te0, cat="sim",
+                args={"t0": t0, "t1": t1, "scenario": scenario.name,
+                      "policy": policy})
         epoch_bounds.append((t0, t1))
         t0 = t1
 
@@ -535,6 +593,13 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
 
         estimator.update(d_seq.sum(axis=0))
         drifted = detector.update(d_seen.sum(axis=0))
+        if tracer.enabled:
+            tracer.counter("drift_tv", {"tv": detector.last_distance},
+                           cat="ctrl")
+            if drifted:
+                tracer.instant(
+                    "drift_detected", cat="ctrl",
+                    args={"cycle": t1, "tv": detector.last_distance})
 
         if t1 >= total:
             break
@@ -545,6 +610,14 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
         if due:
             bw, new_traffic, rate_scale, event_kinds = _apply_events(
                 due, bw, topo, base_bw)
+            if tracer.enabled:
+                for ev in due:
+                    a = {"cycle": t1}
+                    if isinstance(ev, LinkFail):
+                        a["bw_scale"] = ev.bw_scale
+                    tracer.instant(type(ev).__name__, cat="env", args=a)
+            if "fault" in event_kinds:
+                bw_hist.append((t1, bw.copy()))
             gen_traffic = new_traffic
             if new_traffic is not None and cur_unroutable is not None:
                 # an active shed outlives a traffic epoch: the dead link
@@ -588,9 +661,10 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
         if not do:
             continue
         drift_dist = detector.last_distance
+        tr0 = tracer.now_us() if tracer.enabled else 0.0
         table, nr_prev = replan(
             topo, m, bw, nr_prev,
-            warm=rc.warm, greedy_sweeps=rc.greedy_sweeps)
+            warm=rc.warm, greedy_sweeps=rc.greedy_sweeps, tracer=tracer)
         # admission control: shed unroutable pairs from generation; when
         # the new plan can serve everything (e.g. after LinkRecover),
         # restore the full current matrix — a previous shed must not
@@ -611,9 +685,19 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
             unroutable_pairs=int(table.unroutable.sum())
             if table.unroutable is not None else 0,
             drift_distance=drift_dist))
-        if verbose:
-            print(f"ctrl[{scenario.name}/{policy}] replan @ {t1} "
-                  f"({trigger}), {nr_prev.iterations} iters", flush=True)
+        if tracer.enabled:
+            tracer.complete(
+                "replan", tr0, tracer.now_us() - tr0, cat="ctrl",
+                args={"cycle": t1, "trigger": trigger,
+                      "warm": rc.warm and nr_prev is not None,
+                      "iterations": int(nr_prev.iterations),
+                      "unroutable": replans[-1].unroutable_pairs,
+                      "drift_tv": drift_dist})
+            tracer.instant("hot_swap", cat="ctrl", args={"cycle": t1})
+        log.event("replan",
+                  f"ctrl[{scenario.name}/{policy}] replan @ {t1} "
+                  f"({trigger}), {nr_prev.iterations} iters",
+                  cycle=t1, trigger=trigger)
 
     results = []
     host = jax.device_get(batched)
@@ -621,7 +705,11 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
         o = jax.tree.map(lambda x: x[i], host)
         results.append(postprocess(o, cfg, topo, rate=rate, seed=seed,
                                    saturated=bool(sat[i])))
+    telemetry = Telemetry.from_state(host, cfg)
+    if telemetry is not None:
+        telemetry = telemetry.with_bw(_bw_slots(
+            bw_hist, resolved_epoch(cfg), cfg.tel_slots, total))
     return ControlledResult(
         scenario=scenario.name, policy=policy, points=points,
         results=results, replans=replans, link_peak=link_peak,
-        epoch_bounds=epoch_bounds)
+        epoch_bounds=epoch_bounds, telemetry=telemetry)

@@ -53,6 +53,8 @@ import time
 import numpy as np
 
 from repro.core.plan_cache import PlanCache, topology_fingerprint
+from repro.obs.probe import Telemetry
+from repro.obs.trace import NULL_TRACER, TraceWriter
 from .campaign import (CampaignExecutor, CampaignPoint, CampaignResult,
                        CampaignSpec, CellKey, CellOutcome, campaign_cells,
                        csv_rows)
@@ -86,14 +88,23 @@ def _event_desc(ev) -> dict:
     return d
 
 
+# SimConfig fields that never change results — observability probes are
+# bit-identity-neutral (tests/test_obs.py), so toggling telemetry on a
+# spec must resume the SAME job, exactly like multi_device below.
+_OBS_FIELDS = frozenset({"telemetry", "tel_epoch", "tel_slots",
+                         "tel_occ_bins"})
+
+
 def spec_fingerprint(spec: CampaignSpec) -> str:
     """Content hash of everything that determines a campaign's results.
 
     Topologies hash by full content (:func:`topology_fingerprint`),
     explicit traffic matrices by bytes, scenarios by their event
     schedules (drift matrices hashed) and replan knobs.  ``multi_device``
-    is deliberately EXCLUDED: lane sharding is bit-identical by
-    construction, so a job may resume on a different device count.
+    and the telemetry knobs (``_OBS_FIELDS``) are deliberately EXCLUDED:
+    lane sharding and probe collection are bit-identical by construction,
+    so a job may resume on a different device count or with telemetry
+    newly enabled.
     """
     import hashlib
     desc = {
@@ -107,6 +118,7 @@ def spec_fingerprint(spec: CampaignSpec) -> str:
         "base": {f.name: (int(v) if isinstance(v, (bool, int, Algo))
                           else float(v))
                  for f in dataclasses.fields(SimConfig)
+                 if f.name not in _OBS_FIELDS
                  for v in [getattr(spec.base, f.name)]},
         "chunk": int(spec.chunk),
         "sat_occupancy": float(spec.sat_occupancy),
@@ -230,6 +242,11 @@ class JobStatus:
     done_cells: int
     running: bool
     complete: bool
+    # live-progress fields (readable while the background thread runs)
+    in_flight: str | None = None     # slug of the executing cell
+    error: str | None = None         # repr of a failed run's exception
+    eta_s: float | None = None       # remaining-cell estimate from
+    #                                  this process's mean cell wall
 
 
 class CampaignJob:
@@ -258,7 +275,8 @@ class CampaignJob:
                  bidor_tables: dict[str, np.ndarray] | None = None,
                  plan_cache="shared",
                  resume: bool = True,
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 trace: bool = False):
         self.spec = spec
         self.fingerprint = spec_fingerprint(spec)
         self.job_id = job_id or f"job-{self.fingerprint[:12]}"
@@ -266,6 +284,8 @@ class CampaignJob:
         self.cells_dir = os.path.join(self.dir, "cells")
         self.ckpt_dir = os.path.join(self.dir, "ckpt")
         self.csv_path = os.path.join(self.dir, "results.csv")
+        self.metrics_path = os.path.join(self.dir, "metrics.jsonl")
+        self.trace_path = os.path.join(self.dir, "trace.jsonl")
         self.verbose = verbose
         if plan_cache == "shared":
             plan_cache = PlanCache(os.path.join(root, "plan-cache"))
@@ -273,12 +293,22 @@ class CampaignJob:
             plan_cache = PlanCache(plan_cache)
         self.plan_cache = plan_cache
         self.cells = campaign_cells(spec)
-        self.executor = CampaignExecutor(
-            spec, bidor_tables=bidor_tables, plan_cache=plan_cache,
-            verbose=verbose)
+        # progress shared with status(): guarded so a concurrent reader
+        # never sees a torn (done, in_flight, walls) triple
+        self._lock = threading.Lock()
+        self._in_flight: str | None = None
+        self._done: int | None = None    # None ⇔ no run() in this process
+        self._walls: list[float] = []    # executed-cell walls (ETA basis)
         os.makedirs(self.cells_dir, exist_ok=True)
         os.makedirs(self.ckpt_dir, exist_ok=True)
         self._init_manifest(resume)
+        # after _init_manifest: a resume=False wipe must not unlink the
+        # trace file out from under an already-open writer
+        self.tracer = (TraceWriter(self.trace_path) if trace
+                       else NULL_TRACER)
+        self.executor = CampaignExecutor(
+            spec, bidor_tables=bidor_tables, plan_cache=plan_cache,
+            verbose=verbose, tracer=self.tracer)
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
@@ -296,12 +326,14 @@ class CampaignJob:
                     f"{self.fingerprint[:12]}...); pick another job_id")
             if not resume:
                 for k in self.cells:
-                    p = self._cell_path(k)
+                    for p in (self._cell_path(k), self._tel_path(k)):
+                        if os.path.exists(p):
+                            os.unlink(p)
+                    CellCheckpoint(self._ckpt_path(k)).clear()
+                for p in (self.csv_path, self.metrics_path,
+                          self.trace_path):
                     if os.path.exists(p):
                         os.unlink(p)
-                    CellCheckpoint(self._ckpt_path(k)).clear()
-                if os.path.exists(self.csv_path):
-                    os.unlink(self.csv_path)
             return
         manifest = {
             "job_id": self.job_id,
@@ -321,8 +353,17 @@ class CampaignJob:
     def _cell_path(self, key: CellKey) -> str:
         return os.path.join(self.cells_dir, f"{key.slug}.npz")
 
+    def _tel_path(self, key: CellKey) -> str:
+        return os.path.join(self.cells_dir, f"{key.slug}.telemetry.npz")
+
     def _ckpt_path(self, key: CellKey) -> str:
         return os.path.join(self.ckpt_dir, f"{key.slug}.npz")
+
+    def cell_telemetry(self, key: CellKey) -> "Telemetry | None":
+        """A completed cell's saved probe rings (None when the cell ran
+        with telemetry off or has not completed)."""
+        path = self._tel_path(key)
+        return Telemetry.load(path) if os.path.exists(path) else None
 
     # ------------------------------------------------------------- #
     def completed_cells(self) -> list[CellKey]:
@@ -330,12 +371,31 @@ class CampaignJob:
                 if os.path.exists(self._cell_path(k))]
 
     def status(self) -> JobStatus:
-        done = len(self.completed_cells())
+        """Live job progress; safe to call concurrently with ``start()``.
+
+        While a run is active in this process the counters come from the
+        run loop's lock-guarded progress state — not a directory rescan,
+        which could tear against a half-written cell and is stale for the
+        in-flight cell anyway.  With no run in this process it falls back
+        to counting cell checkpoints on disk.
+        """
+        with self._lock:
+            done, in_flight = self._done, self._in_flight
+            walls = list(self._walls)
+            err = self._error
+        if done is None:                  # no run() in this process yet
+            done = len(self.completed_cells())
+        eta = None
+        if walls and done < len(self.cells):
+            eta = (len(self.cells) - done) * (sum(walls) / len(walls))
         return JobStatus(
             job_id=self.job_id, total_cells=len(self.cells),
             done_cells=done,
             running=self._thread is not None and self._thread.is_alive(),
-            complete=done == len(self.cells))
+            complete=done == len(self.cells),
+            in_flight=in_flight,
+            error=repr(err) if err is not None else None,
+            eta_s=eta)
 
     # ------------------------------------------------------------- #
     def _append_csv(self, f, outcome: CellOutcome) -> None:
@@ -343,33 +403,88 @@ class CampaignJob:
             f.write(",".join(str(v) for v in row) + "\n")
         f.flush()
 
+    def _emit_metric(self, f, record: dict) -> None:
+        record = dict(record, t_unix=round(time.time(), 3))
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+        f.flush()
+
+    def _cell_metric(self, key: CellKey, *, done: int, cached: bool,
+                     wall_s: float) -> dict:
+        rec = {"event": "cell", "cell": key.slug, "index": key.index,
+               "cached": cached, "done": done, "total": len(self.cells),
+               "wall_s": round(wall_s, 4)}
+        if not cached and wall_s > 0:
+            rec["lanes_per_s"] = round(
+                len(self.executor.points) / wall_s, 3)
+        with self._lock:
+            walls = list(self._walls)
+        if walls and done < len(self.cells):
+            rec["eta_s"] = round(
+                (len(self.cells) - done) * sum(walls) / len(walls), 2)
+        if self.plan_cache is not None:
+            rec["plan_cache"] = self.plan_cache.stats.as_dict()
+        return rec
+
     def run(self, max_cells: int | None = None) -> bool:
         """Execute remaining cells in order; True when the job is done.
 
-        Completed cells are loaded, not re-run; the streaming CSV is
-        rewritten from their stored results (byte-identical — the cell
-        npz files are the source of truth) and then appended per fresh
-        cell.  ``max_cells`` budgets the number of *executed* cells
-        before returning — the controlled-interruption knob used by the
-        resume tests and CI.
+        Completed cells are loaded, not re-run; the streaming CSV and
+        ``metrics.jsonl`` are rewritten from their stored results
+        (byte-identical CSV — the cell npz files are the source of
+        truth) and then appended per fresh cell.  ``max_cells`` budgets
+        the number of *executed* cells before returning — the
+        controlled-interruption knob used by the resume tests and CI.
         """
         executed = 0
-        with open(self.csv_path, "w") as f:
+        with self._lock:
+            self._done, self._in_flight, self._walls = 0, None, []
+        with open(self.csv_path, "w") as f, \
+                open(self.metrics_path, "w") as mf:
+            self._emit_metric(mf, {
+                "event": "job_start", "job_id": self.job_id,
+                "total": len(self.cells),
+                "lanes_per_cell": len(self.executor.points)})
             f.write(",".join(CampaignResult.CSV_HEADER) + "\n")
             for key in self.cells:
                 path = self._cell_path(key)
                 if os.path.exists(path):
                     self._append_csv(f, _load_outcome(path, key))
+                    with self._lock:
+                        self._done += 1
+                        done = self._done
+                    self._emit_metric(mf, self._cell_metric(
+                        key, done=done, cached=True, wall_s=0.0))
                     continue
                 if max_cells is not None and executed >= max_cells:
+                    with self._lock:
+                        done = self._done
+                    self._emit_metric(mf, {
+                        "event": "job_pause", "done": done,
+                        "total": len(self.cells), "executed": executed})
                     return False
+                with self._lock:
+                    self._in_flight = key.slug
                 ckpt = CellCheckpoint(self._ckpt_path(key))
                 outcome = self.executor.run_cell(
                     key, checkpoint=ckpt if key.scen_i >= 0 else None)
                 _save_outcome(path, outcome)
+                if outcome.telemetry is not None:
+                    outcome.telemetry.save(self._tel_path(key))
                 ckpt.clear()
                 executed += 1
+                with self._lock:
+                    self._in_flight = None
+                    self._done += 1
+                    self._walls.append(outcome.wall_s)
+                    done = self._done
+                self._emit_metric(mf, self._cell_metric(
+                    key, done=done, cached=False,
+                    wall_s=outcome.wall_s))
                 self._append_csv(f, outcome)
+            self._emit_metric(mf, {
+                "event": "job_done", "done": len(self.cells),
+                "total": len(self.cells), "executed": executed})
+        self.tracer.flush()
         return True
 
     # ------------------------------------------------------------- #
@@ -377,13 +492,15 @@ class CampaignJob:
         """Run the job on a daemon thread (async dispatch)."""
         if self._thread is not None and self._thread.is_alive():
             raise RuntimeError(f"job {self.job_id} is already running")
-        self._error = None
+        with self._lock:
+            self._error = None
 
         def _target():
             try:
                 self.run(max_cells)
-            except BaseException as e:   # surfaced by wait()
-                self._error = e
+            except BaseException as e:   # surfaced by wait()/status()
+                with self._lock:
+                    self._error = e
 
         self._thread = threading.Thread(
             target=_target, name=f"campaign-{self.job_id}", daemon=True)
@@ -427,7 +544,8 @@ def run_campaign_service(spec: CampaignSpec, *, root: str = DEFAULT_ROOT,
                          bidor_tables=None, plan_cache="shared",
                          resume: bool = True,
                          max_cells: int | None = None,
-                         verbose: bool = False):
+                         verbose: bool = False,
+                         trace: bool = False):
     """Run (or resume) a campaign job to completion and return its
     :class:`CampaignResult`; with ``max_cells`` set the job may stop
     early, returning ``(None, job)`` — callers re-invoke to continue.
@@ -436,6 +554,6 @@ def run_campaign_service(spec: CampaignSpec, *, root: str = DEFAULT_ROOT,
     """
     job = CampaignJob(spec, root=root, job_id=job_id,
                       bidor_tables=bidor_tables, plan_cache=plan_cache,
-                      resume=resume, verbose=verbose)
+                      resume=resume, verbose=verbose, trace=trace)
     complete = job.run(max_cells)
     return (job.result() if complete else None), job

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.bidor import BiDORTable, dor_table
 from repro.core.topology import Topology
+from repro.obs.probe import Telemetry, resolved_epoch, telemetry_state
 # Packed record layouts live in simconfig so the fused kernel package
 # (repro.kernels.simstep) can share them without importing this module.
 from .simconfig import (Algo, SimConfig, SimResult, NF, F_SRC, F_DST,
@@ -214,7 +215,11 @@ def fresh_state(meta: dict, cfg: SimConfig):
     b, q = cfg.buf_per_vc, cfg.src_queue_pkts
     i32 = jnp.int32
     z = functools.partial(jnp.zeros, dtype=i32)
+    # optional time-resolved probes (repro.obs.probe); {} when off, so a
+    # telemetry-free state pytree is unchanged key for key
+    tel = telemetry_state(meta, cfg)
     return dict(
+        **tel,
         # per-input-VC FIFOs: packed flit records (see NF layout above)
         flits=z((nin, b, NF)),
         fifo_start=z((nin,)), fifo_size=z((nin,)),
@@ -273,6 +278,7 @@ def _make_step(meta: dict, cfg: SimConfig):
     n_arange = jnp.arange(n)
     nin_arange = jnp.arange(nin)
     two_phase = algo in (Algo.VALIANT, Algo.ROMM)
+    tel_epoch = resolved_epoch(cfg)  # 0 ⇔ telemetry off
 
     def fifo_push(state, idx, ok, records):
         """Append packed flit ``records`` (K, NF) to FIFOs ``idx`` where
@@ -603,6 +609,29 @@ def _make_step(meta: dict, cfg: SimConfig):
         state["reorder_max"] = jnp.maximum(
             state["reorder_max"],
             jnp.where(measuring, occ.max(), 0).astype(jnp.int32))
+
+        # ------------- 8. telemetry probes (optional) ------------------- #
+        # Time-resolved ring buffers (repro.obs.probe): reads existing
+        # cycle values, writes only tel_* arrays, consumes no RNG — so
+        # every core statistic is bit-identical with telemetry on or off,
+        # and absent entirely when off.  Slot index wraps (accumulating);
+        # tel_cycles normalizes.  Mirrored op for op in the fused body
+        # (repro.kernels.simstep.ref).
+        if tel_epoch:
+            slot = (cycle // tel_epoch) % cfg.tel_slots
+            state["tel_cycles"] = state["tel_cycles"].at[slot].add(1)
+            state["tel_chan"] = state["tel_chan"].at[slot].add(
+                net[t.chan_src_n, t.chan_src_p].astype(jnp.int32))
+            state["tel_counts"] = state["tel_counts"].at[slot].add(
+                jnp.stack([gen.sum(), push.sum(), (gen & ~space).sum(),
+                           tail_ej.sum()]).astype(jnp.int32))
+            nb = cfg.tel_occ_bins
+            obin = jnp.minimum(state["q_size"].sum() * nb // (n * q),
+                               nb - 1)
+            state["tel_qocc"] = state["tel_qocc"].at[slot, obin].add(1)
+            state["tel_lat"] = state["tel_lat"].at[
+                slot, jnp.where(tail_ej, hbin, cfg.lat_bins)].add(
+                1, mode="drop")
         return state, None
 
     return step
@@ -666,7 +695,9 @@ def _cfg_key(cfg: SimConfig) -> tuple:
         packet_len=cfg.packet_len, src_queue_pkts=cfg.src_queue_pkts,
         cycles=cfg.cycles, warmup=cfg.warmup, drain=cfg.drain,
         lat_bins=cfg.lat_bins, lat_bin_width=cfg.lat_bin_width,
-        use_kernel=bool(cfg.use_kernel)).items()))
+        use_kernel=bool(cfg.use_kernel), telemetry=bool(cfg.telemetry),
+        tel_epoch=cfg.tel_epoch, tel_slots=cfg.tel_slots,
+        tel_occ_bins=cfg.tel_occ_bins).items()))
 
 
 def get_runner(meta: dict, cfg: SimConfig, num_cycles: int, *,
@@ -797,14 +828,27 @@ def maybe_shard_states(batched):
     return jax.tree.map(lambda x: jax.device_put(x, spec), batched)
 
 
+def static_bw_slots(topo: Topology, cfg: SimConfig) -> np.ndarray:
+    """(tel_slots, C) per-slot bandwidth for a run with no fault events:
+    every slot sees the topology's static channel bandwidths."""
+    return np.broadcast_to(
+        np.asarray(topo.channel_bw, np.float64),
+        (int(cfg.tel_slots), topo.num_channels)).copy()
+
+
 def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
               rates: list[float],
               bidor_table: BiDORTable | None = None,
-              seeds: list[int] | None = None) -> list[SimResult]:
+              seeds: list[int] | None = None, *,
+              return_telemetry: bool = False):
     """Run a batch of simulations over (rate, seed) points in ONE jitted,
     vmapped call.  Results are ordered rate-major: ``[(r, s) for r in
     rates for s in seeds]``; with ``seeds=None`` (default ``[cfg.seed]``)
-    this is the legacy one-result-per-rate list."""
+    this is the legacy one-result-per-rate list.
+
+    ``return_telemetry=True`` returns ``(results, telemetry)`` instead —
+    the lane-major :class:`repro.obs.probe.Telemetry` bundle (None when
+    ``cfg.telemetry`` is off)."""
     table = None
     if cfg.algo == Algo.BIDOR:
         if bidor_table is None:
@@ -815,16 +859,28 @@ def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     points = [(r, s) for r in rates for s in (seeds or [cfg.seed])]
     batched = make_states(meta, cfg, points)
     out = jax.device_get(runner(tables, batched))
-    return [postprocess(jax.tree.map(lambda x: x[i], out), cfg, topo,
-                        rate=r, seed=s)
-            for i, (r, s) in enumerate(points)]
+    results = [postprocess(jax.tree.map(lambda x: x[i], out), cfg, topo,
+                           rate=r, seed=s)
+               for i, (r, s) in enumerate(points)]
+    if not return_telemetry:
+        return results
+    tel = Telemetry.from_state(out, cfg)
+    if tel is not None:
+        tel = tel.with_bw(static_bw_slots(topo, cfg))
+    return results, tel
 
 
 def run_sim(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
-            bidor_table: BiDORTable | None = None) -> SimResult:
-    """Run one simulation and post-process statistics."""
-    return run_sweep(topo, traffic, cfg, [cfg.injection_rate],
-                     bidor_table)[0]
+            bidor_table: BiDORTable | None = None, *,
+            return_telemetry: bool = False):
+    """Run one simulation and post-process statistics.  With
+    ``return_telemetry=True``, returns ``(SimResult, Telemetry | None)``."""
+    out = run_sweep(topo, traffic, cfg, [cfg.injection_rate],
+                    bidor_table, return_telemetry=return_telemetry)
+    if return_telemetry:
+        results, tel = out
+        return results[0], tel
+    return out[0]
 
 
 def run_trace_sweep(topo: Topology,

@@ -65,6 +65,20 @@ class SimConfig:
     # the differential-testing oracle (tests/test_simstep_kernel.py) and
     # the simstep_scale benchmark baseline.  Both are bit-identical.
     use_kernel: bool = True
+    # In-sim telemetry probes (repro.obs.probe): when on, the per-cycle
+    # transition additionally accumulates fixed-size ring buffers of
+    # time-resolved statistics (per-channel load, offered/accepted/shed/
+    # delivered, queue-occupancy and latency histograms) over tel_slots
+    # recording slots of tel_epoch cycles each (0 = auto:
+    # ceil(cycles / tel_slots)).  Off by default; when off, zero extra
+    # state and zero extra ops — results are bit-identical with or
+    # without this feature (tests/test_obs.py).  The probes never
+    # change simulation results either way, so the service's spec
+    # fingerprint deliberately excludes these fields.
+    telemetry: bool = False
+    tel_epoch: int = 0
+    tel_slots: int = 64
+    tel_occ_bins: int = 16
 
     def __post_init__(self):
         if self.warmup + self.drain >= self.cycles:

@@ -1,0 +1,216 @@
+"""In-sim telemetry probes: the flight recorder's traced plane.
+
+Q-StaR's argument is about the *long-term trend* of load distribution,
+but the simulator's scan only surfaces end-of-run aggregates.  This
+module defines the optional time-resolved state the per-cycle
+transition accumulates when ``SimConfig.telemetry`` is on:
+
+* fixed-size **ring buffers** over ``tel_slots`` recording slots, each
+  covering ``tel_epoch`` cycles (0 = auto: ``ceil(cycles/tel_slots)``,
+  so one pass fills the ring exactly).  Runs longer than
+  ``tel_slots × tel_epoch`` wrap and *accumulate* — old slots keep
+  their counts and gain new ones (``tel_cycles`` normalizes);
+* per-slot **per-channel forwarded flits** (``tel_chan`` — the
+  time-resolved link-load trajectory, always-on like ``chan_seen``);
+* per-slot **offered / accepted / shed / delivered** packet counters
+  (``tel_counts``);
+* per-slot **queue-occupancy histogram** (``tel_qocc``: each cycle
+  drops one count into the bin of the total source-queue fill
+  fraction);
+* per-slot **latency histogram** (``tel_lat``: every tail eject,
+  binned exactly like the aggregate ``lat_hist`` — per-slot
+  percentile snapshots).
+
+The arrays are ordinary state-pytree members, so they ride the same
+``lax.scan`` / ``vmap`` / ``shard_map`` paths as the core state, work
+identically under the fused Pallas simstep and the unfused oracle
+(both update them with the same ops), and land in control-plane
+snapshots for free.  With ``telemetry=False`` none of them exist and
+the step functions emit zero extra ops — bit-identical to a build
+without this module (the golden guarantee).
+
+:class:`Telemetry` is the host-side view: lane-major numpy arrays
+pulled from a fetched state dict, with trajectory accessors and npz
+persistence (the service's per-cell ``telemetry.npz``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+__all__ = ["TEL_KEYS", "TEL_COUNT_FIELDS", "resolved_epoch",
+           "telemetry_state", "Telemetry"]
+
+# Telemetry state keys, in the order fresh_state creates them.
+TEL_KEYS = ("tel_chan", "tel_counts", "tel_cycles", "tel_lat", "tel_qocc")
+# Columns of tel_counts.
+TEL_COUNT_FIELDS = ("offered", "accepted", "shed", "delivered")
+
+
+def resolved_epoch(cfg) -> int:
+    """Recording-slot length in cycles (0 when telemetry is off).
+
+    Pure function of the config, so the fused and unfused step builders
+    — and any chunked/resumed execution of the same config — agree on
+    slot boundaries."""
+    if not cfg.telemetry:
+        return 0
+    if int(cfg.tel_epoch) > 0:
+        return int(cfg.tel_epoch)
+    return max(1, -(-int(cfg.cycles) // int(cfg.tel_slots)))
+
+
+def telemetry_state(meta: dict, cfg) -> dict:
+    """Fresh per-lane telemetry ring buffers ({} when telemetry is off).
+
+    Kept beside the other state builders rather than in ``fresh_state``
+    itself so the kernel package can size-budget the same arrays
+    (``repro.kernels.simstep.ops.state_footprint_bytes``) without
+    duplicating the layout."""
+    if not cfg.telemetry:
+        return {}
+    import jax.numpy as jnp
+    s = int(cfg.tel_slots)
+    z = lambda shape: jnp.zeros(shape, jnp.int32)  # noqa: E731
+    return dict(
+        tel_chan=z((s, meta["C"])),
+        tel_counts=z((s, len(TEL_COUNT_FIELDS))),
+        tel_cycles=z((s,)),
+        tel_lat=z((s, cfg.lat_bins)),
+        tel_qocc=z((s, cfg.tel_occ_bins)),
+    )
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """Host-side telemetry bundle for one cell (all lanes).
+
+    Arrays are lane-major: ``chan`` is (lanes, slots, C), ``counts``
+    (lanes, slots, 4) in :data:`TEL_COUNT_FIELDS` order, ``cycles``
+    (lanes, slots), ``lat`` (lanes, slots, lat_bins), ``qocc`` (lanes,
+    slots, occ_bins).  ``bw`` is the per-slot per-channel bandwidth in
+    effect at each slot's end (slots, C) — attached by the caller, who
+    knows the fault timeline; None means the static topology bandwidth
+    was never known.
+    """
+
+    epoch_len: int
+    lat_bin_width: int
+    chan: np.ndarray
+    counts: np.ndarray
+    cycles: np.ndarray
+    lat: np.ndarray
+    qocc: np.ndarray
+    bw: np.ndarray | None = None
+
+    # ------------------------------------------------------------- #
+    @classmethod
+    def from_state(cls, host_state: dict, cfg) -> "Telemetry | None":
+        """Build from a fetched (device_get) state dict with a leading
+        lane axis; None when the state carries no telemetry."""
+        if "tel_chan" not in host_state:
+            return None
+        a = {k: np.asarray(host_state[k]) for k in TEL_KEYS}
+        if a["tel_chan"].ndim == 2:        # single lane: add the axis
+            a = {k: v[None] for k, v in a.items()}
+        return cls(epoch_len=resolved_epoch(cfg),
+                   lat_bin_width=int(cfg.lat_bin_width),
+                   chan=a["tel_chan"].astype(np.int64),
+                   counts=a["tel_counts"].astype(np.int64),
+                   cycles=a["tel_cycles"].astype(np.int64),
+                   lat=a["tel_lat"].astype(np.int64),
+                   qocc=a["tel_qocc"].astype(np.int64))
+
+    def with_bw(self, bw_slots: np.ndarray) -> "Telemetry":
+        return dataclasses.replace(
+            self, bw=np.asarray(bw_slots, np.float64))
+
+    # ------------------------------------------------------------- #
+    @property
+    def num_lanes(self) -> int:
+        return int(self.chan.shape[0])
+
+    @property
+    def num_slots(self) -> int:
+        return int(self.chan.shape[1])
+
+    def active_slots(self) -> np.ndarray:
+        """Indices of slots that recorded at least one cycle.  The
+        per-slot cycle count is lane-independent (every lane steps
+        every cycle), so lane 0 speaks for all."""
+        return np.nonzero(self.cycles[0] > 0)[0]
+
+    def slot_starts(self) -> np.ndarray:
+        """First absolute cycle of each slot (ring wrap ignored)."""
+        return np.arange(self.num_slots, dtype=np.int64) * self.epoch_len
+
+    # ------------------------------------------------------------- #
+    def link_load(self) -> np.ndarray:
+        """(lanes, slots, C) per-channel flits/cycle, normalized by the
+        per-slot bandwidth when attached (dead links → 0 by the same
+        convention as ``postprocess``)."""
+        cyc = np.maximum(self.cycles, 1)[:, :, None].astype(np.float64)
+        load = self.chan.astype(np.float64) / cyc
+        if self.bw is not None:
+            bw = self.bw[None]
+            load = np.where(bw > 0, load / np.where(bw > 0, bw, 1.0), 0.0)
+        return load
+
+    def peak_link_load(self) -> np.ndarray:
+        """(lanes, slots) max normalized channel load per slot — the
+        time-resolved version of ``SimResult.link_load_max``."""
+        load = self.link_load()
+        return load.max(axis=2) if load.shape[2] else np.zeros(
+            load.shape[:2])
+
+    def latency_percentile(self, q: float) -> np.ndarray:
+        """(lanes, slots) latency q-quantile snapshot per slot, from
+        the per-slot histograms (same estimator as the aggregate
+        percentiles; empty slots → 0)."""
+        from repro.noc.sim import hist_percentile
+        out = np.zeros((self.num_lanes, self.num_slots))
+        for i in range(self.num_lanes):
+            for s in range(self.num_slots):
+                out[i, s] = hist_percentile(
+                    self.lat[i, s], self.lat_bin_width, q)
+        return out
+
+    def occupancy_mean(self) -> np.ndarray:
+        """(lanes, slots) mean source-queue fill fraction, from the
+        per-slot occupancy histograms (bin centers)."""
+        nb = self.qocc.shape[2]
+        centers = (np.arange(nb) + 0.5) / nb
+        tot = np.maximum(self.qocc.sum(axis=2), 1).astype(np.float64)
+        return (self.qocc @ centers) / tot
+
+    def count(self, field: str) -> np.ndarray:
+        """(lanes, slots) one :data:`TEL_COUNT_FIELDS` counter."""
+        return self.counts[:, :, TEL_COUNT_FIELDS.index(field)]
+
+    # ------------------------------------------------------------- #
+    def save(self, path: str) -> None:
+        """Persist as npz (meta as a JSON bytes array, the
+        CellCheckpoint idiom)."""
+        meta = {"epoch_len": int(self.epoch_len),
+                "lat_bin_width": int(self.lat_bin_width)}
+        payload = dict(chan=self.chan, counts=self.counts,
+                       cycles=self.cycles, lat=self.lat, qocc=self.qocc)
+        if self.bw is not None:
+            payload["bw"] = self.bw
+        payload["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode(), np.uint8)
+        np.savez_compressed(path, **payload)
+
+    @classmethod
+    def load(cls, path: str) -> "Telemetry":
+        with np.load(path, allow_pickle=False) as z:
+            d = {k: z[k] for k in z.files}
+        meta = json.loads(bytes(d.pop("__meta__")).decode())
+        return cls(epoch_len=int(meta["epoch_len"]),
+                   lat_bin_width=int(meta["lat_bin_width"]),
+                   chan=d["chan"], counts=d["counts"],
+                   cycles=d["cycles"], lat=d["lat"], qocc=d["qocc"],
+                   bw=d.get("bw"))

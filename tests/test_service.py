@@ -233,3 +233,146 @@ def test_multi_axis_grid_matches_per_axis_recomputation():
     g_torus = res.grid("avg_latency", Algo.XY, "uniform",
                        scenario="calm", topo=torus(3, 3).name)
     assert not np.array_equal(g_mesh, g_torus)
+
+
+# ------------------------------------------------------------------ #
+# flight recorder: metrics stream, live status, telemetry persistence
+# ------------------------------------------------------------------ #
+def _metrics(job):
+    from repro.obs.report import load_metrics
+    return load_metrics(job.metrics_path)
+
+
+def test_metrics_stream_survives_kill_and_resume(tmp_path):
+    """metrics.jsonl is a truthful progress stream: a budget-paused job
+    records job_pause; the resume rewrites the stream with the completed
+    cells marked cached and ends in job_done with done == total."""
+    spec = _spec(base=BASE.replace(telemetry=True, tel_slots=6))
+    root = str(tmp_path)
+    res, job = run_campaign_service(spec, root=root, job_id="m",
+                                    max_cells=2)
+    assert res is None
+    m = _metrics(job)
+    assert m[0]["event"] == "job_start"
+    assert m[-1]["event"] == "job_pause" and m[-1]["executed"] == 2
+    cells = [r for r in m if r["event"] == "cell"]
+    assert len(cells) == 2 and not any(r["cached"] for r in cells)
+    assert [r["done"] for r in cells] == [1, 2]
+    assert all(r["wall_s"] > 0 and "lanes_per_s" in r for r in cells)
+
+    res, job = run_campaign_service(spec, root=root, job_id="m")
+    assert res is not None
+    m = _metrics(job)
+    assert m[-1]["event"] == "job_done"
+    cells = [r for r in m if r["event"] == "cell"]
+    assert len(cells) == len(job.cells)
+    assert [r["cached"] for r in cells[:2]] == [True, True]
+    assert cells[-1]["done"] == len(job.cells)
+    # plan-cache stats ride each record
+    assert all("plan_cache" in r for r in cells)
+    # ETA appears once a wall sample exists and cells remain
+    fresh = [r for r in cells if not r["cached"]]
+    assert all("eta_s" in r for r in fresh[1:-1])
+
+
+def test_telemetry_persisted_per_cell_and_fingerprint_excludes_obs(
+        tmp_path):
+    """Telemetry rides the job as per-cell npz artifacts, and toggling
+    it must NOT change the spec fingerprint — probe collection is
+    bit-identity-neutral, so the same job resumes either way."""
+    import os
+    base_on = BASE.replace(telemetry=True, tel_slots=6)
+    spec_on = _spec(base=base_on)
+    assert spec_fingerprint(spec_on) == spec_fingerprint(_spec())
+    assert spec_fingerprint(_spec(base=BASE.replace(tel_slots=99))) \
+        == spec_fingerprint(_spec())
+    # telemetry-off cells completed earlier must satisfy a telemetry-on
+    # resume without re-running: results are the bit-identical truth
+    root = str(tmp_path)
+    res_off, job_off = run_campaign_service(_spec(), root=root,
+                                            job_id="t", max_cells=2)
+    res_on, job_on = run_campaign_service(spec_on, root=root, job_id="t")
+    assert res_on is not None
+    done = {k.slug for k in job_on.completed_cells()}
+    assert len(done) == len(job_on.cells)
+    for i, key in enumerate(job_on.cells):
+        tel = job_on.cell_telemetry(key)
+        if i < 2:       # ran with telemetry off: no probe artifact
+            assert tel is None
+        else:
+            assert tel is not None
+            assert tel.num_lanes == len(job_on.executor.points)
+            assert tel.cycles.sum(axis=1).tolist() \
+                == [BASE.cycles] * tel.num_lanes
+            assert tel.bw is not None
+    # telemetry-on results equal the telemetry-off reference
+    ref = run_campaign(_spec())
+    _assert_points_identical(res_on.points, ref.points)
+    # resume=False clears telemetry artifacts too
+    CampaignJob(spec_on, root=root, job_id="t", resume=False)
+    for key in job_on.cells:
+        assert job_on.cell_telemetry(key) is None
+    assert not os.path.exists(job_on.metrics_path)
+
+
+def test_status_is_live_and_safe_during_background_run(tmp_path):
+    """status() concurrent with start(): monotone done counts, in_flight
+    visibility, and no torn reads; errors surface in both wait() and
+    status()."""
+    import time as time_mod
+
+    spec = _spec()
+    job = CampaignJob(spec, root=str(tmp_path), job_id="bg")
+    seen_done = []
+    seen_flight = set()
+    job.start()
+    while True:
+        st = job.status()
+        assert 0 <= st.done_cells <= st.total_cells
+        seen_done.append(st.done_cells)
+        if st.in_flight is not None:
+            seen_flight.add(st.in_flight)
+        assert st.error is None
+        if not st.running:
+            break
+        time_mod.sleep(0.01)
+    final = job.wait()
+    assert final.complete and final.done_cells == len(job.cells)
+    assert seen_done == sorted(seen_done), "done count went backwards"
+    assert seen_flight <= {k.slug for k in job.cells}
+    # a second start() after completion is well-defined (no-op run)
+    job.start()
+    assert job.wait().complete
+
+    # error path: a failing cell surfaces in status() and re-raises
+    boom = CampaignJob(_spec(rates=(0.2,)), root=str(tmp_path),
+                       job_id="boom")
+
+    def explode(key, checkpoint=None):
+        raise RuntimeError("cell exploded")
+
+    boom.executor.run_cell = explode
+    boom.start()
+    with pytest.raises(RuntimeError, match="cell exploded"):
+        boom.wait()
+    st = boom.status()
+    assert st.error is not None and "cell exploded" in st.error
+    assert not st.running and not st.complete
+
+
+def test_job_trace_records_cells_and_is_perfetto_parseable(tmp_path):
+    from repro.obs.trace import read_trace, validate_events
+
+    spec = _spec(base=BASE.replace(telemetry=True, tel_slots=6))
+    res, job = run_campaign_service(spec, root=str(tmp_path),
+                                    job_id="tr", trace=True)
+    assert res is not None
+    events = read_trace(job.trace_path)
+    assert validate_events(events) == []
+    names = [e["name"] for e in events]
+    # one cell span per cell, and the scenario cells' ctrl-plane chain
+    assert names.count("cell") == len(job.cells)
+    assert "LinkFail" in names and "replan" in names
+    assert "build_plans_batched" in names
+    slugs = {e["args"]["slug"] for e in events if e["name"] == "cell"}
+    assert slugs == {k.slug for k in job.cells}
