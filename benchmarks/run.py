@@ -17,6 +17,12 @@ beyond-paper ICI analyses.
   roofline  deliverable g — per-(arch × shape × mesh) roofline table
   nrank_scale  plan cost  — numpy vs device plan builds, 8×8 → 64×64
                (the quasi-static budget; "nrank" is kept as an alias)
+  certify_scale  gate cost — deadlock-certifier (CDG + Tarjan) wall per
+               table, 8×8 → 32×32, budgetable via ``--certify-budget-ms``
+               / CERTIFY_BUDGET_MS ("certify" is kept as an alias)
+  chaos     robustness    — seeded chaos campaign: kill-and-resume
+              byte-identity mid-storm, corrupted-checkpoint quarantine
+              + recompute, watchdog trip on a deliberately cyclic table
   obs_report  flight recorder — telemetry-probed linkfail campaign with
               ctrl-plane tracing, rendered into ``artifacts/obs/``; the
               online-vs-stale gap must be visible from the in-sim probes
@@ -398,6 +404,182 @@ def bench_nrank_scale():
                    "iters"], rows)
 
 
+def bench_certify_scale():
+    """Deadlock-certifier cost at scale: CDG build + Tarjan SCC over
+    freshly planned tables, 8×8 → 32×32 meshes plus a wrapped torus
+    (dateline layers), warm best-of-3 per size.
+
+    Every table must certify clean (the gate runs on every plan-producing
+    path, so its verdict here is a tautology check — a non-clean verdict
+    means the gate itself regressed).  ``CERTIFY_BUDGET_MS``
+    (``--certify-budget-ms``) asserts the WORST measured certify wall
+    stays under budget — the control-plane requirement: the gate rides
+    every online replan, so it must be cheap relative to the plan build.
+    ``CERTIFY_MAX_NODES`` caps the sweep (CI smoke; skips the committed
+    CSV rewrite like ``nrank_scale``).
+    """
+    from repro.core import (build_plan_fast, certify_table, mesh2d, torus,
+                            traffic)
+    from .common import write_csv
+
+    max_nodes = int(os.environ.get("CERTIFY_MAX_NODES", "0"))
+    budget = float(os.environ.get("CERTIFY_BUDGET_MS", "0"))
+    cases = [("mesh8x8", mesh2d(8, 8)),
+             ("torus8x8", torus(8, 8)),
+             ("mesh16x16", mesh2d(16, 16)),
+             ("mesh32x32", mesh2d(32, 32))]
+    rows = []
+    worst = ("", 0.0)
+    for name, topo in cases:
+        if max_nodes and topo.num_nodes > max_nodes:
+            continue
+        tm = traffic.uniform(topo)
+        plan = build_plan_fast(topo, tm)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            cert = certify_table(topo, plan.table, traffic=tm,
+                                 w_nr=plan.nrank.w_nr)
+            best = min(best, (time.perf_counter() - t0) * 1e3)
+        assert cert.verdict == "clean", (
+            f"{name}: planned table no longer certifies clean "
+            f"({cert.verdict}, {cert.cyclic_nodes} cyclic nodes)")
+        if best > worst[1]:
+            worst = (name, best)
+        print(f"certify_scale,{name},nodes={topo.num_nodes},"
+              f"cdg_nodes={cert.cdg_nodes},cdg_edges={cert.cdg_edges},"
+              f"verdict={cert.verdict},warm={best:.1f}ms")
+        rows.append([name, topo.num_nodes, cert.cdg_nodes,
+                     cert.cdg_edges, cert.verdict, f"{best:.2f}"])
+    if budget and worst[0]:
+        assert worst[1] <= budget, (
+            f"certify wall {worst[1]:.1f}ms on {worst[0]} over the "
+            f"{budget:.0f}ms budget")
+    if max_nodes:
+        print(f"certify_scale: sweep capped at {max_nodes} nodes; "
+              "skipping certify_cost.csv rewrite")
+    else:
+        write_csv("certify_cost.csv",
+                  ["topology", "nodes", "cdg_nodes", "cdg_edges",
+                   "verdict", "warm_ms"], rows)
+    return {"worst_case": worst[0], "worst_ms": round(worst[1], 2),
+            "sizes": len(rows)}
+
+
+def bench_chaos():
+    """Chaos smoke: the robustness stack end to end, fixed seeds.
+
+    1. A chaos campaign (two seeded storm schedules + a calm control,
+       :mod:`repro.noc.chaos`) is interrupted after every cell and
+       resumed; the final ``results.csv`` must be byte-identical to an
+       uninterrupted reference job of the same spec.
+    2. One completed cell's npz is then truncated in place; the next
+       resume must quarantine it (``cell_quarantined`` in
+       ``metrics.jsonl``), recompute, and reproduce the same CSV bytes.
+    3. A deliberately cyclic ring table (the certifier rejects it; here
+       force-fed to the simulator) must trip the stall watchdog
+       (deadlock trips > 0) and still drain via the escape lane.
+    """
+    from repro.core import BiDORTable, build_plan, mesh2d, traffic
+    from repro.noc import (Algo, CampaignSpec, ChaosConfig, ReplanConfig,
+                           Scenario, SimConfig, chaos_scenarios,
+                           run_campaign_service, run_sim)
+    from repro.obs.report import load_metrics
+    from .common import QUICK, SERVICE_ROOT, out_path
+
+    cycles = 2600 if QUICK else 8000
+    topo = mesh2d(4, 4)
+    plan = build_plan(topo, traffic.uniform(topo))
+    cc = ChaosConfig(start=cycles // 4, horizon=cycles, flap_storms=1,
+                     flap_links=2, flap_bursts=2,
+                     flap_period=cycles // 12, region_failures=1,
+                     drift_events=1)
+    rc = ReplanConfig(epoch=cycles // 6, max_shed=0.5)
+    spec = CampaignSpec(
+        topo=topo, algos=(Algo.BIDOR,), patterns=("uniform",),
+        rates=(0.3,), seeds=(0,),
+        base=SimConfig(cycles=cycles, warmup=cycles // 4,
+                       drain=cycles // 10, watchdog=True),
+        scenarios=(Scenario("calm"),
+                   *chaos_scenarios(topo, [0, 1], replan=rc,
+                                    base=cc)))
+    tables = {"uniform": plan.table.choice}
+
+    # ---- 1. kill-and-resume mid-storm, byte-identical ---- #
+    kwargs = dict(root=SERVICE_ROOT, bidor_tables=tables)
+    interrupts = 0
+    while True:
+        res, job = run_campaign_service(spec, job_id="chaos-smoke",
+                                        max_cells=1, **kwargs)
+        if res is not None:
+            break
+        interrupts += 1
+        assert interrupts <= 8, "chaos job failed to converge"
+    ref_res, ref_job = run_campaign_service(
+        spec, job_id="chaos-smoke-ref", resume=False, **kwargs)
+    with open(job.csv_path, "rb") as f:
+        got = f.read()
+    with open(ref_job.csv_path, "rb") as f:
+        want = f.read()
+    assert got == want, (
+        f"chaos kill-and-resume CSV diverged ({len(got)} vs "
+        f"{len(want)} bytes)")
+
+    # ---- 2. quarantined-checkpoint recovery ---- #
+    victim = job.cells[1]
+    path = job._cell_path(victim)
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    res2, job2 = run_campaign_service(spec, job_id="chaos-smoke",
+                                      **kwargs)
+    assert res2 is not None
+    quar = [r for r in load_metrics(job2.metrics_path)
+            if r["event"] == "cell_quarantined"]
+    assert [r["cell"] for r in quar] == [victim.slug], (
+        f"expected exactly one quarantine of {victim.slug}, got {quar}")
+    assert os.path.exists(os.path.join(
+        job2.quarantine_dir, f"{victim.slug}.npz"))
+    with open(job2.csv_path, "rb") as f:
+        assert f.read() == want, "post-quarantine CSV diverged"
+
+    # ---- 3. watchdog trips on a deliberately cyclic table ---- #
+    ring = mesh2d(2, 2)
+    order = [0, 1, 3, 2]
+    nxt = {order[i]: order[(i + 1) % 4] for i in range(4)}
+    neigh = np.asarray(ring.neighbor_table)
+    pt = np.zeros((1, 4, 4), np.int8)
+    for cur in range(4):
+        for dst in range(4):
+            pt[0, cur, dst] = (
+                ring.port_local if cur == dst else
+                next(k for k in range(neigh.shape[1])
+                     if neigh[cur, k] == nxt[cur]))
+    cyclic = BiDORTable(choice=np.zeros((4, 4), np.int8),
+                        orders=((0, 1),),
+                        costs=np.zeros((1, 4, 4), np.float32),
+                        port_tables=pt)
+    wd_cfg = SimConfig(algo=Algo.BIDOR, cycles=3000, warmup=500,
+                       injection_rate=0.6, num_vcs=2, use_kernel=False,
+                       watchdog=True, wd_stall_cycles=32)
+    r, wd = run_sim(ring, traffic.uniform(ring), wd_cfg, cyclic,
+                    return_watchdog=True)
+    assert wd is not None and wd.deadlock_trips > 0, (
+        "watchdog failed to trip on a cyclic ring table")
+    assert r.ejected_flits > 0, "escape recovery delivered nothing"
+
+    with open(out_path("chaos_smoke.csv"), "wb") as f:
+        f.write(got)
+    metrics = {"cells": len(job.cells), "interrupts": interrupts,
+               "csv_bytes": len(got), "quarantined": len(quar),
+               "wd_deadlock_trips": wd.deadlock_trips,
+               "wd_max_stall": wd.max_stall,
+               "escape_ejected": r.ejected_flits}
+    print("chaos:", metrics)
+    return metrics
+
+
 def bench_obs_report():
     """Flight recorder end-to-end: a telemetry-probed, ctrl-traced
     linkfail campaign (stale vs online policies), rendered into
@@ -569,9 +751,11 @@ STAGES = {
     "linkload": _stage_linkload,
     "roofline": _stage_roofline,
     "nrank_scale": bench_nrank_scale,
+    "certify_scale": bench_certify_scale,
     "obs_report": bench_obs_report,
+    "chaos": bench_chaos,
 }
-ALIASES = {"nrank": "nrank_scale"}
+ALIASES = {"nrank": "nrank_scale", "certify": "certify_scale"}
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -604,6 +788,12 @@ def main(argv: list[str] | None = None) -> None:
                     help="execute at most N campaign cells per service "
                          "job then stop (controlled interruption; flag "
                          "form of CAMPAIGN_MAX_CELLS)")
+    ap.add_argument("--certify-max-nodes", type=int, default=None,
+                    help="cap the certify_scale sweep at this many nodes "
+                         "(flag form of CERTIFY_MAX_NODES)")
+    ap.add_argument("--certify-budget-ms", type=float, default=None,
+                    help="assert the worst certify wall stays under this "
+                         "budget (flag form of CERTIFY_BUDGET_MS)")
     ap.add_argument("--obs-budget-ratio", type=float, default=None,
                     help="assert the telemetry-on per-cycle cost stays "
                          "under this multiple of telemetry-off (flag "
@@ -625,6 +815,10 @@ def main(argv: list[str] | None = None) -> None:
         os.environ["CAMPAIGN_RESUME"] = "1"
     if args.max_cells is not None:
         os.environ["CAMPAIGN_MAX_CELLS"] = str(args.max_cells)
+    if args.certify_max_nodes is not None:
+        os.environ["CERTIFY_MAX_NODES"] = str(args.certify_max_nodes)
+    if args.certify_budget_ms is not None:
+        os.environ["CERTIFY_BUDGET_MS"] = str(args.certify_budget_ms)
     if args.obs_budget_ratio is not None:
         os.environ["OBS_BUDGET_RATIO"] = str(args.obs_budget_ratio)
 

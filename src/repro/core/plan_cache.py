@@ -42,6 +42,7 @@ import tempfile
 import numpy as np
 
 from .bidor import BiDORTable
+from .certify import Certificate
 from .nrank import NRankResult
 from .qstar import QStarPlan
 from .topology import Topology
@@ -147,12 +148,35 @@ class PlanCache:
         return QStarPlan(topology=topo, traffic=d["traffic"], nrank=nr,
                          table=table)
 
+    def get_cert(self, key: str) -> Certificate | None:
+        """Deadlock-freedom certificate stored alongside the plan.
+
+        Returns None on a cache miss *or* when the entry predates the
+        certifier (no ``cert_*`` arrays) — either way the caller must
+        re-certify before deploying the plan.  Does not touch hit/miss
+        stats; certificate reads piggyback on a prior :meth:`get`.
+        """
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None
+        with np.load(path, allow_pickle=False) as z:
+            d = {k: z[k] for k in z.files if k.startswith("cert_")}
+        return Certificate.from_arrays(d)
+
     def put(self, key: str, plan: QStarPlan, *,
-            k_orders: bool = False) -> None:
-        """Store a plan atomically (idempotent for a given key)."""
+            k_orders: bool = False,
+            cert: Certificate | None = None) -> None:
+        """Store a plan atomically (idempotent for a given key).
+
+        ``cert`` rides inside the entry so admission of a cached plan
+        can reuse the stored verdict; it defaults to the certificate the
+        build gate attached to the plan itself.
+        """
         path = self._path(key)
         if os.path.exists(path):
             return
+        if cert is None:
+            cert = plan.cert
         t = plan.table
         nr = plan.nrank
         payload = dict(
@@ -170,6 +194,8 @@ class PlanCache:
             traffic=np.asarray(plan.traffic, np.float64),
             k_orders=np.bool_(k_orders),
         )
+        if cert is not None:
+            payload.update(cert.as_arrays())
         fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:

@@ -64,6 +64,7 @@ import numpy as np
 from repro.obs.trace import NULL_TRACER
 
 from .bidor import TIE_TOL, BiDORTable
+from .certify import CertificationError, apply_repair, certify_table
 from .nrank import ITER_TH, W_TH, NRankResult, initial_weights
 from .qstar import QStarPlan
 from .routes import dimension_orders, next_hop_table, next_port_table
@@ -420,6 +421,30 @@ def _assemble_plan(topo: Topology, traffic: np.ndarray, statics: PlanStatics,
                      table=table)
 
 
+def gate_plan(topo: Topology, plan: QStarPlan, *, tracer=None,
+              label: str = "") -> QStarPlan:
+    """Mandatory deadlock-freedom gate on every plan-producing path.
+
+    Certifies the plan's table (``repro.core.certify``), attaches the
+    certificate to the returned plan (``plan.cert``), folds a
+    turn-prohibition repair back into the table when the certifier had
+    to intervene, and raises :class:`CertificationError` when cycles
+    survive repair — a rejected table must never reach a simulator or a
+    cache.  Clean plans pass through bit-unchanged.
+    """
+    cert = certify_table(topo, plan.table, traffic=plan.traffic,
+                         w_nr=plan.nrank.w_nr, tracer=tracer, label=label)
+    if not cert.ok:
+        raise CertificationError(
+            f"plan for {topo.name} failed deadlock certification "
+            f"({cert.cyclic_nodes} cyclic CDG nodes survive repair; "
+            f"label={label!r})")
+    if cert.verdict == "repaired":
+        plan = dataclasses.replace(plan,
+                                   table=apply_repair(plan.table, cert))
+    return dataclasses.replace(plan, cert=cert)
+
+
 def plan_cache_key(topo: Topology, traffic, *, down_channels=None,
                    k_orders: bool = False, w_th: float = W_TH,
                    iter_th: int = ITER_TH,
@@ -481,7 +506,12 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
     if hit is not None:
         tracer.instant("plan_cache_hit", cat="plan",
                        args={"nodes": topo.num_nodes})
-        return hit
+        cert = cache.get_cert(key)
+        if cert is not None and cert.verdict == "clean":
+            # admission gate satisfied by the stored certificate
+            return dataclasses.replace(hit, cert=cert)
+        # pre-certifier entry (or a stored repair): re-run the gate
+        return gate_plan(topo, hit, tracer=tracer, label="cache_hit")
     t_all = tracer.now_us()
     statics = plan_statics(topo, binary_only=not k_orders,
                            use_pallas=use_pallas)
@@ -501,6 +531,7 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
                            jnp.asarray(float(w_th)), jnp.int32(iter_th))
         out = jax.device_get(out)
     plan = _assemble_plan(topo, traffic, statics, out, bool(down.size))
+    plan = gate_plan(topo, plan, tracer=tracer, label="build_plan_fast")
     t_end = tracer.now_us()
     tracer.complete(
         "build_plan_fast", t_all, t_end - t_all, cat="plan",
@@ -509,7 +540,7 @@ def build_plan_fast(topo: Topology, traffic: np.ndarray, *,
               "statics_ms": round((t_dev - t_all) / 1e3, 3),
               "device_ms": round((t_end - t_dev) / 1e3, 3)})
     if key is not None:
-        cache.put(key, plan, k_orders=k_orders)
+        cache.put(key, plan, k_orders=k_orders, cert=plan.cert)
     return plan
 
 
@@ -552,6 +583,12 @@ def build_plans_batched(topo: Topology, traffics, *,
                                      k_orders, w_th, iter_th, precision,
                                      w0)
             if hit is not None:
+                cert = cache.get_cert(key)
+                if cert is not None and cert.verdict == "clean":
+                    hit = dataclasses.replace(hit, cert=cert)
+                else:
+                    hit = gate_plan(topo, hit, tracer=tracer,
+                                    label=f"cache_hit:{i}")
                 cached[i] = hit
                 tracer.instant("plan_cache_hit", cat="plan",
                                args={"lane": i, "nodes": topo.num_nodes})
@@ -570,7 +607,8 @@ def build_plans_batched(topo: Topology, traffics, *,
             for i, plan in zip(need, built):
                 cached[i] = plan
                 if i in keys:
-                    cache.put(keys[i], plan, k_orders=k_orders)
+                    cache.put(keys[i], plan, k_orders=k_orders,
+                              cert=plan.cert)
             cache.stats.device_builds += 1
         return [cached[i] for i in range(len(tms))]
     n = statics.n
@@ -596,8 +634,10 @@ def build_plans_batched(topo: Topology, traffics, *,
                 jnp.asarray(float(w_th)), jnp.int32(iter_th)))
             for i, tm in enumerate(tms_g):
                 lane = {k: np.asarray(v)[i] for k, v in out.items()}
-                plans.append(_assemble_plan(topo, tm, statics, lane,
-                                            have_down=bool(down.size)))
+                plan = _assemble_plan(topo, tm, statics, lane,
+                                      have_down=bool(down.size))
+                plans.append(gate_plan(topo, plan, tracer=tracer,
+                                       label="build_plans_batched"))
     tracer.complete("build_plans_batched", t_span,
                     tracer.now_us() - t_span, cat="plan",
                     args={"nodes": topo.num_nodes, "lanes": len(tms),

@@ -35,6 +35,9 @@ class QStarPlan:
     traffic: np.ndarray
     nrank: NRankResult
     table: BiDORTable
+    # deadlock-freedom certificate (repro.core.certify) attached by the
+    # build gates; None for plans assembled outside the gated paths
+    cert: object = None
 
     @property
     def w_nr(self) -> np.ndarray:

@@ -46,11 +46,14 @@ def state_footprint_bytes(meta: dict, cfg: SimConfig) -> int:
              + 3 * n * n                        # next_seq, exp_seq, rbits
              + n * p * v + n * p                # out_held, rr
              + 8 * nin + 10 * n + 5 * c         # per-input/node/chan vecs
-             + o * n * n + 2 * n * n)           # port tables, choice, cdf
+             + o * n * n + 3 * n * n)           # port/esc tables, choice, cdf
     if cfg.telemetry:
         # repro.obs.probe ring buffers ride the state pytree too
         words += cfg.tel_slots * (c + 1 + 4 + cfg.tel_occ_bins
                                   + cfg.lat_bins)
+    if cfg.watchdog:
+        # repro.noc.watchdog stall/throttle/trip counters
+        words += nin + n + 2
     return 4 * words
 
 

@@ -64,9 +64,10 @@ _WIDE_N = 256
 # ``repro.noc.sim.fresh_state`` except the PRNG key, which the step
 # wrapper (ops.make_step) advances outside the kernel.  With
 # ``SimConfig.telemetry`` the state additionally carries the
-# ``repro.obs.probe.TEL_KEYS`` ring buffers; the kernel wrapper is
-# generic over the state dict's keys, so they flow through both
-# backends unchanged.
+# ``repro.obs.probe.TEL_KEYS`` ring buffers, and with
+# ``SimConfig.watchdog`` the ``repro.noc.watchdog.WD_KEYS`` counters;
+# the kernel wrapper is generic over the state dict's keys, so both
+# flow through both backends unchanged.
 CORE_KEYS = (
     "flits", "fifo_start", "fifo_size", "lock_op", "lock_ov", "out_held",
     "rr", "qpkts", "q_start", "q_size", "prog", "next_seq", "exp_seq",
@@ -113,6 +114,7 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
     pv = p * v
     two_phase = algo in (Algo.VALIANT, Algo.ROMM)
     tel_epoch = resolved_epoch(cfg)  # 0 ⇔ telemetry off
+    watchdog = bool(cfg.watchdog)
     wide = n >= _WIDE_N
     # binary-search iteration count: the [0, n] interval at least halves
     # every guarded step, so bit_length(n) steps always converge
@@ -210,6 +212,11 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         u, ud = rand["u"], rand["ud"]
         gen = (u < (t.p_gen * (state["rate"] / l))) \
             & (cycle < state["inject_until"])
+        if watchdog:
+            # livelock throttle: mask generation at throttled sources —
+            # mask only (draws are hoisted), identical to the unfused step
+            gen = gen & (state["wd_throttle"] <= 0)
+            state["wd_throttle"] = jnp.maximum(state["wd_throttle"] - 1, 0)
         raw_dst = (sample_dst(t.cdf, ud) if wide
                    else (t.cdf <= ud[:, None]).sum(1))
         dst = jnp.clip(raw_dst, 0, n - 1).astype(jnp.int32)
@@ -319,6 +326,14 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         ov = jnp.where(at_dest, 0, ov_route)
         op = jnp.where(locked, state["lock_op"], op)
         ov = jnp.where(locked, state["lock_ov"], ov)
+        if watchdog:
+            # deadlock escape: stalled heads misroute one hop via the
+            # acyclic DOR escape table on the highest VC (escape lane) —
+            # same ops as the unfused step
+            esc = (state["wd_stall"] >= cfg.wd_stall_cycles) \
+                & valid & g["head"] & ~locked & ~at_dest
+            op = jnp.where(esc, t.esc_port[t.n_of, target], op)
+            ov = jnp.where(esc, v - 1, ov)
 
         # ---------------- 4. eligibility -------------------------------- #
         is_eject = op == p_local
@@ -400,6 +415,20 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         hold_val = jnp.where(hold_set, grants, -1)
         state["out_held"] = jnp.where(vmask, hold_val[..., None],
                                       state["out_held"])
+        if watchdog:
+            # stall / trip / throttle bookkeeping — identical op for op
+            # to the unfused oracle's watchdog block
+            new_stall = jnp.where(valid & ~popped, state["wd_stall"] + 1, 0)
+            state["wd_trips"] = state["wd_trips"].at[0].add(
+                (new_stall == cfg.wd_stall_cycles).sum())
+            state["wd_stall"] = new_stall
+            hops_now = push_rec[..., F_HOPS]
+            lv = net & (hops_now > cfg.wd_hop_limit)
+            lv_src = jnp.where(lv, w_all[..., F_SRC], n)
+            state["wd_throttle"] = state["wd_throttle"].at[
+                lv_src.reshape(-1)].set(cfg.wd_throttle_cycles, mode="drop")
+            state["wd_trips"] = state["wd_trips"].at[1].add(
+                (net & (hops_now == cfg.wd_hop_limit + 1)).sum())
 
         # ---------------- 7. statistics --------------------------------- #
         state["node_fwd"] = state["node_fwd"] + jnp.where(

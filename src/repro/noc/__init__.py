@@ -10,6 +10,9 @@ from .ctrl import (ControlledResult, DriftDetector, LinkFail, LinkRecover,
                    TrafficEstimator, run_controlled)
 from .service import (CampaignJob, CellCheckpoint, JobStatus,
                       run_campaign_service, spec_fingerprint)
+from .chaos import (ChaosConfig, chaos_scenarios, chaos_schedule,
+                    hotspot_traffic, region_links)
+from .watchdog import WatchdogReport
 
 __all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
            "run_trace", "run_trace_sweep", "CampaignSpec", "CampaignPoint",
@@ -19,4 +22,6 @@ __all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
            "Replan", "ReplanConfig", "Scenario", "TrafficDrift",
            "TrafficEstimator", "run_controlled",
            "CampaignJob", "CellCheckpoint", "JobStatus",
-           "run_campaign_service", "spec_fingerprint"]
+           "run_campaign_service", "spec_fingerprint",
+           "ChaosConfig", "chaos_schedule", "chaos_scenarios",
+           "hotspot_traffic", "region_links", "WatchdogReport"]

@@ -491,12 +491,20 @@ class CampaignExecutor:
                                         down_channels=dc,
                                         tracer=self.tracer)
             return dict(zip(need, built))
-        from repro.core.plan_fast import plan_cache_key
+        from repro.core.plan_fast import gate_plan, plan_cache_key
         miss: list[tuple[int, str]] = []
         for i in need:
             key = plan_cache_key(topo, items[i][1], down_channels=dc)
             hit = cache.get(key, topo)
             if hit is not None:
+                # cache admission: a stored clean certificate satisfies
+                # the deadlock gate; anything else re-certifies
+                cert = cache.get_cert(key)
+                if cert is not None and cert.verdict == "clean":
+                    hit = dataclasses.replace(hit, cert=cert)
+                else:
+                    hit = gate_plan(topo, hit, tracer=self.tracer,
+                                    label=f"cache_admission:{topo.name}")
                 plans[i] = hit
                 if self.tracer.enabled:
                     self.tracer.instant(

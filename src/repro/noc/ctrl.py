@@ -43,12 +43,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bidor import BiDORTable, bidor, greedy_refine
+from repro.core.certify import (CertificationError, apply_repair,
+                                certify_table)
 from repro.core.nrank import NRankResult, initial_weights, nrank_channel
 from repro.core.plan_fast import build_plan_fast
 from repro.core.topology import Topology
 from repro.obs.log import EventLog
 from repro.obs.probe import Telemetry, resolved_epoch
 from repro.obs.trace import NULL_TRACER
+from .watchdog import WatchdogReport
 from .sim import (build_tables, get_runner, make_states,
                   maybe_shard_states, postprocess, queue_occupancy,
                   retarget_tables, source_queue_meta)
@@ -211,6 +214,10 @@ class ReplanConfig:
     warm: bool = True           # carry the previous N-Rank fixed point
     greedy_sweeps: int = 2      # BiDOR-G refinement against degraded bw
     sat_occupancy: float = 0.9  # source-queue fraction flagging saturation
+    # hot-swap guard: reject a replan whose shed fraction (unroutable
+    # pairs among the pairs with demand) exceeds this, keeping the
+    # previous table instead of silently wedging most of the traffic
+    max_shed: float = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -272,6 +279,17 @@ def replan(topo: Topology, traffic: np.ndarray, channel_bw: np.ndarray,
     if greedy_sweeps > 0:
         table = greedy_refine(plan_topo, traffic, table,
                               sweeps=greedy_sweeps)
+    # deadlock gate on the hot-swap artifact: build_plan_fast certifies
+    # its own output, but greedy refinement (and the host-oracle path)
+    # re-shape the choice table afterwards — certify what actually ships
+    cert = certify_table(plan_topo, table, traffic=traffic, w_nr=nr.w_nr,
+                         tracer=tracer, label="replan")
+    if not cert.ok:
+        raise CertificationError(
+            f"replan for {topo.name} failed deadlock certification "
+            f"({cert.cyclic_nodes} cyclic CDG nodes survive repair)")
+    if cert.verdict == "repaired":
+        table = apply_repair(table, cert)
     return table, nr
 
 
@@ -295,6 +313,8 @@ class ControlledResult:
     # in-sim probe rings (cfg.telemetry on), bw-normalized against the
     # bandwidth in effect per telemetry slot (faults tracked)
     telemetry: "Telemetry | None" = None
+    # stall-watchdog summary over all lanes (cfg.watchdog on)
+    watchdog: "object | None" = None
 
     def result_with_peak(self, i: int) -> SimResult:
         """Lane i's SimResult with the time-resolved link peak in
@@ -665,6 +685,29 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
         table, nr_prev = replan(
             topo, m, bw, nr_prev,
             warm=rc.warm, greedy_sweeps=rc.greedy_sweeps, tracer=tracer)
+        # hot-swap guard: a replan that sheds most of the demanded pairs
+        # would silently wedge the run behind a near-empty table — keep
+        # the previous (still-certified) table and record the rejection
+        if table.unroutable is not None:
+            demanded = np.asarray(cur_traffic) > 0
+            n_dem = int(demanded.sum())
+            shed_frac = (int((table.unroutable & demanded).sum()) / n_dem
+                         if n_dem else 0.0)
+            if shed_frac > rc.max_shed:
+                if tracer.enabled:
+                    tracer.instant(
+                        "hot_swap_rejected", cat="ctrl",
+                        args={"cycle": t1, "trigger": trigger,
+                              "shed_frac": round(shed_frac, 4),
+                              "max_shed": rc.max_shed})
+                log.event("replan_rejected",
+                          f"ctrl[{scenario.name}/{policy}] hot-swap "
+                          f"rejected @ {t1}: shed {shed_frac:.0%} > "
+                          f"max {rc.max_shed:.0%}", cycle=t1,
+                          trigger=trigger)
+                detector.reset()
+                fault_pending = False
+                continue
         # admission control: shed unroutable pairs from generation; when
         # the new plan can serve everything (e.g. after LinkRecover),
         # restore the full current matrix — a previous shed must not
@@ -709,7 +752,12 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     if telemetry is not None:
         telemetry = telemetry.with_bw(_bw_slots(
             bw_hist, resolved_epoch(cfg), cfg.tel_slots, total))
+    watchdog = WatchdogReport.from_state(host, cfg)
+    if watchdog is not None and watchdog.tripped and tracer.enabled:
+        tracer.instant("watchdog_tripped", cat="ctrl",
+                       args=watchdog.trace_args())
     return ControlledResult(
         scenario=scenario.name, policy=policy, points=points,
         results=results, replans=replans, link_peak=link_peak,
-        epoch_bounds=epoch_bounds, telemetry=telemetry)
+        epoch_bounds=epoch_bounds, telemetry=telemetry,
+        watchdog=watchdog)

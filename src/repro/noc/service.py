@@ -136,6 +136,31 @@ def spec_fingerprint(spec: CampaignSpec) -> str:
 # --------------------------------------------------------------------- #
 # atomic file helpers (the repro.train.checkpoint idiom)
 # --------------------------------------------------------------------- #
+def _sha256_file(path: str) -> str:
+    import hashlib
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _write_sidecar(path: str) -> None:
+    """Record ``path``'s content hash next to it (integrity sidecar)."""
+    _atomic_write_text(path + ".sha256", _sha256_file(path) + "\n")
+
+
+def _verify_sidecar(path: str) -> bool:
+    """True iff ``path`` matches its sidecar.  A file without a sidecar
+    (pre-hardening layout) passes — corruption there still surfaces as a
+    load failure, which callers also treat as corrupt."""
+    side = path + ".sha256"
+    if not os.path.exists(side):
+        return True
+    with open(side) as f:
+        return f.read().strip() == _sha256_file(path)
+
+
 def _atomic_savez(path: str, payload: dict) -> None:
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
     try:
@@ -164,7 +189,12 @@ class CellCheckpoint:
     """Single-file atomic (arrays, meta) checkpoint — the duck-typed
     epoch-boundary checkpointer ``run_controlled`` consumes.  Meta rides
     inside the npz as a JSON bytes array, so save/replace is one atomic
-    rename and a partial write can never be observed."""
+    rename and a partial write can never be observed.
+
+    Every save records a sha256 sidecar; ``load`` verifies it (and the
+    npz parse itself) and treats any mismatch as *no checkpoint*: the
+    corrupt file is set aside as ``<path>.corrupt`` and the cell restarts
+    from cycle 0 — a slower resume, never a wrong one."""
 
     def __init__(self, path: str):
         self.path = str(path)
@@ -174,18 +204,29 @@ class CellCheckpoint:
         payload["__meta__"] = np.frombuffer(
             json.dumps(meta).encode(), np.uint8)
         _atomic_savez(self.path, payload)
+        _write_sidecar(self.path)
 
     def load(self):
         if not os.path.exists(self.path):
             return None
-        with np.load(self.path, allow_pickle=False) as z:
-            d = {k: z[k] for k in z.files}
-        meta = json.loads(bytes(d.pop("__meta__")).decode())
-        return d, meta
+        try:
+            if not _verify_sidecar(self.path):
+                raise ValueError("checkpoint sha256 mismatch")
+            with np.load(self.path, allow_pickle=False) as z:
+                d = {k: z[k] for k in z.files}
+            meta = json.loads(bytes(d.pop("__meta__")).decode())
+            return d, meta
+        except Exception:
+            os.replace(self.path, self.path + ".corrupt")
+            side = self.path + ".sha256"
+            if os.path.exists(side):
+                os.unlink(side)
+            return None
 
     def clear(self) -> None:
-        if os.path.exists(self.path):
-            os.unlink(self.path)
+        for p in (self.path, self.path + ".sha256"):
+            if os.path.exists(p):
+                os.unlink(p)
 
 
 # --------------------------------------------------------------------- #
@@ -206,6 +247,7 @@ def _save_outcome(path: str, outcome: CellOutcome) -> None:
         else:
             payload[name] = np.asarray(vals)
     _atomic_savez(path, payload)
+    _write_sidecar(path)
 
 
 def _load_outcome(path: str, key: CellKey) -> CellOutcome:
@@ -268,6 +310,16 @@ class CampaignJob:
     ``plan_cache``: a :class:`PlanCache`, a directory path, ``"shared"``
     (default — ``<root>/plan-cache``, shared by every job under the
     root), or None to disable plan caching.
+
+    **Chaos hardening.**  Every stored cell npz carries a sha256
+    sidecar; a cached cell that fails verification (or fails to parse)
+    is moved to ``cells/quarantine/`` and recomputed — corruption costs
+    a re-run, never a wrong result.  Executing a cell retries up to
+    ``max_retries`` times with exponential backoff; a cell that still
+    fails is recorded as a ``cell_error`` event in ``metrics.jsonl`` and
+    the job *continues* — one poisoned cell cannot take down an
+    hours-long campaign (``run()`` then returns False so callers re-run
+    or investigate).
     """
 
     def __init__(self, spec: CampaignSpec, *, root: str = DEFAULT_ROOT,
@@ -276,17 +328,22 @@ class CampaignJob:
                  plan_cache="shared",
                  resume: bool = True,
                  verbose: bool = False,
-                 trace: bool = False):
+                 trace: bool = False,
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.5):
         self.spec = spec
         self.fingerprint = spec_fingerprint(spec)
         self.job_id = job_id or f"job-{self.fingerprint[:12]}"
         self.dir = os.path.join(root, self.job_id)
         self.cells_dir = os.path.join(self.dir, "cells")
+        self.quarantine_dir = os.path.join(self.cells_dir, "quarantine")
         self.ckpt_dir = os.path.join(self.dir, "ckpt")
         self.csv_path = os.path.join(self.dir, "results.csv")
         self.metrics_path = os.path.join(self.dir, "metrics.jsonl")
         self.trace_path = os.path.join(self.dir, "trace.jsonl")
         self.verbose = verbose
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         if plan_cache == "shared":
             plan_cache = PlanCache(os.path.join(root, "plan-cache"))
         elif isinstance(plan_cache, str):
@@ -300,6 +357,7 @@ class CampaignJob:
         self._done: int | None = None    # None ⇔ no run() in this process
         self._walls: list[float] = []    # executed-cell walls (ETA basis)
         os.makedirs(self.cells_dir, exist_ok=True)
+        os.makedirs(self.quarantine_dir, exist_ok=True)
         os.makedirs(self.ckpt_dir, exist_ok=True)
         self._init_manifest(resume)
         # after _init_manifest: a resume=False wipe must not unlink the
@@ -326,7 +384,8 @@ class CampaignJob:
                     f"{self.fingerprint[:12]}...); pick another job_id")
             if not resume:
                 for k in self.cells:
-                    for p in (self._cell_path(k), self._tel_path(k)):
+                    cp = self._cell_path(k)
+                    for p in (cp, cp + ".sha256", self._tel_path(k)):
                         if os.path.exists(p):
                             os.unlink(p)
                     CellCheckpoint(self._ckpt_path(k)).clear()
@@ -334,6 +393,9 @@ class CampaignJob:
                           self.trace_path):
                     if os.path.exists(p):
                         os.unlink(p)
+                if os.path.isdir(self.quarantine_dir):
+                    for name in os.listdir(self.quarantine_dir):
+                        os.unlink(os.path.join(self.quarantine_dir, name))
             return
         manifest = {
             "job_id": self.job_id,
@@ -352,6 +414,30 @@ class CampaignJob:
 
     def _cell_path(self, key: CellKey) -> str:
         return os.path.join(self.cells_dir, f"{key.slug}.npz")
+
+    def _quarantine_cell(self, key: CellKey) -> str:
+        """Move a corrupt cell npz (and sidecar) out of the cache so the
+        run loop recomputes it; returns the quarantine path."""
+        path = self._cell_path(key)
+        dest = os.path.join(self.quarantine_dir, os.path.basename(path))
+        os.replace(path, dest)
+        side = path + ".sha256"
+        if os.path.exists(side):
+            os.replace(side, dest + ".sha256")
+        return dest
+
+    def _load_cell(self, key: CellKey) -> "CellOutcome | None":
+        """Verified load of a completed cell: sha256 sidecar first, then
+        the npz parse itself.  Any failure quarantines the file and
+        returns None — the caller recomputes the cell."""
+        path = self._cell_path(key)
+        try:
+            if not _verify_sidecar(path):
+                raise ValueError("cell sha256 mismatch")
+            return _load_outcome(path, key)
+        except Exception:
+            self._quarantine_cell(key)
+            return None
 
     def _tel_path(self, key: CellKey) -> str:
         return os.path.join(self.cells_dir, f"{key.slug}.telemetry.npz")
@@ -425,17 +511,45 @@ class CampaignJob:
             rec["plan_cache"] = self.plan_cache.stats.as_dict()
         return rec
 
+    def _run_cell_with_retry(self, key: CellKey, ckpt, mf):
+        """Bounded retry-with-backoff around one cell execution; returns
+        the outcome, or None after ``max_retries + 1`` failed attempts
+        (the terminal error is recorded as a ``cell_error`` metric)."""
+        err = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return self.executor.run_cell(
+                    key, checkpoint=ckpt if key.scen_i >= 0 else None)
+            except Exception as e:      # noqa: BLE001 — isolate the cell
+                err = e
+                self._emit_metric(mf, {
+                    "event": "cell_retry", "cell": key.slug,
+                    "attempt": attempt + 1,
+                    "max_attempts": self.max_retries + 1,
+                    "error": repr(e)})
+                if attempt < self.max_retries:
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
+        self._emit_metric(mf, {
+            "event": "cell_error", "cell": key.slug, "index": key.index,
+            "attempts": self.max_retries + 1, "error": repr(err)})
+        return None
+
     def run(self, max_cells: int | None = None) -> bool:
         """Execute remaining cells in order; True when the job is done.
 
-        Completed cells are loaded, not re-run; the streaming CSV and
-        ``metrics.jsonl`` are rewritten from their stored results
-        (byte-identical CSV — the cell npz files are the source of
-        truth) and then appended per fresh cell.  ``max_cells`` budgets
-        the number of *executed* cells before returning — the
-        controlled-interruption knob used by the resume tests and CI.
+        Completed cells are loaded (after sha256 verification — a
+        corrupt npz is quarantined and recomputed), not re-run; the
+        streaming CSV and ``metrics.jsonl`` are rewritten from their
+        stored results (byte-identical CSV — the cell npz files are the
+        source of truth) and then appended per fresh cell.  A cell whose
+        execution keeps failing is skipped after the retry budget (see
+        class docstring) — the job completes every other cell and
+        returns False.  ``max_cells`` budgets the number of *executed*
+        cells before returning — the controlled-interruption knob used
+        by the resume tests and CI.
         """
         executed = 0
+        failed = 0
         with self._lock:
             self._done, self._in_flight, self._walls = 0, None, []
         with open(self.csv_path, "w") as f, \
@@ -448,13 +562,21 @@ class CampaignJob:
             for key in self.cells:
                 path = self._cell_path(key)
                 if os.path.exists(path):
-                    self._append_csv(f, _load_outcome(path, key))
-                    with self._lock:
-                        self._done += 1
-                        done = self._done
-                    self._emit_metric(mf, self._cell_metric(
-                        key, done=done, cached=True, wall_s=0.0))
-                    continue
+                    cached = self._load_cell(key)
+                    if cached is not None:
+                        self._append_csv(f, cached)
+                        with self._lock:
+                            self._done += 1
+                            done = self._done
+                        self._emit_metric(mf, self._cell_metric(
+                            key, done=done, cached=True, wall_s=0.0))
+                        continue
+                    # corrupt: quarantined by _load_cell, recompute below
+                    self._emit_metric(mf, {
+                        "event": "cell_quarantined", "cell": key.slug,
+                        "index": key.index,
+                        "quarantine": os.path.join(
+                            "cells", "quarantine", f"{key.slug}.npz")})
                 if max_cells is not None and executed >= max_cells:
                     with self._lock:
                         done = self._done
@@ -465,8 +587,12 @@ class CampaignJob:
                 with self._lock:
                     self._in_flight = key.slug
                 ckpt = CellCheckpoint(self._ckpt_path(key))
-                outcome = self.executor.run_cell(
-                    key, checkpoint=ckpt if key.scen_i >= 0 else None)
+                outcome = self._run_cell_with_retry(key, ckpt, mf)
+                if outcome is None:     # poisoned: job completes the rest
+                    failed += 1
+                    with self._lock:
+                        self._in_flight = None
+                    continue
                 _save_outcome(path, outcome)
                 if outcome.telemetry is not None:
                     outcome.telemetry.save(self._tel_path(key))
@@ -482,10 +608,11 @@ class CampaignJob:
                     wall_s=outcome.wall_s))
                 self._append_csv(f, outcome)
             self._emit_metric(mf, {
-                "event": "job_done", "done": len(self.cells),
-                "total": len(self.cells), "executed": executed})
+                "event": "job_done", "done": len(self.cells) - failed,
+                "total": len(self.cells), "executed": executed,
+                "failed": failed})
         self.tracer.flush()
-        return True
+        return failed == 0
 
     # ------------------------------------------------------------- #
     def start(self, max_cells: int | None = None) -> "CampaignJob":

@@ -46,8 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bidor import BiDORTable, dor_table
+from repro.core.routes import dimension_orders, next_port_table
 from repro.core.topology import Topology
 from repro.obs.probe import Telemetry, resolved_epoch, telemetry_state
+from .watchdog import watchdog_state
 # Packed record layouts live in simconfig so the fused kernel package
 # (repro.kernels.simstep) can share them without importing this module.
 from .simconfig import (Algo, SimConfig, SimResult, NF, F_SRC, F_DST,
@@ -76,6 +78,7 @@ class _Tables(NamedTuple):
     chan_src_p: jnp.ndarray  # (C,) output port of each channel at its source
     chan_of: jnp.ndarray   # (N, P) int32: channel at (node, out-port); C if none
     chan_bw: jnp.ndarray   # (C,) float32 relative bandwidth (0 = link down)
+    esc_port: jnp.ndarray  # (N, N) int32: DOR escape table (watchdog recovery)
 
 
 def _gen_tables(topo: Topology, traffic) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -137,6 +140,11 @@ def build_tables(topo: Topology, traffic: np.ndarray,
         chan_src_p=jnp.asarray(topo.channel_port.astype(np.int32)),
         chan_of=jnp.asarray(chan_of),
         chan_bw=jnp.asarray(topo.channel_bw, jnp.float32),
+        # watchdog escape table: plain first-dimension-order DOR, built
+        # from the topology alone (never from the possibly-broken plan
+        # table) so it exists — and is acyclic — whatever was deployed
+        esc_port=jnp.asarray(next_port_table(
+            topo, dimension_orders(topo.ndim)[0]).astype(np.int32)),
     )
     meta = dict(N=n, P=p, V=v, NIN=nin, P_LOCAL=topo.port_local,
                 NDIM=topo.ndim, O=port.shape[0], C=topo.num_channels)
@@ -215,11 +223,14 @@ def fresh_state(meta: dict, cfg: SimConfig):
     b, q = cfg.buf_per_vc, cfg.src_queue_pkts
     i32 = jnp.int32
     z = functools.partial(jnp.zeros, dtype=i32)
-    # optional time-resolved probes (repro.obs.probe); {} when off, so a
-    # telemetry-free state pytree is unchanged key for key
+    # optional time-resolved probes (repro.obs.probe) and stall watchdog
+    # (repro.noc.watchdog); {} when off, so a probe-free state pytree is
+    # unchanged key for key
     tel = telemetry_state(meta, cfg)
+    wd = watchdog_state(meta, cfg)
     return dict(
         **tel,
+        **wd,
         # per-input-VC FIFOs: packed flit records (see NF layout above)
         flits=z((nin, b, NF)),
         fifo_start=z((nin,)), fifo_size=z((nin,)),
@@ -279,6 +290,7 @@ def _make_step(meta: dict, cfg: SimConfig):
     nin_arange = jnp.arange(nin)
     two_phase = algo in (Algo.VALIANT, Algo.ROMM)
     tel_epoch = resolved_epoch(cfg)  # 0 ⇔ telemetry off
+    watchdog = bool(cfg.watchdog)
 
     def fifo_push(state, idx, ok, records):
         """Append packed flit ``records`` (K, NF) to FIFOs ``idx`` where
@@ -358,6 +370,12 @@ def _make_step(meta: dict, cfg: SimConfig):
         u = jax.random.uniform(kg, (n,))
         gen = (u < (t.p_gen * (state["rate"] / l))) \
             & (cycle < state["inject_until"])
+        if watchdog:
+            # livelock throttle: mask generation at throttled sources —
+            # mask only, the RNG stream above is drawn unconditionally,
+            # so throttling never perturbs other sources' randomness
+            gen = gen & (state["wd_throttle"] <= 0)
+            state["wd_throttle"] = jnp.maximum(state["wd_throttle"] - 1, 0)
         ud = jax.random.uniform(kd, (n,))
         dst = jnp.clip((t.cdf <= ud[:, None]).sum(1), 0, n - 1).astype(jnp.int32)
         order, inter = gen_metadata(t, km, n_arange, dst)
@@ -462,6 +480,18 @@ def _make_step(meta: dict, cfg: SimConfig):
         ov = jnp.where(at_dest, 0, ov_route)
         op = jnp.where(locked, state["lock_op"], op)
         ov = jnp.where(locked, state["lock_ov"], ov)
+        if watchdog:
+            # deadlock escape: a head stalled past the threshold misroutes
+            # one hop via the acyclic DOR escape table ON THE HIGHEST VC
+            # (Duato-style escape lane — the wedged cycle holds the lower
+            # classes, so the escape hop has somewhere to drain to), then
+            # routes normally (body flits follow the head's locked
+            # port/VC; the escape still goes through eligibility + credit
+            # + allocation — a misroute, never a teleport)
+            esc = (state["wd_stall"] >= cfg.wd_stall_cycles) \
+                & valid & g["head"] & ~locked & ~at_dest
+            op = jnp.where(esc, t.esc_port[t.n_of, target], op)
+            ov = jnp.where(esc, v - 1, ov)
 
         # ---------------- 4. eligibility -------------------------------- #
         is_eject = op == p_local
@@ -547,6 +577,24 @@ def _make_step(meta: dict, cfg: SimConfig):
         hold_val = jnp.where(hold_set, grants, -1)
         state["out_held"] = jnp.where(vmask, hold_val[..., None],
                                       state["out_held"])
+        if watchdog:
+            # stall age: +1 per cycle an occupied input fails to move,
+            # reset on movement; deadlock trip counted exactly at the
+            # threshold crossing (once per stall episode)
+            new_stall = jnp.where(valid & ~popped, state["wd_stall"] + 1, 0)
+            state["wd_trips"] = state["wd_trips"].at[0].add(
+                (new_stall == cfg.wd_stall_cycles).sum())
+            state["wd_stall"] = new_stall
+            # livelock: a moved flit whose hop count passes the limit
+            # throttles its source (set, not add: re-trips re-arm it);
+            # trip counted once per flit at the exact crossing
+            hops_now = push_rec[..., F_HOPS]
+            lv = net & (hops_now > cfg.wd_hop_limit)
+            lv_src = jnp.where(lv, w_all[..., F_SRC], n)
+            state["wd_throttle"] = state["wd_throttle"].at[
+                lv_src.reshape(-1)].set(cfg.wd_throttle_cycles, mode="drop")
+            state["wd_trips"] = state["wd_trips"].at[1].add(
+                (net & (hops_now == cfg.wd_hop_limit + 1)).sum())
 
         # ---------------- 7. statistics --------------------------------- #
         state["node_fwd"] = state["node_fwd"] + jnp.where(
@@ -697,7 +745,10 @@ def _cfg_key(cfg: SimConfig) -> tuple:
         lat_bins=cfg.lat_bins, lat_bin_width=cfg.lat_bin_width,
         use_kernel=bool(cfg.use_kernel), telemetry=bool(cfg.telemetry),
         tel_epoch=cfg.tel_epoch, tel_slots=cfg.tel_slots,
-        tel_occ_bins=cfg.tel_occ_bins).items()))
+        tel_occ_bins=cfg.tel_occ_bins, watchdog=bool(cfg.watchdog),
+        wd_stall_cycles=cfg.wd_stall_cycles,
+        wd_hop_limit=cfg.wd_hop_limit,
+        wd_throttle_cycles=cfg.wd_throttle_cycles).items()))
 
 
 def get_runner(meta: dict, cfg: SimConfig, num_cycles: int, *,
@@ -840,7 +891,8 @@ def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
               rates: list[float],
               bidor_table: BiDORTable | None = None,
               seeds: list[int] | None = None, *,
-              return_telemetry: bool = False):
+              return_telemetry: bool = False,
+              return_watchdog: bool = False):
     """Run a batch of simulations over (rate, seed) points in ONE jitted,
     vmapped call.  Results are ordered rate-major: ``[(r, s) for r in
     rates for s in seeds]``; with ``seeds=None`` (default ``[cfg.seed]``)
@@ -848,7 +900,9 @@ def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
 
     ``return_telemetry=True`` returns ``(results, telemetry)`` instead —
     the lane-major :class:`repro.obs.probe.Telemetry` bundle (None when
-    ``cfg.telemetry`` is off)."""
+    ``cfg.telemetry`` is off).  ``return_watchdog=True`` appends the
+    all-lane :class:`repro.noc.watchdog.WatchdogReport` (None when
+    ``cfg.watchdog`` is off) as the trailing element."""
     table = None
     if cfg.algo == Algo.BIDOR:
         if bidor_table is None:
@@ -862,24 +916,34 @@ def run_sweep(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     results = [postprocess(jax.tree.map(lambda x: x[i], out), cfg, topo,
                            rate=r, seed=s)
                for i, (r, s) in enumerate(points)]
-    if not return_telemetry:
+    extras: list = []
+    if return_telemetry:
+        tel = Telemetry.from_state(out, cfg)
+        if tel is not None:
+            tel = tel.with_bw(static_bw_slots(topo, cfg))
+        extras.append(tel)
+    if return_watchdog:
+        from .watchdog import WatchdogReport
+        extras.append(WatchdogReport.from_state(out, cfg))
+    if not extras:
         return results
-    tel = Telemetry.from_state(out, cfg)
-    if tel is not None:
-        tel = tel.with_bw(static_bw_slots(topo, cfg))
-    return results, tel
+    return (results, *extras)
 
 
 def run_sim(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
             bidor_table: BiDORTable | None = None, *,
-            return_telemetry: bool = False):
+            return_telemetry: bool = False,
+            return_watchdog: bool = False):
     """Run one simulation and post-process statistics.  With
-    ``return_telemetry=True``, returns ``(SimResult, Telemetry | None)``."""
+    ``return_telemetry=True``, returns ``(SimResult, Telemetry | None)``;
+    with ``return_watchdog=True``, the
+    :class:`repro.noc.watchdog.WatchdogReport` (or None) is appended."""
     out = run_sweep(topo, traffic, cfg, [cfg.injection_rate],
-                    bidor_table, return_telemetry=return_telemetry)
-    if return_telemetry:
-        results, tel = out
-        return results[0], tel
+                    bidor_table, return_telemetry=return_telemetry,
+                    return_watchdog=return_watchdog)
+    if return_telemetry or return_watchdog:
+        results, *extras = out
+        return (results[0], *extras)
     return out[0]
 
 

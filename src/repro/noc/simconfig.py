@@ -79,6 +79,20 @@ class SimConfig:
     tel_epoch: int = 0
     tel_slots: int = 64
     tel_occ_bins: int = 16
+    # Runtime stall watchdog (repro.noc.watchdog): when on, per-input
+    # stall-age counters classify wedged heads as deadlocked past
+    # wd_stall_cycles (recovery: one escape hop via the DOR escape
+    # table) and runaway packets as livelocked past wd_hop_limit hops
+    # (recovery: mask the source's generation for wd_throttle_cycles).
+    # Off by default; when off, zero extra state and zero extra ops —
+    # results are bit-identical with or without this feature
+    # (tests/test_watchdog.py).  Unlike telemetry, the watchdog CHANGES
+    # results when on (escapes misroute, throttles shed), so these
+    # fields DO enter the service's spec fingerprint.
+    watchdog: bool = False
+    wd_stall_cycles: int = 64
+    wd_hop_limit: int = 64
+    wd_throttle_cycles: int = 32
 
     def __post_init__(self):
         if self.warmup + self.drain >= self.cycles:

@@ -1,0 +1,104 @@
+"""In-sim stall watchdog: deadlock/livelock detection + escape recovery.
+
+The static certifier (:mod:`repro.core.certify`) proves the *tables*
+deadlock-free, but the simulator also accepts hand-built tables, and a
+certifier bug — or a genuinely cyclic table pushed past the gate with
+``repair=False`` — would wedge a multi-million-cycle campaign silently.
+This module defines the optional runtime sentinel the per-cycle
+transition carries when ``SimConfig.watchdog`` is on:
+
+* ``wd_stall`` (NIN,) — per-input-VC stall age: +1 every cycle the
+  FIFO's head flit fails to move, reset on movement.  A head stalled
+  past ``wd_stall_cycles`` is classified **deadlocked** and recovers by
+  *escaping*: its next hop is routed via the always-built DOR escape
+  table (``_Tables.esc_port`` — plain first-dimension-order routing,
+  acyclic by the certifier's own argument), after which it routes
+  normally again (and re-escapes if it wedges again).  The escape hop
+  flows through the ordinary eligibility / credit / allocation pipeline,
+  so it is a *misroute*, never a teleport.
+* ``wd_throttle`` (N,) — per-source throttle: a moving flit whose hop
+  count exceeds ``wd_hop_limit`` is classified **livelocked** (it keeps
+  moving without arriving — the escape path can cause this by design),
+  and its source's packet generation is masked for
+  ``wd_throttle_cycles`` cycles.  Only the generation *mask* changes;
+  the RNG stream is untouched, so throttling never perturbs the random
+  sequence of other sources.
+* ``wd_trips`` (2,) — [deadlock trips, livelock trips]: exact
+  threshold-crossing counters (a stall episode or a runaway packet
+  counts once), the host-visible "the watchdog fired" signal.
+
+All of it is python-level gated on ``cfg.watchdog`` exactly like the
+telemetry probes (:mod:`repro.obs.probe`): when off, the state carries
+no ``wd_*`` keys and the step functions emit zero extra ops — results
+are bit-identical to a build without this module, on the unfused,
+fused-dense and Pallas-interpret paths (``tests/test_watchdog.py``).
+The fused kernel wrapper is generic over table fields and state keys,
+so there are zero Pallas-kernel changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["WD_KEYS", "watchdog_state", "WatchdogReport"]
+
+# Watchdog state keys, in the order fresh_state creates them.
+WD_KEYS = ("wd_stall", "wd_throttle", "wd_trips")
+
+
+def watchdog_state(meta: dict, cfg) -> dict:
+    """Fresh per-lane watchdog state ({} when the watchdog is off).
+
+    Mirrors :func:`repro.obs.probe.telemetry_state` so the kernel
+    package can size-budget the same arrays
+    (``repro.kernels.simstep.ops.state_footprint_bytes``)."""
+    if not getattr(cfg, "watchdog", False):
+        return {}
+    import jax.numpy as jnp
+    z = lambda shape: jnp.zeros(shape, jnp.int32)  # noqa: E731
+    return dict(
+        wd_stall=z((meta["NIN"],)),
+        wd_throttle=z((meta["N"],)),
+        wd_trips=z((2,)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogReport:
+    """Host-side watchdog summary for one cell (summed over lanes)."""
+
+    deadlock_trips: int
+    livelock_trips: int
+    stalled_inputs: int        # inputs at/over the stall threshold now
+    max_stall: int             # worst current stall age (cycles)
+    throttled_sources: int     # sources currently under throttle
+
+    @property
+    def tripped(self) -> bool:
+        return self.deadlock_trips > 0 or self.livelock_trips > 0
+
+    @classmethod
+    def from_state(cls, host_state: dict, cfg) -> "WatchdogReport | None":
+        """Build from a fetched state dict (with or without a leading
+        lane axis); None when the state carries no watchdog."""
+        if "wd_trips" not in host_state:
+            return None
+        trips = np.asarray(host_state["wd_trips"], np.int64).reshape(-1, 2)
+        stall = np.asarray(host_state["wd_stall"], np.int64)
+        throttle = np.asarray(host_state["wd_throttle"], np.int64)
+        return cls(
+            deadlock_trips=int(trips[:, 0].sum()),
+            livelock_trips=int(trips[:, 1].sum()),
+            stalled_inputs=int((stall >= int(cfg.wd_stall_cycles)).sum()),
+            max_stall=int(stall.max()) if stall.size else 0,
+            throttled_sources=int((throttle > 0).sum()))
+
+    def trace_args(self) -> dict:
+        """JSON-able summary for trace instants / metrics records."""
+        return {"deadlock_trips": self.deadlock_trips,
+                "livelock_trips": self.livelock_trips,
+                "stalled_inputs": self.stalled_inputs,
+                "max_stall": self.max_stall,
+                "throttled_sources": self.throttled_sources}

@@ -1,0 +1,203 @@
+"""Deadlock certifier: Tarjan vs brute-force oracle, zoo/fallback table
+certification, cyclic-fixture rejection + repair, certificate round-trip.
+
+Covers (ISSUE 8 satellite a):
+  * property test — the iterative-Tarjan cyclicity verdict agrees with an
+    independent brute-force DFS cycle enumeration on small random graphs
+    (via the ``_propcheck`` facade: Hypothesis when installed, else the
+    deterministic fallback sampler);
+  * every zoo plan table AND the control plane's DOR-only shed fallback
+    certify clean (verdict "clean", zero prohibited turns);
+  * a hand-built cyclic ring table is rejected with ``repair=False`` and
+    repaired (prohibitions + shed, re-verified acyclic) with the default;
+  * ``Certificate.as_arrays``/``from_arrays`` round-trips through the
+    plan-cache payload convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+from repro.core import (BiDORTable, build_plan_fast, cmesh, express_mesh,
+                        fault_region_mesh, mesh2d, torus, traffic)
+from repro.core.certify import (Certificate, CertificationError,
+                                apply_repair, build_cdg, certify_ports,
+                                certify_table, cyclic_scc_nodes,
+                                has_cycle_bruteforce)
+from repro.core.routes import dimension_orders, next_port_table
+
+ZOO = {
+    "mesh": lambda: mesh2d(4, 4),
+    "torus3d": lambda: torus(4, 4, 4),
+    "cmesh": lambda: cmesh(4, 4, concentration=4),
+    "express": lambda: express_mesh(6, 6, interval=2),
+    "fault_region": lambda: fault_region_mesh(6, 6, (2, 2, 3, 3)),
+}
+
+
+def _cyclic_ring_table(topo) -> BiDORTable:
+    """All traffic routed clockwise around the 2x2 ring 0→1→3→2→0 —
+    the canonical cyclic channel dependency."""
+    n = topo.num_nodes
+    ring = [0, 1, 3, 2]
+    nxt = {ring[i]: ring[(i + 1) % 4] for i in range(4)}
+    neigh = np.asarray(topo.neighbor_table)
+    p = neigh.shape[1]
+    pt = np.zeros((1, n, n), np.int8)
+    for cur in range(n):
+        for dst in range(n):
+            pt[0, cur, dst] = (
+                topo.port_local if cur == dst else
+                [k for k in range(p) if neigh[cur, k] == nxt[cur]][0])
+    return BiDORTable(choice=np.zeros((n, n), np.int8), orders=((0, 1),),
+                      costs=np.zeros((1, n, n), np.float32),
+                      port_tables=pt)
+
+
+# --------------------------------------------------------------------- #
+# Tarjan vs brute force (property test)
+# --------------------------------------------------------------------- #
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 24), st.floats(0.0, 0.35), st.integers(0, 10_000))
+def test_scc_cyclicity_matches_bruteforce(num_nodes, density, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.random((num_nodes, num_nodes)) < density
+    edges = np.argwhere(m).astype(np.int64)
+    tarjan = bool(cyclic_scc_nodes(num_nodes, edges).any())
+    brute = has_cycle_bruteforce(num_nodes, edges)
+    assert tarjan == brute, (num_nodes, seed, edges.tolist())
+
+
+def test_scc_marks_exactly_the_cycle_nodes():
+    # 0→1→2→0 cycle plus a 3→0 tail and an isolated 4
+    edges = np.array([[0, 1], [1, 2], [2, 0], [3, 0]], np.int64)
+    cyc = cyclic_scc_nodes(5, edges)
+    assert cyc.tolist() == [True, True, True, False, False]
+    assert has_cycle_bruteforce(5, edges)
+
+
+def test_self_loop_is_cyclic():
+    edges = np.array([[2, 2]], np.int64)
+    assert cyclic_scc_nodes(3, edges)[2]
+    assert has_cycle_bruteforce(3, edges)
+
+
+def test_empty_graph_is_clean():
+    edges = np.zeros((0, 2), np.int64)
+    assert not cyclic_scc_nodes(4, edges).any()
+    assert not has_cycle_bruteforce(4, edges)
+
+
+# --------------------------------------------------------------------- #
+# real plan tables certify clean
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_plan_tables_certify_clean(name):
+    topo = ZOO[name]()
+    plan = build_plan_fast(topo, traffic.uniform(topo))
+    cert = certify_table(topo, plan.table, traffic=plan.traffic,
+                        w_nr=plan.nrank.w_nr)
+    assert cert.ok, f"{name}: {cert.verdict}"
+    assert cert.verdict == "clean"
+    assert cert.prohibited_turns.shape[0] == 0
+    assert cert.cdg_edges > 0          # the CDG is not vacuous
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_dor_fallback_tables_certify_clean(name):
+    """The control plane's escape/fallback: plain DOR under every order
+    must be acyclic on every zoo topology (incl. wrap datelines)."""
+    topo = ZOO[name]()
+    n = topo.num_nodes
+    for order in dimension_orders(topo.ndim):
+        pt = next_port_table(topo, order).astype(np.int8)[None]
+        cert = certify_ports(topo, pt, np.zeros((n, n), np.int8),
+                             repair=False)
+        assert cert.ok, f"{name} DOR{order}: {cert.verdict}"
+
+
+def test_gated_plan_carries_clean_certificate():
+    topo = mesh2d(4, 4)
+    plan = build_plan_fast(topo, traffic.uniform(topo))
+    assert plan.cert is not None and plan.cert.verdict == "clean"
+
+
+# --------------------------------------------------------------------- #
+# cyclic fixture: rejection and repair
+# --------------------------------------------------------------------- #
+def test_cyclic_table_rejected_without_repair():
+    topo = mesh2d(2, 2)
+    table = _cyclic_ring_table(topo)
+    cert = certify_table(topo, table, repair=False)
+    assert not cert.ok and cert.verdict == "rejected"
+    assert cert.cyclic_nodes >= 4      # the whole ring participates
+
+
+def test_cyclic_table_repaired_and_reverified():
+    topo = mesh2d(2, 2)
+    table = _cyclic_ring_table(topo)
+    cert = certify_table(topo, table)
+    assert cert.ok and cert.verdict == "repaired"
+    assert cert.prohibited_turns.shape[0] >= 1
+    repaired = apply_repair(table, cert)
+    assert repaired.unroutable is not None and repaired.unroutable.any()
+    # the repaired artifact certifies clean on its own
+    cert2 = certify_table(topo, repaired, repair=False)
+    assert cert2.ok and cert2.verdict == "clean"
+
+
+def test_gate_raises_on_unrepairable():
+    """certify_ports with repair budget 0 must refuse, not pass."""
+    topo = mesh2d(2, 2)
+    table = _cyclic_ring_table(topo)
+    cert = certify_ports(topo, table.port_tables, table.choice,
+                         repair=True, max_repair_rounds=0)
+    assert not cert.ok and cert.verdict == "rejected"
+    with pytest.raises(ValueError):
+        apply_repair(table, cert)
+
+
+# --------------------------------------------------------------------- #
+# certificate round-trip (the plan-cache payload convention)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("fixture", ["clean", "repaired"])
+def test_certificate_round_trip(fixture):
+    if fixture == "clean":
+        topo = mesh2d(3, 3)
+        plan = build_plan_fast(topo, traffic.uniform(topo))
+        cert = plan.cert
+    else:
+        topo = mesh2d(2, 2)
+        cert = certify_table(topo, _cyclic_ring_table(topo))
+    arrays = cert.as_arrays()
+    back = Certificate.from_arrays(arrays)
+    assert back is not None
+    assert back.verdict == cert.verdict
+    assert back.cdg_nodes == cert.cdg_nodes
+    assert back.cdg_edges == cert.cdg_edges
+    assert np.array_equal(back.prohibited_turns, cert.prohibited_turns)
+    assert (back.choice is None) == (cert.choice is None)
+    if cert.choice is not None:
+        assert np.array_equal(back.choice, cert.choice)
+    if cert.shed is not None:
+        assert np.array_equal(back.shed, cert.shed)
+    # absent payload ⇒ None (pre-certifier cache entries)
+    assert Certificate.from_arrays({}) is None
+
+
+def test_build_cdg_counts_real_dependencies():
+    """Adjacent-channel turns of a straight XY route appear as edges."""
+    topo = mesh2d(3, 3)
+    pt = next_port_table(topo, (0, 1)).astype(np.int8)[None]
+    n = topo.num_nodes
+    edges, weights, invalid = build_cdg(
+        topo, pt, np.zeros((n, n), np.int8))
+    assert not invalid.any()
+    assert edges.shape[0] > 0 and weights.shape[0] == edges.shape[0]
+    num_cdg_nodes = 2 * pt.shape[0] * topo.num_channels
+    assert not cyclic_scc_nodes(num_cdg_nodes, edges).any()

@@ -1,0 +1,244 @@
+"""Chaos schedules and the control plane's safety rails under them.
+
+Covers (ISSUE 8 tentpole layer 3 + satellites b/c):
+
+* :mod:`repro.noc.chaos` — seeded compound schedules are deterministic
+  (same seed ⇒ identical events), always satisfy the ``Scenario``
+  ordering contract, and compose the documented patterns (flap storms,
+  region failures one epoch behind a drift, hotspot drifts);
+* the hot-swap guard — a replan whose shed fraction exceeds
+  ``ReplanConfig.max_shed`` is REJECTED: the previous certified table
+  stays installed and no ``Replan`` is recorded (the silent-wedge fix);
+* two disjoint dark regions — conservation holds on every lane and the
+  recorded shed accounting matches ``BiDORTable.unroutable`` exactly,
+  which itself matches an independent per-order route-feasibility walk.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import build_plan, mesh2d, traffic
+from repro.core.bidor import route_feasibility
+from repro.core.routes import dimension_orders
+from repro.noc import (Algo, ChaosConfig, LinkFail, LinkRecover,
+                       ReplanConfig, Scenario, SimConfig, TrafficDrift,
+                       chaos_scenarios, chaos_schedule, hotspot_traffic,
+                       region_links, run_controlled)
+from repro.noc.ctrl import replan
+
+TOPO = mesh2d(4, 4)
+UNI = traffic.uniform(TOPO)
+CFG = SimConfig(algo=Algo.BIDOR, cycles=3000, warmup=500,
+                injection_rate=0.35)
+PLAN = build_plan(TOPO, UNI)
+
+
+def _event_tuple(ev):
+    d = {"kind": type(ev).__name__, "cycle": int(ev.cycle)}
+    if hasattr(ev, "links"):
+        d["links"] = tuple(map(tuple, ev.links))
+    if hasattr(ev, "bw_scale"):
+        d["bw_scale"] = float(ev.bw_scale)
+    if hasattr(ev, "traffic"):
+        d["traffic"] = np.asarray(ev.traffic).tobytes()
+    if hasattr(ev, "rate_scale"):
+        d["rate_scale"] = float(ev.rate_scale)
+    return tuple(sorted(d.items()))
+
+
+# --------------------------------------------------------------------- #
+# schedule generation
+# --------------------------------------------------------------------- #
+def test_chaos_schedule_is_deterministic_per_seed():
+    cc = ChaosConfig(seed=7)
+    a = chaos_schedule(TOPO, cc)
+    b = chaos_schedule(TOPO, cc)
+    assert a.name == b.name == "chaos-s7"
+    assert [_event_tuple(e) for e in a.events] \
+        == [_event_tuple(e) for e in b.events]
+    c = chaos_schedule(TOPO, dataclasses.replace(cc, seed=8))
+    assert [_event_tuple(e) for e in a.events] \
+        != [_event_tuple(e) for e in c.events]
+
+
+@pytest.mark.parametrize("cc", [
+    ChaosConfig(),
+    ChaosConfig(seed=3, flap_storms=0, region_failures=2),
+    ChaosConfig(seed=4, drift_events=0, flap_bursts=5, flap_period=90),
+    ChaosConfig(seed=5, start=100, horizon=700),   # tight window
+    ChaosConfig(seed=6, flap_storms=4, region_failures=0,
+                drift_events=3, bw_scale=0.25),
+])
+def test_chaos_schedule_satisfies_scenario_contract(cc):
+    """Scenario.__post_init__ enforces sortedness and cycle >= 1; every
+    config shape must construct, with all cycles inside the window."""
+    scen = chaos_schedule(TOPO, cc)       # would raise on a violation
+    cycles = [e.cycle for e in scen.events]
+    assert cycles == sorted(cycles)
+    assert all(1 <= c < cc.horizon for c in cycles)
+    fails = sum(isinstance(e, LinkFail) for e in scen.events)
+    recs = sum(isinstance(e, LinkRecover) for e in scen.events)
+    drifts = sum(isinstance(e, TrafficDrift) for e in scen.events)
+    assert fails >= recs                  # every recover had a fail
+    assert drifts <= cc.drift_events
+    assert scen.policy == "online" and scen.replan is None
+
+
+def test_chaos_schedule_composes_the_documented_patterns():
+    rc = ReplanConfig(epoch=400)
+    cc = ChaosConfig(seed=1, flap_storms=1, flap_links=2, flap_bursts=2,
+                     region_failures=1, region_radius=1, drift_events=1)
+    scen = chaos_schedule(TOPO, cc, policy="oracle", replan=rc)
+    assert scen.replan is rc and scen.policy == "oracle"
+    flaps = [e for e in scen.events if isinstance(e, LinkFail)
+             and len(e.links) == 2 * cc.flap_links]
+    assert len(flaps) == cc.flap_bursts
+    # every flap burst fails both directions of each picked link
+    for f in flaps:
+        pairs = set(map(tuple, f.links))
+        assert all((v, u) in pairs for (u, v) in pairs)
+    # the region failure is the remaining LinkFail: a radius-1 region on
+    # a 4x4 mesh has far more incident channels than a 2-link flap
+    regions = [e for e in scen.events if isinstance(e, LinkFail)
+               and len(e.links) > 2 * cc.flap_links]
+    assert len(regions) == cc.region_failures
+    drift = next(e for e in scen.events if isinstance(e, TrafficDrift))
+    assert np.isclose(drift.traffic.sum(), 1.0)
+    assert (np.diag(drift.traffic) == 0).all()
+
+
+def test_chaos_scenarios_one_per_seed():
+    scens = chaos_scenarios(TOPO, [0, 1, 2])
+    assert [s.name for s in scens] == ["chaos-s0", "chaos-s1", "chaos-s2"]
+    assert [_event_tuple(e) for e in scens[0].events] \
+        != [_event_tuple(e) for e in scens[1].events]
+
+
+def test_region_links_covers_the_chebyshev_region_both_directions():
+    links = region_links(TOPO, center=5, radius=1)
+    coords = np.asarray(TOPO.coords)
+    region = {i for i in range(TOPO.num_nodes)
+              if np.abs(coords[i] - coords[5]).max() <= 1}
+    assert len(region) == 9               # full 3x3 block around (1,1)
+    for (u, v) in links:
+        assert u in region or v in region
+        assert (v, u) in links            # fully dark, both directions
+    # every channel incident to the region is present
+    expect = {(u, v) for (u, v) in TOPO.chan_id
+              if u in region or v in region}
+    assert set(links) == expect
+
+
+def test_hotspot_traffic_is_a_valid_matrix():
+    rng = np.random.default_rng(0)
+    m = hotspot_traffic(16, rng, hotspots=3, weight=9.0)
+    assert m.shape == (16, 16)
+    assert np.isclose(m.sum(), 1.0)
+    assert (np.diag(m) == 0).all()
+    hot = np.argsort(m.sum(axis=0))[-3:]
+    cold = np.argsort(m.sum(axis=0))[:3]
+    assert m.sum(axis=0)[hot].min() > 5 * m.sum(axis=0)[cold].max()
+
+
+# --------------------------------------------------------------------- #
+# hot-swap guard (satellite b: the silent-wedge fix)
+# --------------------------------------------------------------------- #
+def test_hot_swap_guard_rejects_mostly_shed_emergency_table():
+    """A radius-1 region loss sheds most demanded pairs.  With a tight
+    ``max_shed`` the emergency replan must be REJECTED — previous table
+    kept, no Replan recorded — while a permissive guard installs it.
+    Flits are conserved either way."""
+    dark = (LinkFail(cycle=1000, links=region_links(TOPO, 5, 1),
+                     bw_scale=0.0),)
+    guarded = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("dark", events=dark, policy="online",
+                 replan=ReplanConfig(epoch=500, max_shed=0.05)),
+        bidor_table=PLAN.table)
+    assert guarded.replans == []          # rejected, old table kept
+    permissive = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("dark", events=dark, policy="online",
+                 replan=ReplanConfig(epoch=500, max_shed=0.95)),
+        bidor_table=PLAN.table)
+    assert permissive.replans
+    assert permissive.replans[0].unroutable_pairs > 0
+    for res in (guarded, permissive):
+        r = res.results[0]
+        assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+        assert r.ejected_flits > 0
+
+
+def test_hot_swap_guard_does_not_block_moderate_sheds():
+    """The guard is a backstop, not a brake: a single dead link (small
+    shed fraction) replans normally under the default max_shed."""
+    fail = (LinkFail(cycle=1000, links=((5, 6), (6, 5)), bw_scale=0.0),)
+    res = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("hard", events=fail, policy="online",
+                 replan=ReplanConfig(epoch=500)),
+        bidor_table=PLAN.table)
+    assert res.replans and res.replans[0].unroutable_pairs > 0
+
+
+# --------------------------------------------------------------------- #
+# two disjoint dark regions (satellite c: shed accounting)
+# --------------------------------------------------------------------- #
+def test_two_disjoint_regions_conserve_and_shed_exactly():
+    """Fail two disjoint single-node regions (opposite corners) in
+    sequence; every lane conserves flits, and the final replan's shed
+    count equals BiDORTable.unroutable from an identical offline replan
+    — which itself equals the independent route-feasibility walk."""
+    regions = (region_links(TOPO, 0, 0), region_links(TOPO, 15, 0))
+    assert not (set(regions[0]) & set(regions[1]))   # genuinely disjoint
+    ev = (LinkFail(cycle=1000, links=regions[0], bw_scale=0.0),
+          LinkFail(cycle=1800, links=regions[1], bw_scale=0.0))
+    res = run_controlled(
+        TOPO, UNI, CFG,
+        Scenario("2regions", events=ev, policy="oracle",
+                 replan=ReplanConfig(epoch=400, max_shed=0.9)),
+        rates=[0.2, 0.35], seeds=[0, 1], bidor_table=PLAN.table)
+    assert [r.cycle for r in res.replans] == [1000, 1800]
+    for r in res.results:
+        assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+        assert r.ejected_flits > 0
+
+    # offline replan against the same degraded bandwidth vector
+    down = np.array(sorted(TOPO.chan_id[(u, v)]
+                           for reg in regions for (u, v) in reg))
+    bw = np.asarray(TOPO.channel_bw, np.float64).copy()
+    bw[down] = 0.0
+    table, _ = replan(TOPO, UNI, bw, None)
+    assert table.unroutable is not None
+    assert res.replans[-1].unroutable_pairs == int(table.unroutable.sum())
+
+    # and the mask is exactly the pairs no dimension order can serve
+    feas = route_feasibility(TOPO, dimension_orders(TOPO.ndim), down)
+    expect = ~feas.any(axis=0)
+    np.fill_diagonal(expect, False)
+    assert np.array_equal(table.unroutable, expect)
+    # both dark nodes are fully cut off, in both directions
+    assert expect[0, 1:].all() and expect[1:, 0].all()
+    assert expect[15, :15].all() and expect[:15, 15].all()
+
+
+# --------------------------------------------------------------------- #
+# chaos end to end through the control loop
+# --------------------------------------------------------------------- #
+def test_chaos_schedule_runs_through_the_control_loop():
+    """A compact storm (flaps + drift + region loss) through the online
+    policy with the watchdog armed: the run completes, conserves flits,
+    and keeps delivering."""
+    cc = ChaosConfig(seed=2, start=600, horizon=2600, flap_storms=1,
+                     flap_links=2, flap_bursts=2, flap_period=200,
+                     region_failures=1, region_radius=1, drift_events=1)
+    rc = ReplanConfig(epoch=400, max_shed=0.5)
+    scen = chaos_schedule(TOPO, cc, replan=rc)
+    cfg = CFG.replace(watchdog=True)
+    res = run_controlled(TOPO, UNI, cfg, scen, bidor_table=PLAN.table)
+    r = res.results[0]
+    assert r.injected_flits == r.ejected_flits + r.in_flight_flits
+    assert r.ejected_flits > 0
+    assert res.watchdog is not None       # armed and reported

@@ -344,20 +344,134 @@ def test_status_is_live_and_safe_during_background_run(tmp_path):
     job.start()
     assert job.wait().complete
 
-    # error path: a failing cell surfaces in status() and re-raises
+    # error path: a persistently failing cell is isolated — the run
+    # loop exhausts its retry budget, records cell_error, and the job
+    # finishes (incomplete, not crashed); wait() does NOT re-raise
     boom = CampaignJob(_spec(rates=(0.2,)), root=str(tmp_path),
-                       job_id="boom")
+                       job_id="boom", max_retries=0)
 
     def explode(key, checkpoint=None):
         raise RuntimeError("cell exploded")
 
     boom.executor.run_cell = explode
     boom.start()
-    with pytest.raises(RuntimeError, match="cell exploded"):
-        boom.wait()
-    st = boom.status()
-    assert st.error is not None and "cell exploded" in st.error
+    st = boom.wait()
     assert not st.running and not st.complete
+    assert st.done_cells == 0
+    errs = [r for r in _metrics(boom) if r["event"] == "cell_error"]
+    assert len(errs) == len(boom.cells)
+    assert all("cell exploded" in r["error"] for r in errs)
+
+    # run()-level failures (not cell execution) still re-raise
+    crash = CampaignJob(_spec(rates=(0.2,)), root=str(tmp_path),
+                        job_id="crash")
+    crash._run_cell_with_retry = None      # type: ignore[assignment]
+    crash.start()
+    with pytest.raises(TypeError):
+        crash.wait()
+    st = crash.status()
+    assert st.error is not None and not st.running
+
+
+# ------------------------------------------------------------------ #
+# chaos hardening: corrupt checkpoints, poisoned cells
+# ------------------------------------------------------------------ #
+def test_corrupt_cell_npz_quarantined_and_recomputed(tmp_path):
+    """Truncate a completed cell's npz: the resume must detect it via
+    the sha256 sidecar, move it to cells/quarantine/, record the event,
+    recompute the cell, and still emit a byte-identical CSV."""
+    import os
+
+    spec = _spec()
+    root = str(tmp_path)
+    res, job = run_campaign_service(spec, root=root, job_id="q")
+    with open(job.csv_path, "rb") as f:
+        ref_csv = f.read()
+    victim = job.cells[1]
+    path = job._cell_path(victim)
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+
+    res2, job2 = run_campaign_service(spec, root=root, job_id="q")
+    assert res2 is not None
+    m = _metrics(job2)
+    quar = [r for r in m if r["event"] == "cell_quarantined"]
+    assert [r["cell"] for r in quar] == [victim.slug]
+    assert os.path.exists(
+        os.path.join(job2.quarantine_dir, f"{victim.slug}.npz"))
+    # the recomputed cell re-verifies; results and CSV are unchanged
+    with open(job2.csv_path, "rb") as f:
+        assert f.read() == ref_csv
+    _assert_points_identical(res.points, res2.points)
+    # a third run is clean: no quarantine events, everything cached
+    res3, job3 = run_campaign_service(spec, root=root, job_id="q")
+    m3 = _metrics(job3)
+    assert not [r for r in m3 if r["event"] == "cell_quarantined"]
+    assert all(r["cached"] for r in m3 if r["event"] == "cell")
+
+
+def test_poisoned_cell_is_isolated_and_resume_completes(tmp_path):
+    """One persistently failing cell: bounded retries with the error in
+    metrics.jsonl, every other cell completes, and an un-poisoned
+    resume finishes the job byte-identically to a clean reference."""
+    spec = _spec()
+    root = str(tmp_path)
+    _, ref_job = run_campaign_service(spec, root=root, job_id="ref")
+
+    job = CampaignJob(spec, root=root, job_id="p", max_retries=1,
+                      retry_backoff_s=0.0)
+    victim = job.cells[0].slug
+    real = job.executor.run_cell
+
+    def flaky(key, checkpoint=None):
+        if key.slug == victim:
+            raise RuntimeError("poisoned cell")
+        return real(key, checkpoint=checkpoint)
+
+    job.executor.run_cell = flaky
+    assert job.run() is False             # incomplete, not crashed
+    m = _metrics(job)
+    retries = [r for r in m if r["event"] == "cell_retry"]
+    assert len(retries) == 2              # max_retries + 1 attempts
+    assert all(r["cell"] == victim and "poisoned" in r["error"]
+               for r in retries)
+    errs = [r for r in m if r["event"] == "cell_error"]
+    assert [r["cell"] for r in errs] == [victim]
+    assert m[-1]["event"] == "job_done"
+    assert m[-1]["failed"] == 1
+    assert m[-1]["done"] == len(job.cells) - 1
+    done = {k.slug for k in job.completed_cells()}
+    assert done == {k.slug for k in job.cells} - {victim}
+
+    res, job2 = run_campaign_service(spec, root=root, job_id="p")
+    assert res is not None
+    with open(job2.csv_path, "rb") as a, \
+            open(ref_job.csv_path, "rb") as b:
+        assert a.read() == b.read()
+
+
+def test_cell_checkpoint_corruption_sets_aside_and_restarts(tmp_path):
+    """A mid-cell snapshot that fails its sha256 (or fails to parse) is
+    *no checkpoint*: set aside as .corrupt, load() returns None, and the
+    cell restarts from cycle 0 — slower, never wrong."""
+    import os
+
+    ck = CellCheckpoint(str(tmp_path / "c.npz"))
+    ck.save({"a": np.arange(3)}, {"cycle": 7})
+    assert os.path.exists(ck.path + ".sha256")
+    arrays, meta = ck.load()
+    assert meta == {"cycle": 7} and np.array_equal(arrays["a"],
+                                                   np.arange(3))
+    with open(ck.path, "r+b") as f:
+        f.write(b"xx")
+    assert ck.load() is None
+    assert os.path.exists(ck.path + ".corrupt")
+    assert not os.path.exists(ck.path)
+    assert not os.path.exists(ck.path + ".sha256")
+    assert ck.load() is None              # stays gone
+    ck.clear()                            # idempotent on the empty state
 
 
 def test_job_trace_records_cells_and_is_perfetto_parseable(tmp_path):
