@@ -1,18 +1,25 @@
-"""Q-StaR scheduling a MoE expert all-to-all on the TPU ICI fabric.
+"""Q-StaR scheduling collective traffic on the TPU ICI fabric.
 
     PYTHONPATH=src python examples/qstar_ici_demo.py [pod_side]
+    PYTHONPATH=src python examples/qstar_ici_demo.py --ml qwen2-moe-a2.7b
 
 1. Models a pod's ICI torus (default 16×16) as a Q-StaR topology.
-2. Builds the traffic matrix of an expert-parallel all-to-all with hot
-   experts (skewed routing) via ``repro.core.traffic.alltoall``.
+2. Builds a traffic matrix — either the synthetic expert-parallel
+   all-to-all with hot experts (``repro.core.traffic.alltoall``), or,
+   with ``--ml ARCH``, the REAL collective flows of a sharded model:
+   the arch's smoke config is lowered under a 1×8 mesh, its post-SPMD
+   HLO collectives extracted and embedded onto the torus
+   (``repro.noc.mltraffic``).
 3. Runs N-Rank → BiDOR → BiDOR-G offline and reports the max-link-load
-   (collective completion-time bound) improvements.
+   (collective completion-time bound) improvements.  BiDOR-G is seeded
+   from the better of the planned table and plain XY, so it never loses
+   to DOR — on real ML matrices the plain BiDOR table alone can.
 4. Shows the quasi-static control plane reacting to an ICI link that
    retrains at reduced width: the re-planner rebuilds the tables against
    the degraded fabric and cuts the new bottleneck.
 """
 
-import sys
+import argparse
 
 import numpy as np
 
@@ -26,17 +33,39 @@ def _loads(topo, t, table):
     return s["max"], s["cv"]
 
 
-def main(side: int = 16, greedy_sweeps: int = 3):
+def _ml_matrix(topo, arch: str, phases: tuple[str, ...]):
+    """HLO-derived collective flows of ``arch`` embedded onto ``topo``."""
+    from repro.noc import WorkloadSpec, derive_workload
+
+    pad = 8 if "moe" in arch or arch.startswith("dbrx") else 0
+    spec = WorkloadSpec(arch=arch, data=1, model=8, moe_pad_to=pad,
+                        phases=phases)
+    wl = derive_workload(spec)
+    print(f"derived {wl.name}: phases {'+'.join(phases)}, "
+          f"{sum(wl.meta.get('collective_op_counts', {}).values())} "
+          f"collective ops in HLO")
+    return wl.matrix_for(topo)
+
+
+def main(side: int = 16, greedy_sweeps: int = 3, ml_arch: str | None = None,
+         phases: tuple[str, ...] = ("decode",)):
     topo = torus(side, side)               # one pod's ICI fabric
     n = topo.num_nodes
-    rng = np.random.default_rng(0)
-    skew = np.ones(n)
-    skew[rng.choice(n, max(n // 10, 1), replace=False)] = 5.0  # hot experts
-    t = traffic.alltoall(topo, skew=skew)
+    if ml_arch:
+        t = _ml_matrix(topo, ml_arch, phases)
+    else:
+        rng = np.random.default_rng(0)
+        skew = np.ones(n)
+        # hot experts
+        skew[rng.choice(n, max(n // 10, 1), replace=False)] = 5.0
+        t = traffic.alltoall(topo, skew=skew)
 
     xy = bidor(topo, np.zeros(n))              # baseline: all-XY routing
     plan = build_plan(topo, t)                 # paper-faithful Q-StaR
-    tab_g = greedy_refine(topo, t, plan.table,
+    mx_plan, _ = _loads(topo, t, plan.table)
+    mx_xy, _ = _loads(topo, t, xy)
+    start = plan.table if mx_plan <= mx_xy else xy
+    tab_g = greedy_refine(topo, t, start,
                           sweeps=greedy_sweeps)  # beyond-paper BiDOR-G
 
     for name, table in [("XY (DOR)", xy), ("Q-StaR BiDOR", plan.table),
@@ -62,4 +91,18 @@ def main(side: int = 16, greedy_sweeps: int = 3):
 
 
 if __name__ == "__main__":
-    main(int(sys.argv[1]) if len(sys.argv) > 1 else 16)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("side", nargs="?", type=int, default=16,
+                    help="pod side: the ICI fabric is a side x side torus")
+    ap.add_argument("--sweeps", type=int, default=3,
+                    help="BiDOR-G greedy refinement sweeps")
+    ap.add_argument("--ml", default=None, metavar="ARCH",
+                    help="derive the traffic from this arch's sharded "
+                         "HLO instead of the synthetic all-to-all "
+                         "(e.g. qwen2-moe-a2.7b)")
+    ap.add_argument("--phases", default="decode",
+                    help="comma-separated phases for --ml "
+                         "(fwd,train,decode)")
+    args = ap.parse_args()
+    main(side=args.side, greedy_sweeps=args.sweeps, ml_arch=args.ml,
+         phases=tuple(args.phases.split(",")))

@@ -14,13 +14,13 @@ from repro.models import registry
 from repro.serve import ServeEngine
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=24)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch).smoke   # reduced config runs on CPU
     params = registry.init(cfg, jax.random.PRNGKey(0))

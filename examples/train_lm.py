@@ -9,10 +9,8 @@ Kill it mid-run and start it again: it resumes from the last checkpoint.
 """
 
 import argparse
-import time
 
 import jax
-import numpy as np
 
 from repro.models.common import ModelConfig
 from repro.train.checkpoint import CheckpointManager
@@ -23,6 +21,11 @@ from repro.train.optimizer import OptConfig
 from repro.train.train_step import init_train_state, make_train_step
 
 PRESETS = {
+    # ~100K — CI smoke scale (tests/test_examples_smoke.py)
+    "tiny": ModelConfig(name="lmtiny", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab=512, dtype="float32", remat=False,
+                        attn_q_chunk=32, attn_kv_chunk=32),
     # ~10M — fast on CPU
     "10m": ModelConfig(name="lm10m", family="dense", n_layers=4,
                        d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
@@ -36,7 +39,7 @@ PRESETS = {
 }
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="10m", choices=sorted(PRESETS))
     ap.add_argument("--steps", type=int, default=200)
@@ -44,7 +47,7 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = PRESETS[args.preset]
     from repro.models import registry

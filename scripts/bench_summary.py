@@ -1,0 +1,61 @@
+"""Render ``benchmarks.run --json`` outputs as a GitHub step-summary table.
+
+CI runs each budget-guarded stage with ``--json artifacts/bench/<name>_stage.json``
+and then appends this script's stdout to ``$GITHUB_STEP_SUMMARY``:
+
+    python scripts/bench_summary.py artifacts/bench/*_stage.json >> "$GITHUB_STEP_SUMMARY"
+
+Missing or unparseable files are reported as rows rather than crashing the
+step — the summary must render even when an earlier stage failed.
+"""
+
+import json
+import sys
+
+
+def _fmt_metrics(metrics):
+    if not metrics:
+        return ""
+    parts = []
+    for key in sorted(metrics):
+        val = metrics[key]
+        if isinstance(val, float):
+            val = f"{val:g}"
+        parts.append(f"{key}={val}")
+    return ", ".join(parts)
+
+
+def rows_from_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [(path, "ERROR", "", f"unreadable: {e}")]
+    out = []
+    for rec in doc.get("stages", []):
+        status = "pass" if rec.get("ok") else "FAIL"
+        wall = f"{rec.get('wall_s', 0):.1f}"
+        detail = rec.get("error") or _fmt_metrics(rec.get("metrics"))
+        out.append((rec.get("stage", "?"), status, wall, detail))
+    return out
+
+
+def main(argv=None):
+    paths = argv if argv is not None else sys.argv[1:]
+    print("## Benchmark ledger")
+    print()
+    print("| stage | status | wall (s) | metrics |")
+    print("|---|---|---|---|")
+    rows = []
+    for path in paths:
+        rows.extend(rows_from_file(path))
+    if not rows:
+        rows = [("(no stage JSON found)", "", "", "")]
+    for stage, status, wall, detail in rows:
+        icon = {"pass": "✅ pass", "FAIL": "❌ FAIL"}.get(status, status)
+        print(f"| {stage} | {icon} | {wall} | {detail} |")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -167,6 +167,59 @@ def _group_size(attrs: str, default: int) -> int:
     return default
 
 
+def parse_replica_groups(attrs: str,
+                         num_devices: int) -> tuple[tuple[int, ...], ...]:
+    """Expand ``replica_groups`` to explicit device-id groups.
+
+    Handles both printed forms:
+
+    * iota form ``[G,S]<=[d0,d1,...]`` with an optional transpose
+      ``T(p0,p1,...)`` — ``arange(prod(dims)).reshape(dims)``, transposed,
+      then reshaped to (G, S) row groups;
+    * explicit form ``{{0,1},{2,3}}``.
+
+    An op with no ``replica_groups`` attribute (or an empty ``{}``)
+    addresses every device: one group of ``range(num_devices)``.
+    """
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?",
+        attrs)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = list(range(math.prod(dims)))
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            import numpy as _np
+            ids = list(_np.arange(math.prod(dims)).reshape(dims)
+                       .transpose(perm).reshape(-1))
+        return tuple(tuple(int(ids[r * s + c]) for c in range(s))
+                     for r in range(g))
+    m = re.search(r"replica_groups=\{(\{[0-9, ]*\}(?:,\s*\{[0-9, ]*\})*)\}",
+                  attrs)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([0-9, ]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids:
+                groups.append(tuple(ids))
+        if groups:
+            return tuple(groups)
+    return (tuple(range(num_devices)),)
+
+
+def parse_source_target_pairs(attrs: str) -> tuple[tuple[int, int], ...]:
+    """``source_target_pairs={{0,1},{1,2}}`` → ((0, 1), (1, 2))."""
+    m = re.search(
+        r"source_target_pairs=\{(\{\d+,\s*\d+\}(?:,\s*\{\d+,\s*\d+\})*)\}",
+        attrs)
+    if not m:
+        return ()
+    return tuple(
+        (int(a), int(b))
+        for a, b in re.findall(r"\{(\d+),\s*(\d+)\}", m.group(1)))
+
+
 _SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "bitcast", "after-all", "iota", "broadcast", "reshape",
              "transpose", "convert", "partition-id", "replica-id",
@@ -352,6 +405,129 @@ def _dus_update_bytes(fused: "Computation") -> float:
                         fused.instructions[upd].result_type)
             return _shape_bytes(ins.result_type)
     return 0.0
+
+
+# ---------------------------------------------------------------------- #
+# per-collective-op extraction (the ML-traffic derivation input)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction of the entry program, with its execution
+    multiplicity through the while-loop call graph.
+
+    ``size_bytes``/``wire_bytes`` are per-participant per-execution (the
+    same accounting as :class:`HloStats`); ``count`` is the number of times
+    the op executes per entry call (product of enclosing while trip
+    counts).  ``groups`` are explicit device-id groups; ``pairs`` is the
+    ``source_target_pairs`` list (collective-permute only, else empty).
+    """
+
+    name: str
+    kind: str                               # all-reduce / all-gather / ...
+    size_bytes: float
+    wire_bytes: float
+    groups: tuple[tuple[int, ...], ...]
+    pairs: tuple[tuple[int, int], ...] = ()
+    count: float = 1.0
+
+    @property
+    def group_size(self) -> int:
+        return len(self.groups[0]) if self.groups else 1
+
+    @property
+    def fabric_bytes(self) -> float:
+        """Total wire bytes this op puts on the fabric per entry call —
+        the sum over all participants of all groups, times ``count``.
+
+        Ring accounting (paper §2 collective model): an all-reduce over a
+        g-group moves ``2(g-1)·size`` bytes around the ring in total, an
+        all-gather/reduce-scatter/all-to-all ``(g-1)·size``, and a
+        collective-permute ``size`` per source→target pair.
+        """
+        if self.kind == "collective-permute":
+            return self.count * len(self.pairs) * self.size_bytes
+        total = 0.0
+        factor = 2.0 if self.kind == "all-reduce" else 1.0
+        for grp in self.groups:
+            g = len(grp)
+            if g > 1:
+                total += factor * (g - 1) * self.size_bytes
+        return self.count * total
+
+
+def collective_ops(text: str, num_devices: int = 1) -> list[CollectiveOp]:
+    """Walk the entry program (while-trip-count aware, like
+    :func:`analyze_hlo_text`) and return every collective op with its
+    replica groups and execution multiplicity.
+
+    ``*-done`` halves of async pairs are skipped — the ``*-start`` op
+    carries the payload; counting both would double the traffic.
+    """
+    comps = parse_hlo(text)
+    entry = None
+    for c in comps.values():
+        if c.is_entry:
+            entry = c
+            break
+    if entry is None:
+        entry = max(comps.values(), key=lambda c: len(c.instructions))
+    out: list[CollectiveOp] = []
+
+    def walk(comp: Computation, mult: float) -> None:
+        for ins in comp.instructions.values():
+            op = ins.opcode
+            if op == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                if bm and bm.group(1) in comps:
+                    body = comps[bm.group(1)]
+                if cm and cm.group(1) in comps:
+                    cond = comps[cm.group(1)]
+                trips = _trip_count(cond) if cond else 1
+                if body is not None:
+                    walk(body, mult * trips)
+                continue
+            if not any(op.startswith(c) for c in COLLECTIVES):
+                continue
+            if op.endswith("-done"):
+                continue
+            base = op.replace("-start", "")
+            kind = base.split(".")[0]
+            out_bytes = _shape_bytes(ins.result_type)
+            in_bytes = sum(
+                _shape_bytes(comp.instructions[o].result_type)
+                for o in ins.operands if o in comp.instructions)
+            size = max(out_bytes, in_bytes)
+            groups = parse_replica_groups(ins.attrs, num_devices)
+            pairs = ()
+            if kind == "collective-permute":
+                size = out_bytes
+                pairs = parse_source_target_pairs(ins.attrs)
+                wire = out_bytes
+            else:
+                g = len(groups[0]) if groups else 1
+                if kind == "all-reduce":
+                    wire = 2 * (g - 1) / max(g, 1) * size
+                else:
+                    wire = (g - 1) / max(g, 1) * size
+            out.append(CollectiveOp(
+                name=ins.name, kind=kind, size_bytes=float(size),
+                wire_bytes=float(wire), groups=groups, pairs=pairs,
+                count=mult))
+
+    walk(entry, 1.0)
+    return out
+
+
+def collective_flow_totals(ops: list[CollectiveOp]) -> dict[str, float]:
+    """Per-kind fabric wire bytes (Σ :attr:`CollectiveOp.fabric_bytes`) —
+    the conservation target the derived flow matrices must sum to
+    (``repro.noc.mltraffic``, ``tests/test_mltraffic.py``)."""
+    totals: dict[str, float] = {}
+    for op in ops:
+        totals[op.kind] = totals.get(op.kind, 0.0) + op.fabric_bytes
+    return totals
 
 
 def _called_by_fusion(comps) -> set[str]:

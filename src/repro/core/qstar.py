@@ -22,7 +22,7 @@ import numpy as np
 
 from .bidor import BiDORTable, bidor, bidor_k
 from .nrank import NRankResult, nrank, nrank_channel
-from .routes import dimension_orders, walk_routes
+from .routes import walk_routes
 from .topology import Topology
 
 __all__ = ["QStarPlan", "build_plan", "predicted_node_load", "link_load",

@@ -24,7 +24,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback

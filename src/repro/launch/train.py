@@ -21,14 +21,13 @@ production mesh from ``repro.launch.mesh.make_production_mesh``.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.launch.mesh import make_mesh_for_devices, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.sharding import specs as sh
 from repro.train.checkpoint import CheckpointManager

@@ -14,7 +14,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Params = Any  # nested dict pytree
 

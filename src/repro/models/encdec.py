@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.models.common import ModelConfig, dense_init, stack_layer_init
 from repro.models.layers.basic import (
-    embed, embedding_init, head_init, layer_norm, layer_norm_init, unembed)
+    embed, embedding_init, layer_norm, layer_norm_init, unembed)
 from repro.models.layers.attention import (
     cross_apply, cross_init, cross_kv, gqa_apply, gqa_init)
 from repro.models.layers.ffn import gelu_mlp, gelu_mlp_init

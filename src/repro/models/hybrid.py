@@ -25,7 +25,7 @@ from repro.models.layers.basic import (
 from repro.models.layers.attention import gqa_apply, gqa_init
 from repro.models.layers.ffn import moe_apply, moe_init, swiglu, swiglu_init
 from repro.models.layers.recurrent import (
-    mamba_apply, mamba_init, mamba_init_state, mamba_step)
+    mamba_apply, mamba_init, mamba_step)
 from repro.models.layers.rope import rope_angles
 from repro.sharding.hints import hint_bsd
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ModelConfig, dense_init
+from repro.models.common import dense_init
 
 
 def rms_norm_init(d: int):

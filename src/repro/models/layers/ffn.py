@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig, dense_init
-from repro.sharding.hints import hint, hint_bsf, hint_expert
+from repro.sharding.hints import hint_bsf, hint_expert
 
 
 def swiglu_init(cfg: ModelConfig, key, d_ff: int | None = None):

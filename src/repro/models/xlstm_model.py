@@ -24,7 +24,7 @@ from repro.models.layers.basic import (
 from repro.models.layers.ffn import swiglu, swiglu_init
 from repro.sharding.hints import hint_bsd
 from repro.models.layers.recurrent import (
-    _mlstm_dims, mlstm_apply, mlstm_init, mlstm_init_state, mlstm_step,
+    mlstm_apply, mlstm_init, mlstm_init_state, mlstm_step,
     slstm_apply, slstm_init, slstm_init_state, slstm_step)
 
 

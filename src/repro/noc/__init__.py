@@ -12,6 +12,7 @@ from .service import (CampaignJob, CellCheckpoint, JobStatus,
                       run_campaign_service, spec_fingerprint)
 from .chaos import (ChaosConfig, chaos_scenarios, chaos_schedule,
                     hotspot_traffic, region_links)
+from .mltraffic import MLWorkload, WorkloadSpec, derive_workload
 from .watchdog import WatchdogReport
 
 __all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
@@ -24,4 +25,5 @@ __all__ = ["Algo", "SimConfig", "SimResult", "run_sim", "run_sweep",
            "CampaignJob", "CellCheckpoint", "JobStatus",
            "run_campaign_service", "spec_fingerprint",
            "ChaosConfig", "chaos_schedule", "chaos_scenarios",
-           "hotspot_traffic", "region_links", "WatchdogReport"]
+           "hotspot_traffic", "region_links", "WatchdogReport",
+           "MLWorkload", "WorkloadSpec", "derive_workload"]

@@ -89,6 +89,13 @@ class CampaignSpec:
         bit-identical either way (``tests/test_multidevice.py``); on CPU
         expose cores with
         ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+      workloads: ML-workload axis — entries are
+        :class:`repro.noc.mltraffic.MLWorkload` instances (anything with
+        ``.name`` and ``.matrix_for(topo)``) or explicit ``(name,
+        matrix)`` pairs.  Workloads join the pattern axis as extra items
+        (same plan building, plan cache, certifier gate, and cell
+        enumeration), tagged with their name in the ``workload`` CSV /
+        telemetry column so derived and synthetic rows stay separable.
     """
 
     topo: Topology | None
@@ -102,9 +109,11 @@ class CampaignSpec:
     scenarios: tuple = ()
     topos: tuple[Topology, ...] = ()
     multi_device: bool | None = None
+    workloads: tuple = ()
 
     def __post_init__(self):
-        if not (self.algos and self.patterns and self.rates and self.seeds):
+        if not (self.algos and (self.patterns or self.workloads)
+                and self.rates and self.seeds):
             raise ValueError("campaign grid must be non-empty on all axes")
         if self.topo is None and not self.topos:
             raise ValueError("provide topo or a non-empty topos axis")
@@ -115,13 +124,17 @@ class CampaignSpec:
 
     @property
     def num_points(self) -> int:
-        return (len(self.algos) * len(self.patterns) * len(self.rates)
+        return (len(self.algos)
+                * (len(self.patterns) + len(self.workloads))
+                * len(self.rates)
                 * len(self.seeds) * max(len(self.scenarios), 1)
                 * len(self.topo_axis))
 
     def pattern_items(self, topo: Topology | None = None,
                       ) -> list[tuple[str, np.ndarray]]:
-        """Resolve the pattern axis to (name, traffic matrix) pairs."""
+        """Resolve the combined pattern ⊕ workload axis to (name,
+        traffic matrix) pairs — workload items come last, in axis
+        order (``campaign_cells`` relies on this item indexing)."""
         topo = self.topo if topo is None else topo
         items = []
         for p in self.patterns:
@@ -134,6 +147,13 @@ class CampaignSpec:
             else:
                 name, tm = p
                 items.append((str(name), np.asarray(tm, np.float64)))
+        for w in self.workloads:
+            if hasattr(w, "matrix_for"):
+                items.append((str(w.name), w.matrix_for(topo)))
+            else:
+                name, tm = w
+                items.append((str(name), traffic_mod.from_pair_counts(
+                    topo, np.asarray(tm, np.float64))))
         return items
 
 
@@ -148,6 +168,9 @@ class CampaignPoint:
     result: SimResult
     scenario: str = "static"
     topo: str = ""
+    # name of the originating CampaignSpec.workloads entry; "" for
+    # synthetic patterns (the workload's name doubles as its pattern)
+    workload: str = ""
 
 
 @dataclasses.dataclass
@@ -178,7 +201,8 @@ class CampaignResult:
                rate: float | None = None,
                seed: int | None = None,
                scenario: str | None = None,
-               topo: str | None = None) -> list[CampaignPoint]:
+               topo: str | None = None,
+               workload: str | None = None) -> list[CampaignPoint]:
         out = []
         for p in self.points:
             if algo is not None and p.algo != algo:
@@ -192,6 +216,8 @@ class CampaignResult:
             if scenario is not None and p.scenario != scenario:
                 continue
             if topo is not None and p.topo != topo:
+                continue
+            if workload is not None and p.workload != workload:
                 continue
             out.append(p)
         return out
@@ -269,7 +295,8 @@ class CampaignResult:
             "throughput", algo, pattern, scenario=scenario,
             topo=topo).max())
 
-    CSV_HEADER = ["topo", "scenario", "pattern", "algo", "rate", "seed",
+    CSV_HEADER = ["topo", "scenario", "pattern", "workload", "algo",
+                  "rate", "seed",
                   "throughput",
                   "offered", "avg_lat", "p50_lat", "p90_lat", "p99_lat",
                   "max_lat", "lcv", "link_load_max", "reorder",
@@ -312,7 +339,8 @@ def csv_rows(points: Sequence[CampaignPoint]) -> list[list]:
     rows = []
     for p in points:
         r = p.result
-        rows.append([p.topo, p.scenario, p.pattern, p.algo.name,
+        rows.append([p.topo, p.scenario, p.pattern, p.workload,
+                     p.algo.name,
                      p.rate, p.seed,
                      f"{r.throughput:.4f}", f"{r.offered:.4f}",
                      f"{r.avg_latency:.1f}", f"{r.p50_latency:.1f}",
@@ -378,6 +406,9 @@ class CellKey:
     algo: Algo
     scen_i: int
     scenario: str
+    # the workload-axis name when this cell's item is a workload
+    # (item_i >= len(spec.patterns)); "" for synthetic pattern cells
+    workload: str = ""
 
     @property
     def slug(self) -> str:
@@ -412,8 +443,13 @@ class CellOutcome:
 
 
 def _pattern_names(spec: CampaignSpec) -> list[str]:
-    """Pattern-axis names without resolving matrices (cheap enumeration)."""
-    return [p if isinstance(p, str) else str(p[0]) for p in spec.patterns]
+    """Combined pattern ⊕ workload axis names without resolving matrices
+    (cheap enumeration; workload names come last, matching
+    ``CampaignSpec.pattern_items`` item order)."""
+    names = [p if isinstance(p, str) else str(p[0]) for p in spec.patterns]
+    names += [str(w.name) if hasattr(w, "matrix_for") else str(w[0])
+              for w in spec.workloads]
+    return names
 
 
 def campaign_cells(spec: CampaignSpec) -> list[CellKey]:
@@ -424,6 +460,7 @@ def campaign_cells(spec: CampaignSpec) -> list[CellKey]:
     built from this order is identical to a pre-service campaign's.
     """
     names = _pattern_names(spec)
+    n_pat = len(spec.patterns)
     cells: list[CellKey] = []
     index = 0
     for topo_i, topo in enumerate(spec.topo_axis):
@@ -434,7 +471,8 @@ def campaign_cells(spec: CampaignSpec) -> list[CellKey]:
                         index=index, topo_i=topo_i, topo=topo.name,
                         item_i=item_i, pattern=pat_name, algo=algo,
                         scen_i=-1 if scen is None else scen_i,
-                        scenario="static" if scen is None else scen.name))
+                        scenario="static" if scen is None else scen.name,
+                        workload=pat_name if item_i >= n_pat else ""))
                     index += 1
     return cells
 
@@ -639,7 +677,7 @@ class CampaignExecutor:
         k = outcome.key
         return [CampaignPoint(algo=k.algo, pattern=k.pattern, rate=rate,
                               seed=seed, result=res, scenario=k.scenario,
-                              topo=k.topo)
+                              topo=k.topo, workload=k.workload)
                 for (rate, seed), res in zip(self.points, outcome.results)]
 
 

@@ -113,6 +113,12 @@ def spec_fingerprint(spec: CampaignSpec) -> str:
         "patterns": [p if isinstance(p, str)
                      else [str(p[0]), _traffic_hash(p[1])]
                      for p in spec.patterns],
+        # ML workloads hash by name + derived rank-flow bytes (topology
+        # independent; the per-topology embedding is deterministic)
+        "workloads": [[str(w.name), _traffic_hash(w.campaign_flows())]
+                      if hasattr(w, "matrix_for")
+                      else [str(w[0]), _traffic_hash(w[1])]
+                      for w in spec.workloads],
         "rates": [float(r) for r in spec.rates],
         "seeds": [int(s) for s in spec.seeds],
         "base": {f.name: (int(v) if isinstance(v, (bool, int, Algo))
@@ -407,7 +413,7 @@ class CampaignJob:
             "cells": [{
                 "index": k.index, "slug": k.slug, "topo": k.topo,
                 "pattern": k.pattern, "algo": k.algo.name,
-                "scenario": k.scenario,
+                "scenario": k.scenario, "workload": k.workload,
             } for k in self.cells],
         }
         _atomic_write_text(path, json.dumps(manifest, indent=1))
@@ -499,6 +505,8 @@ class CampaignJob:
         rec = {"event": "cell", "cell": key.slug, "index": key.index,
                "cached": cached, "done": done, "total": len(self.cells),
                "wall_s": round(wall_s, 4)}
+        if key.workload:
+            rec["workload"] = key.workload
         if not cached and wall_s > 0:
             rec["lanes_per_s"] = round(
                 len(self.executor.points) / wall_s, 3)

@@ -7,7 +7,6 @@ import enum
 
 import numpy as np
 
-from repro.core.topology import Topology
 
 
 class Algo(enum.IntEnum):

@@ -25,7 +25,6 @@ import math
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig

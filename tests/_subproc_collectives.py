@@ -5,7 +5,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=16.
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist.qstar_collectives import bidor_all_to_all, dor_all_to_all

@@ -16,7 +16,6 @@ Covers (ISSUE 8 satellite a):
 
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 import pytest
@@ -25,7 +24,7 @@ from _propcheck import given, settings, st
 
 from repro.core import (BiDORTable, build_plan_fast, cmesh, express_mesh,
                         fault_region_mesh, mesh2d, torus, traffic)
-from repro.core.certify import (Certificate, CertificationError,
+from repro.core.certify import (Certificate,
                                 apply_repair, build_cdg, certify_ports,
                                 certify_table, cyclic_scc_nodes,
                                 has_cycle_bruteforce)

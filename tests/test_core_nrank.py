@@ -5,7 +5,7 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.core import (
-    Topology, mesh2d, mesh2d_edge_io, torus, multipod, traffic,
+    mesh2d, mesh2d_edge_io, torus, multipod, traffic,
     nrank, bidor, bidor_k, build_plan, dimension_orders, route_nodes,
     predicted_node_load,
 )
@@ -13,7 +13,7 @@ from repro.core.nrank import (
     possibility_weights, transition_probabilities, initial_weights,
 )
 from repro.core.routes import (
-    min_rect_contains_channel, next_hop_table, next_port_table,
+    min_rect_contains_channel, next_hop_table,
 )
 
 

@@ -3,7 +3,6 @@ current sim/campaign API (they broke silently once; never again)."""
 
 import importlib.util
 import os
-import sys
 
 import pytest
 
@@ -34,6 +33,26 @@ def test_ici_demo_dry_run(capsys):
     assert "replanned" in out
 
 
-@pytest.mark.parametrize("name", ["quickstart", "qstar_ici_demo"])
+def test_train_lm_tiny(tmp_path, capsys):
+    mod = _load("train_lm")
+    mod.main(["--preset", "tiny", "--steps", "2", "--batch", "2",
+              "--seq", "16", "--ckpt-every", "100",
+              "--ckpt-dir", str(tmp_path / "ckpt")])
+    out = capsys.readouterr().out
+    assert "step    0 loss" in out
+    assert "done; final loss" in out
+
+
+def test_serve_decode_tiny(capsys):
+    mod = _load("serve_decode")
+    mod.main(["--arch", "internlm2-1.8b", "--batch", "1",
+              "--prompt-len", "4", "--tokens", "3"])
+    out = capsys.readouterr().out
+    assert "generated 3 tokens/seq" in out
+    assert "determinism check passed" in out
+
+
+@pytest.mark.parametrize("name", ["quickstart", "qstar_ici_demo",
+                                  "train_lm", "serve_decode"])
 def test_examples_importable(name):
     assert _load(name).main is not None

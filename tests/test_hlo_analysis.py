@@ -8,11 +8,10 @@ group-aware ring-wire formulas.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo import (HloStats, analyze_hlo_text, roofline_terms,
-                                xla_cost_analysis, PEAK_FLOPS)
+                                xla_cost_analysis)
 
 
 def _compile(f, *sds):

@@ -4,7 +4,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 
 def _run(cmd, devices=8):

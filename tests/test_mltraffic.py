@@ -1,0 +1,246 @@
+"""ML-traffic derivation: byte conservation (HLO totals == flow-matrix
+sums, per kind and per phase), rank-permutation equivariance, mesh-axis
+relabel invariance, embedding, and the ``CampaignSpec.workloads`` axis.
+
+The conservation property is checked twice: against randomized synthetic
+collective-op sets (property test, first-principles byte accounting
+re-derived in the test) and against REAL post-SPMD HLO of a sharded MoE
+model (subprocess derivation, like ``test_hlo_analysis``'s collective
+test)."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _propcheck import given, settings, st
+
+from repro.analysis.hlo import CollectiveOp, collective_flow_totals
+from repro.core import torus
+from repro.noc import Algo, CampaignSpec, SimConfig, run_campaign
+from repro.noc.mltraffic import (MLWorkload, WorkloadSpec, collective_flows,
+                                 embed_ranks)
+
+KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _random_ops(rng, num_devices):
+    """A randomized collective-op set over ``num_devices`` ranks: random
+    kinds, sizes, while-loop counts, and group partitions (group size a
+    random divisor of the rank count), plus permutes with random pairs."""
+    ops = []
+    divisors = [g for g in range(1, num_devices + 1)
+                if num_devices % g == 0]
+    for i in range(rng.randint(1, 8)):
+        kind = KINDS[rng.randrange(len(KINDS))]
+        size = float(rng.randint(1, 1 << 20))
+        count = float(rng.randint(1, 4))
+        if kind == "collective-permute":
+            ranks = list(range(num_devices))
+            rng.shuffle(ranks)
+            pairs = tuple((s, t) for s, t in zip(ranks, ranks[1:]))
+            ops.append(CollectiveOp(
+                name=f"op{i}", kind=kind, size_bytes=size,
+                wire_bytes=size, groups=(), pairs=pairs, count=count))
+            continue
+        g = divisors[rng.randrange(len(divisors))]
+        ranks = list(range(num_devices))
+        rng.shuffle(ranks)
+        groups = tuple(tuple(ranks[j:j + g])
+                       for j in range(0, num_devices, g))
+        ops.append(CollectiveOp(
+            name=f"op{i}", kind=kind, size_bytes=size, wire_bytes=size,
+            groups=groups, count=count))
+    return ops
+
+
+def _expected_totals(ops):
+    """First-principles per-kind fabric bytes, re-derived independently of
+    ``CollectiveOp.fabric_bytes``: ring all-reduce moves 2(g-1)·size per
+    group, all-gather/reduce-scatter/all-to-all (g-1)·size, permute size
+    per pair."""
+    want = {}
+    for op in ops:
+        if op.kind == "collective-permute":
+            tot = op.count * len(op.pairs) * op.size_bytes
+        else:
+            f = 2.0 if op.kind == "all-reduce" else 1.0
+            tot = op.count * sum(f * (len(g) - 1) * op.size_bytes
+                                 for g in op.groups if len(g) > 1)
+        want[op.kind] = want.get(op.kind, 0.0) + tot
+    return want
+
+
+@settings(max_examples=25)
+@given(st.randoms(), st.sampled_from([2, 4, 6, 8]))
+def test_flow_matrices_conserve_hlo_byte_totals(rng, num_devices):
+    """Σ of each kind's (rank, rank) flow matrix must equal that kind's
+    HLO-side fabric byte total EXACTLY (ring accounting is closed-form,
+    so exact float equality of sums of identical terms holds)."""
+    ops = _random_ops(rng, num_devices)
+    mats = collective_flows(ops, num_devices)
+    want = _expected_totals(ops)
+    got_hlo = collective_flow_totals(ops)
+    for kind, tot in want.items():
+        assert got_hlo.get(kind, 0.0) == pytest.approx(tot, rel=1e-12)
+        assert mats[kind].sum() == pytest.approx(tot, rel=1e-12)
+    # no traffic invented for kinds never emitted
+    assert set(mats) <= set(want)
+
+
+@settings(max_examples=15)
+@given(st.randoms(), st.sampled_from([4, 8]))
+def test_flows_equivariant_under_rank_permutation(rng, num_devices):
+    """Relabeling mesh axes permutes the ranks; the flow matrices must
+    permute with them (no derivation step may key on literal rank ids)."""
+    ops = _random_ops(rng, num_devices)
+    perm = list(range(num_devices))
+    rng.shuffle(perm)
+    perm_ops = [CollectiveOp(
+        name=op.name, kind=op.kind, size_bytes=op.size_bytes,
+        wire_bytes=op.wire_bytes,
+        groups=tuple(tuple(perm[r] for r in g) for g in op.groups),
+        pairs=tuple((perm[s], perm[t]) for s, t in op.pairs),
+        count=op.count) for op in ops]
+    mats = collective_flows(ops, num_devices)
+    mats_p = collective_flows(perm_ops, num_devices)
+    ix = np.ix_(perm, perm)
+    for kind in mats:
+        np.testing.assert_array_equal(mats_p[kind][ix], mats[kind])
+
+
+def _fake_workload(spec, flows_by_phase):
+    totals = {ph: {k: float(m.sum()) for k, m in kinds.items()}
+              for ph, kinds in flows_by_phase.items()}
+    return MLWorkload(spec=spec, flows=flows_by_phase, totals=totals)
+
+
+def _dense_flows(d, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.random((d, d)) * 1e6
+    np.fill_diagonal(m, 0.0)
+    return m
+
+
+def test_matrix_invariant_under_mesh_axis_relabeling():
+    """The mesh-axis NAMES are pure metadata: a workload with axes
+    ("data", "model") and one with ("x", "y") but identical flows must
+    produce identical campaign matrices."""
+    d = 8
+    flows = {"decode": {"all-to-all": _dense_flows(d)}}
+    t = torus(2, 4)
+    a = _fake_workload(WorkloadSpec(arch="m", data=2, model=4,
+                                    phases=("decode",)), flows)
+    b = _fake_workload(WorkloadSpec(arch="m", data=2, model=4,
+                                    phases=("decode",),
+                                    axes=("x", "y")), flows)
+    np.testing.assert_array_equal(a.matrix_for(t), b.matrix_for(t))
+
+
+def test_embedding_preserves_bytes_and_normalizes():
+    d = 8
+    flows = {"decode": {"all-to-all": _dense_flows(d, seed=3)}}
+    for topo, mesh in [(torus(2, 4), (2, 4)),   # coordinate embedding
+                       (torus(4, 4), (2, 4))]:  # flat embedding
+        wl = _fake_workload(
+            WorkloadSpec(arch="m", data=mesh[0], model=mesh[1],
+                         phases=("decode",)), flows)
+        emb = embed_ranks(topo, mesh)
+        assert len(set(emb.tolist())) == d          # injective
+        counts = np.zeros((topo.num_nodes,) * 2)
+        counts[np.ix_(emb, emb)] = wl.campaign_flows()
+        # embedding moves bytes between node ids, never creates/destroys
+        assert counts.sum() == pytest.approx(
+            wl.campaign_flows().sum(), rel=1e-12)
+        tm = wl.matrix_for(topo)
+        assert tm.shape == (topo.num_nodes, topo.num_nodes)
+        assert np.abs(np.diag(tm)).max() == 0.0
+        assert tm.sum() == pytest.approx(1.0, rel=1e-9)
+
+
+def test_embedding_rejects_small_topology():
+    with pytest.raises(ValueError, match="cannot embed"):
+        embed_ranks(torus(2, 2), (2, 4))
+
+
+def test_workload_spec_validates_phases():
+    with pytest.raises(ValueError, match="unknown phases"):
+        WorkloadSpec(arch="m", phases=("train", "warp"))
+
+
+def test_campaign_flows_skip_fwd_when_train_present():
+    d = 4
+    spec = WorkloadSpec(arch="m", data=1, model=4,
+                        phases=("fwd", "train", "decode"))
+    fwd = {"all-reduce": _dense_flows(d, 1)}
+    train = {"all-reduce": _dense_flows(d, 1) * 3}
+    dec = {"collective-permute": _dense_flows(d, 2)}
+    wl = _fake_workload(spec, {"fwd": fwd, "train": train, "decode": dec})
+    # fwd is folded into train (a train step re-runs it) — not added twice
+    want = train["all-reduce"] + dec["collective-permute"]
+    np.testing.assert_allclose(wl.campaign_flows(), want)
+    # the derived backward residual
+    np.testing.assert_allclose(wl.phase_flows("bwd"),
+                               _dense_flows(d, 1) * 2)
+
+
+def test_workloads_are_a_first_class_campaign_axis():
+    """A (name, matrix) workload entry must flow through the campaign
+    grid: enumerated like a pattern, selectable by ``workload=``, and
+    carried as its own CSV column."""
+    topo = torus(2, 4)
+    counts = _dense_flows(topo.num_nodes, seed=5)
+    base = SimConfig(cycles=200, warmup=50, drain=20)
+    spec = CampaignSpec(topo=topo, algos=(Algo.XY,), patterns=(),
+                        workloads=(("mlwl", counts),),
+                        rates=(0.2,), seeds=(0,), base=base)
+    assert spec.num_points == 1
+    res = run_campaign(spec)
+    (pt,) = res.points
+    assert pt.workload == "mlwl" and pt.pattern == "mlwl"
+    assert res.select(workload="mlwl") == [pt]
+    assert res.select(workload="other") == []
+    hdr = res.CSV_HEADER
+    row = res.to_rows()[0]
+    assert row[hdr.index("workload")] == "mlwl"
+    # mixed axis: synthetic patterns keep an empty workload column
+    mixed = CampaignSpec(topo=topo, algos=(Algo.XY,),
+                         patterns=("uniform",),
+                         workloads=(("mlwl", counts),),
+                         rates=(0.2,), seeds=(0,), base=base)
+    mres = run_campaign(mixed)
+    assert mixed.num_points == 2
+    by_pat = {p.pattern: p for p in mres.points}
+    assert by_pat["uniform"].workload == ""
+    assert by_pat["mlwl"].workload == "mlwl"
+
+
+@pytest.mark.slow
+def test_real_hlo_conservation_end_to_end(tmp_path):
+    """The satellite invariant on REAL post-SPMD HLO: derive a sharded
+    MoE decode workload (subprocess — the test session only has one host
+    device) and check per-phase, per-kind conservation plus campaign
+    matrix sanity on the exact torus."""
+    from repro.noc import derive_workload
+
+    spec = WorkloadSpec(arch="qwen2-moe-a2.7b", data=1, model=8,
+                        moe_pad_to=8, phases=("decode",))
+    wl = derive_workload(spec, cache_dir=str(tmp_path))
+    assert set(wl.flows) == {"decode"}
+    kinds = wl.flows["decode"]
+    assert kinds, "sharded MoE decode lowered without any collectives"
+    for kind, m in kinds.items():
+        assert m.sum() == pytest.approx(wl.totals["decode"][kind],
+                                        rel=1e-9), kind
+    # expert parallelism must surface as all-to-all on the fabric
+    assert "all-to-all" in kinds
+    tm = wl.matrix_for(torus(2, 4))
+    assert tm.sum() == pytest.approx(1.0, rel=1e-9)
+    assert np.abs(np.diag(tm)).max() == 0.0
+    # a second call is served from the npz cache with identical bytes
+    wl2 = derive_workload(spec, cache_dir=str(tmp_path))
+    np.testing.assert_array_equal(wl2.flows["decode"]["all-to-all"],
+                                  kinds["all-to-all"])

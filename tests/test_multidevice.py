@@ -71,7 +71,6 @@ def test_sharded_runner_state_parity_both_step_paths(multi_device_count):
     """Raw runner-level parity for the fused AND unfused transitions:
     the full state pytree (packed flits, locks, counters, keys) is
     equal bit for bit after 400 cycles."""
-    ndev = multi_device_count
     points = [(r, s) for r in (0.1, 0.3, 0.5, 0.7) for s in (0, 1)]
     for use_kernel in (True, False):
         cfg = SimConfig(cycles=400, warmup=100, use_kernel=use_kernel)

@@ -11,7 +11,7 @@ from repro.core import build_plan, mesh2d, traffic
 from repro.kernels import simstep
 from repro.noc import (Algo, LinkFail, ReplanConfig, Scenario, SimConfig,
                        run_controlled)
-from repro.noc.sim import (build_tables, fresh_state, make_states,
+from repro.noc.sim import (build_tables, fresh_state,
                            run_sim, run_sweep, static_bw_slots)
 from repro.obs import (EventLog, TEL_COUNT_FIELDS, TEL_KEYS, Telemetry,
                        TraceWriter, read_trace, resolved_epoch,

@@ -7,7 +7,6 @@ properties over random traffic plus a hand-computed 3×3 fixture.
 """
 
 import numpy as np
-import pytest
 
 from _propcheck import given, settings, st
 from repro.core import mesh2d, traffic, build_plan

@@ -5,9 +5,8 @@ XY/YX symmetry under transposed traffic."""
 import numpy as np
 import pytest
 
-from repro.core import mesh2d, traffic, build_plan
-from repro.noc import (Algo, CampaignSpec, SimConfig, run_campaign,
-                       run_sim)
+from repro.core import mesh2d, traffic
+from repro.noc import (Algo, CampaignSpec, SimConfig, run_campaign)
 
 TOPO = mesh2d(4, 4)
 UNI = traffic.uniform(TOPO)

@@ -40,8 +40,6 @@ def test_int8_quantization_roundtrip_error_bound(seed, shape):
     q, s = quantize_i8(x)
     y = dequantize_i8(q, s, x.shape)
     assert q.shape == x.shape
-    bound = np.repeat(np.asarray(s).reshape(np.asarray(s).shape),
-                      1).max() / 127 * 1.0001 + 1e-7
     err = np.abs(np.asarray(y - x))
     assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-6
 
