@@ -8,8 +8,12 @@ beyond-paper ICI analyses.
   campaign  scaling       — batched campaign vs sequential simulate calls
   campaign_service  jobs  — resumable campaign-as-a-service guard:
               interrupt/resume byte-identity + warm plan-cache re-run
-  simstep_scale  sim cost — fused flit-step kernel vs unfused per-cycle
-              path, 8×8 → 32×32, + shard_map lane mode (parity asserted)
+  simstep_scale  sim cost — per-cycle cost per dispatch path (unfused
+              oracle / fused auto / blocked node-tile kernel), 8×8 →
+              96×96, + shard_map lane mode (parity asserted everywhere;
+              budgets: ``--simstep-budget-ms`` fused 16×16,
+              ``--simstep-budget64-ms`` blocked 64×64; the VMEM gate
+              itself moves with ``--simstep-vmem-budget``)
   dynamics  control plane — oracle/stale/online replanning under faults
   topo_sweep  topology zoo — Q-StaR vs DOR on 3D torus / cmesh /
               express mesh / fault-region mesh (plan-table routing)
@@ -195,42 +199,53 @@ def bench_campaign_service():
 
 
 def bench_simstep_scale():
-    """Per-cycle simulator cost: the fused flit-step kernel path vs the
-    unfused jnp oracle, 8x8 -> 32x32, plus the shard_map multi-device
-    lane mode on a 16x16 campaign batch.
+    """Per-cycle simulator cost per dispatch path: the unfused jnp
+    oracle vs the fused auto path vs the blocked node-tile kernel,
+    8x8 -> 96x96, plus the shard_map multi-device lane mode on a 16x16
+    campaign batch.  One ``simstep_cost.csv`` row per (size, path).
 
     Assertions, in order of importance:
 
-    * bitwise parity of the full end state between the two per-cycle
-      paths at EVERY size (the contract the differential battery pins;
-      here re-checked at benchmark scale), and between the sharded and
-      single-device lane runners;
-    * on accelerator backends (TPU/GPU — the fused Pallas kernel's
-      target) the kernel path must be >= 2x faster per cycle at
-      >= 16x16;
-    * on CPU the fused fallback is dense jnp, so the honest claim is a
-      no-regression guard (fused <= 1.25x unfused per cycle, noise
-      headroom included; measured ~1.0x at 16x16 and ~1.2x FASTER at
-      32x32) plus the optional absolute budget ``SIMSTEP_BUDGET_MS``
-      on the fused 16x16 per-cycle cost (CI regression guard).
+    * bitwise parity of the full end state between EVERY fused path and
+      the unfused oracle at EVERY size (the differential battery's
+      contract, re-checked at benchmark scale), and between the sharded
+      and single-device lane runners;
+    * the auto dispatch ladder must resolve 64x64+ to the BLOCKED
+      kernel on Pallas backends — the VMEM wall this path exists to
+      break — checked symbolically on every backend;
+    * on accelerator backends (TPU/GPU) the resolved Pallas path must
+      be >= 2x faster per cycle at >= 16x16;
+    * on CPU the fused auto path is dense jnp and the blocked path runs
+      its compiled vmap realization, so the honest claim is a
+      no-regression guard (auto >= 0.8x unfused at >= 256 nodes;
+      blocked >= 0.5x unfused at >= 1024 nodes, where tiling overhead
+      has amortized — measured ~1.9x FASTER for both at 64x64) plus
+      the optional absolute budgets ``SIMSTEP_BUDGET_MS`` (fused auto,
+      16x16) and ``SIMSTEP_BUDGET64_MS`` (blocked, 64x64) as CI
+      regression guards.
 
     ``SIMSTEP_MAX_NODES`` caps the sweep (CI smoke); a capped run skips
-    the committed-CSV rewrite, like ``nrank_scale``.
+    the committed-CSV rewrite, like ``nrank_scale``.  ``BENCH_QUICK``
+    shortens the cycle counts.  ``SIMSTEP_VMEM_BUDGET`` (flag
+    ``--simstep-vmem-budget``) moves the VMEM gate itself.
     """
     import jax
     import numpy as np
     from repro.core import mesh2d, traffic
+    from repro.kernels.simstep import ops as simstep_ops
     from repro.noc.simconfig import Algo, SimConfig
     from repro.noc import sim
     from .common import write_csv
 
     max_nodes = int(os.environ.get("SIMSTEP_MAX_NODES", "0"))
     budget = float(os.environ.get("SIMSTEP_BUDGET_MS", "0"))
+    budget64 = float(os.environ.get("SIMSTEP_BUDGET64_MS", "0"))
+    quick = os.environ.get("BENCH_QUICK", "0") not in ("0", "")
     accel = jax.default_backend() in ("tpu", "gpu")
-    cases = [(8, 400), (16, 300), (32, 120)]
+    cases = ([(8, 120), (16, 90), (32, 40), (64, 12), (96, 6)] if quick
+             else [(8, 400), (16, 300), (32, 120), (64, 48), (96, 24)])
     rows = []
-    per_cycle: dict[tuple[int, bool], float] = {}
-    topo_meta_cfg: dict[int, tuple] = {}   # k -> (cfg, meta) for gating
+    per_cycle: dict[tuple[int, str], float] = {}
 
     def timed_run(runner, tables, meta, cfg, points, cycles):
         out = runner(tables, sim.make_states(meta, cfg, points))
@@ -244,52 +259,88 @@ def bench_simstep_scale():
             best = min(best, time.perf_counter() - t0)
         return jax.device_get(out), best / cycles * 1e3
 
+    def bench_tile(meta, cfg):
+        """The tile the blocked row runs: the auto choice, demoted to
+        the largest PROPER divisor when the whole network fits one tile
+        (a grid of one would not exercise the stitching)."""
+        n = meta["N"]
+        tile = simstep_ops.auto_tile_nodes(meta, cfg)
+        if tile in (0, n):
+            tile = max(d for d in range(1, n) if n % d == 0)
+        return tile
+
     for k, cycles in cases:
         topo = mesh2d(k, k)
-        if max_nodes and topo.num_nodes > max_nodes:
+        n = topo.num_nodes
+        if max_nodes and n > max_nodes:
             continue
         tm = traffic.uniform(topo)
+        cfg0 = SimConfig(algo=Algo.XY, cycles=cycles,
+                         warmup=cycles // 3, use_kernel=False)
+        tables, meta = sim.build_tables(topo, tm, None, cfg0.num_vcs)
+        auto_path, auto_tile, _ = simstep_ops.resolve_path(
+            meta, cfg0.replace(use_kernel=True))
+        tile = bench_tile(meta, cfg0)
+        if n >= 4096:
+            # the acceptance bar: past the VMEM wall the auto ladder on
+            # a Pallas backend must land on the blocked kernel, never
+            # the dense fallback (checked symbolically on CPU too)
+            sym, sym_tile, _ = simstep_ops.resolve_path(
+                meta, cfg0.replace(use_kernel=True), supported=True)
+            assert sym == "blocked" and sym_tile > 0, (
+                f"{k}x{k}: auto ladder resolved to {sym} "
+                f"(tile={sym_tile}); the blocked kernel must own "
+                f"this size on Pallas backends")
+        paths = [
+            ("unfused", 0, cfg0),
+            (f"fused_{auto_path}", auto_tile,
+             cfg0.replace(use_kernel=True)),
+            ("blocked", tile,
+             cfg0.replace(use_kernel=True, sim_tile_nodes=tile)),
+        ]
         outs = {}
-        for uk in (False, True):
-            cfg = SimConfig(algo=Algo.XY, cycles=cycles,
-                            warmup=cycles // 3, use_kernel=uk)
-            tables, meta = sim.build_tables(topo, tm, None, cfg.num_vcs)
-            topo_meta_cfg[k] = (cfg, meta)
+        for path, ptile, cfg in paths:
             runner = sim.get_runner(meta, cfg, cycles)
-            outs[uk], ms = timed_run(runner, tables, meta, cfg,
-                                     [(0.3, 0)], cycles)
-            per_cycle[(k, uk)] = ms
-        ident = all(np.array_equal(outs[False][x], outs[True][x])
-                    for x in outs[False])
-        assert ident, f"{k}x{k}: fused state diverged from unfused"
-        su = per_cycle[(k, False)] / per_cycle[(k, True)]
-        print(f"simstep_scale,{k}x{k},unfused={per_cycle[(k, False)]:.3f}"
-              f"ms/cyc,fused={per_cycle[(k, True)]:.3f}ms/cyc,"
-              f"speedup={su:.2f}x,identical={ident}")
-        rows.append([f"mesh{k}x{k}", topo.num_nodes, cycles,
-                     f"{per_cycle[(k, False)]:.4f}",
-                     f"{per_cycle[(k, True)]:.4f}", f"{su:.3f}",
-                     int(ident)])
-        if topo.num_nodes >= 256:
-            from repro.kernels.simstep import ops as simstep_ops
-            fits = (simstep_ops.state_footprint_bytes(topo_meta_cfg[k][1],
-                                                      topo_meta_cfg[k][0])
-                    <= simstep_ops.VMEM_BUDGET_BYTES)
-            if accel and fits:
-                # the Pallas kernel actually ran: the fusion claim
-                assert su >= 2.0, (
-                    f"{k}x{k}: kernel path must be >= 2x on an "
-                    f"accelerator backend (got {su:.2f}x)")
-            else:
-                # CPU fallback, or past the VMEM budget (dense body on
-                # any backend): no-regression guard with noise headroom
-                assert su >= 0.8, (
-                    f"{k}x{k}: fused fallback regressed past the "
-                    f"noise guard ({su:.2f}x)")
-    if budget and (16, True) in per_cycle:
-        assert per_cycle[(16, True)] <= budget, (
-            f"fused 16x16 per-cycle cost {per_cycle[(16, True)]:.3f}ms "
+            outs[path], ms = timed_run(runner, tables, meta, cfg,
+                                       [(0.3, 0)], cycles)
+            per_cycle[(k, path)] = ms
+            su = per_cycle[(k, "unfused")] / ms
+            ident = all(np.array_equal(outs["unfused"][x], outs[path][x])
+                        for x in outs["unfused"])
+            assert ident, f"{k}x{k}/{path}: diverged from unfused"
+            print(f"simstep_scale,{k}x{k},{path},{ms:.3f}ms/cyc,"
+                  f"speedup={su:.2f}x,identical={ident}")
+            rows.append([f"mesh{k}x{k}", n, cycles, path, ptile,
+                         f"{ms:.4f}", f"{su:.3f}", int(ident)])
+        su_auto = (per_cycle[(k, "unfused")]
+                   / per_cycle[(k, f"fused_{auto_path}")])
+        su_blocked = per_cycle[(k, "unfused")] / per_cycle[(k, "blocked")]
+        if accel and auto_path in ("whole", "blocked") and n >= 256:
+            # a Pallas kernel actually ran: the fusion claim
+            assert su_auto >= 2.0, (
+                f"{k}x{k}: kernel path must be >= 2x on an "
+                f"accelerator backend (got {su_auto:.2f}x)")
+        elif n >= 256:
+            # CPU fallback (dense body): no-regression guard with
+            # noise headroom
+            assert su_auto >= 0.8, (
+                f"{k}x{k}: fused fallback regressed past the "
+                f"noise guard ({su_auto:.2f}x)")
+        if n >= 1024:
+            assert su_blocked >= (2.0 if accel else 0.5), (
+                f"{k}x{k}: blocked path regressed past the guard "
+                f"({su_blocked:.2f}x)")
+    auto16 = next((v for (k, p), v in per_cycle.items()
+                   if k == 16 and p.startswith("fused_")), None)
+    if budget and auto16 is not None:
+        assert auto16 <= budget, (
+            f"fused 16x16 per-cycle cost {auto16:.3f}ms "
             f"over the {budget:.1f}ms budget")
+    if budget64 and (64, "blocked") in per_cycle:
+        assert per_cycle[(64, "blocked")] <= budget64, (
+            f"blocked 64x64 per-cycle cost "
+            f"{per_cycle[(64, 'blocked')]:.3f}ms over the "
+            f"{budget64:.1f}ms budget")
 
     # ---- shard_map mega-campaign mode: lanes across local devices ---- #
     ndev = jax.device_count()
@@ -316,17 +367,27 @@ def bench_simstep_scale():
               f"devices: single={res[False][1]:.3f}ms/cyc "
               f"sharded={res[True][1]:.3f}ms/cyc -> {su:.2f}x, "
               f"identical={ident}")
-        rows.append([f"shard16x16_l{len(lanes)}d{ndev}", 256, cycles,
-                     f"{res[False][1]:.4f}", f"{res[True][1]:.4f}",
-                     f"{su:.3f}", int(ident)])
+        case = f"shard16x16_l{len(lanes)}d{ndev}"
+        rows.append([case, 256, cycles, "lanes_single", 0,
+                     f"{res[False][1]:.4f}", "1.000", 1])
+        rows.append([case, 256, cycles, "lanes_sharded", 0,
+                     f"{res[True][1]:.4f}", f"{su:.3f}", int(ident)])
 
     if max_nodes:
         print(f"simstep_scale: sweep capped at {max_nodes} nodes; "
               "skipping simstep_cost.csv rewrite")
     else:
         write_csv("simstep_cost.csv",
-                  ["case", "nodes", "cycles", "unfused_ms_per_cycle",
-                   "fused_ms_per_cycle", "speedup", "identical"], rows)
+                  ["case", "nodes", "cycles", "path", "tile_nodes",
+                   "ms_per_cycle", "speedup_vs_unfused", "identical"],
+                  rows)
+    return {
+        "backend": jax.default_backend(),
+        "vmem_budget_bytes": simstep_ops.vmem_budget_bytes(),
+        "budget_ms": budget or None, "budget64_ms": budget64 or None,
+        "per_cycle_ms": {f"{k}x{k}/{p}": round(v, 4)
+                         for (k, p), v in sorted(per_cycle.items())},
+    }
 
 
 def bench_nrank_scale():
@@ -945,6 +1006,14 @@ def main(argv: list[str] | None = None) -> None:
                     help="assert the fused 16x16 per-cycle cost stays "
                          "under this budget (flag form of "
                          "SIMSTEP_BUDGET_MS)")
+    ap.add_argument("--simstep-budget64-ms", type=float, default=None,
+                    help="assert the blocked 64x64 per-cycle cost stays "
+                         "under this budget (flag form of "
+                         "SIMSTEP_BUDGET64_MS)")
+    ap.add_argument("--simstep-vmem-budget", type=int, default=None,
+                    help="on-chip byte budget for the simstep VMEM "
+                         "dispatch gate (flag form of "
+                         "SIMSTEP_VMEM_BUDGET)")
     ap.add_argument("--resume", action="store_true",
                     help="resume interrupted campaign-service jobs, "
                          "skipping completed cells bit-identically "
@@ -984,6 +1053,10 @@ def main(argv: list[str] | None = None) -> None:
         os.environ["SIMSTEP_MAX_NODES"] = str(args.simstep_max_nodes)
     if args.simstep_budget_ms is not None:
         os.environ["SIMSTEP_BUDGET_MS"] = str(args.simstep_budget_ms)
+    if args.simstep_budget64_ms is not None:
+        os.environ["SIMSTEP_BUDGET64_MS"] = str(args.simstep_budget64_ms)
+    if args.simstep_vmem_budget is not None:
+        os.environ["SIMSTEP_VMEM_BUDGET"] = str(args.simstep_vmem_budget)
     if args.resume:
         os.environ["CAMPAIGN_RESUME"] = "1"
     if args.max_cells is not None:

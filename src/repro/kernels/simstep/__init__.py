@@ -2,8 +2,10 @@
 on-chip pass (Pallas on TPU/GPU, fused dense jnp on CPU), bit-identical
 to the unfused ``repro.noc.sim`` step it replaces."""
 
-from .ops import backend_supports_pallas, make_step
-from .ref import CORE_KEYS, make_cycle_fn, split_rand
+from .ops import (backend_supports_pallas, make_step, resolve_path,
+                  state_footprint_bytes, vmem_budget_bytes)
+from .ref import CORE_KEYS, make_cycle_fn, make_cycle_parts, split_rand
 
-__all__ = ["backend_supports_pallas", "make_step", "make_cycle_fn",
-           "split_rand", "CORE_KEYS"]
+__all__ = ["backend_supports_pallas", "make_step", "resolve_path",
+           "state_footprint_bytes", "vmem_budget_bytes", "make_cycle_fn",
+           "make_cycle_parts", "split_rand", "CORE_KEYS"]

@@ -1,25 +1,39 @@
-"""Pallas wrapper: one fused kernel invocation per simulated cycle.
+"""Pallas wrappers: the fused flit-step as on-chip kernel invocations.
 
-The kernel is a single program over whole-array blocks: every lookup
-table, state array and pre-drawn random array is handed to one
-``pallas_call``, the fused body (:func:`repro.kernels.simstep.ref.
-make_cycle_fn`) runs on the loaded values, and each state array is
-written back — the entire per-cycle pipeline (generation, injection,
-routing, allocation, movement, statistics) executes out of on-chip
-memory instead of bouncing ~40 intermediate arrays through HBM the way
-the unfused jnp chain does.
+Two kernel shapes, both built on the tile-decomposed cycle body of
+:mod:`repro.kernels.simstep.ref`:
 
-Because the body is the *same function* the dense fallback jit-compiles,
-the Pallas path can never diverge from the fallback; the differential
-battery (``tests/test_simstep_kernel.py``) pins both to the unfused
-oracle.  ``interpret=True`` executes the kernel through the Pallas
-interpreter — the CPU coverage path, auto-selected by ``ops`` when the
-Pallas route is forced on a backend without compiled support.
+* **whole-array** (:func:`make_simstep_pallas`) — a single program over
+  whole-array blocks: every lookup table, state array and pre-drawn
+  random array is handed to one ``pallas_call``, the fused body runs on
+  the loaded values, and each state array is written back.  The entire
+  per-cycle pipeline executes out of on-chip memory — but the full
+  state must fit VMEM, which at the default flow-control parameters
+  holds through 16×16 and fails past 32×32.
+* **blocked** (:func:`make_simstep_blocked`) — a multi-program grid
+  over node tiles: per grid step, Pallas streams one tile's flit/queue
+  records plus the tile's slices of the routing tables HBM→VMEM
+  (double-buffered automatically by the TPU grid pipeline), runs the
+  per-tile phase (``tile_fn``: generation → injection → routing →
+  allocation → pops), and writes back the tile plus a ``mov`` halo of
+  granted flits.  The cross-tile epilogue (``finish_fn``: receive
+  pushes, watchdog livelock, statistics) runs as plain jnp outside the
+  kernel on the re-assembled state — it is O(N·P) scatter/reduce work
+  with none of the O(N²) tables, so it stays cheap.  Only the active
+  tile (plus the small whole-array operands: coords, channel tables and
+  the pre-cycle FIFO-occupancy snapshot ``fs_pre``) is ever resident,
+  so 64×64+ networks run the Pallas path instead of the dense
+  fallback.
 
-Capacity note: with whole-array blocks the full state must fit VMEM on
-TPU.  At the default flow-control parameters that holds through 16×16
-(~4 MB packed flits); past 32×32 (~13 MB) the flit buffer needs to be
-blocked over node ranges before the compiled path is practical.
+Because every path executes the *same* ``tile_fn``/``finish_fn`` pair
+(the whole-array kernel and the dense fallback compose them over one
+tile), no path can diverge from another; the differential battery
+(``tests/test_simstep_kernel.py``) pins all of them to the unfused
+oracle.  ``interpret=True`` executes the kernels through the Pallas
+interpreter — the CPU coverage path; the blocked dispatcher
+additionally offers an ``xla`` flavor (the tile grid as a ``vmap``
+over reshaped tile axes) as the *compiled* CPU realization of the
+same decomposition.
 """
 
 from __future__ import annotations
@@ -27,6 +41,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .ref import MOV_W, N_PART, TABLE_TILE_AXES, tile_state_keys
+
+__all__ = ["make_simstep_pallas", "make_simstep_blocked"]
 
 
 def make_simstep_pallas(cycle_fn, *, interpret: bool = False):
@@ -69,5 +87,189 @@ def make_simstep_pallas(cycle_fn, *, interpret: bool = False):
                               interpret=interpret)(*ins)
         return {k: (o[0] if s else o)
                 for k, o, s in zip(skeys, outs, out_scal)}
+
+    return run_cycle
+
+
+# --------------------------------------------------------------------- #
+# blocked grid
+# --------------------------------------------------------------------- #
+def _table_block(field, shape, tn, nin_t):
+    """(block_shape, index_map) for one ``_Tables`` field per the
+    :data:`TABLE_TILE_AXES` layout — whole-array fields use a constant
+    index map (fetched once, kept resident across grid steps)."""
+    ax = TABLE_TILE_AXES[field]
+    rank = len(shape)
+    if ax is None:
+        return tuple(shape), (lambda i, _r=rank: (0,) * _r)
+    kind, axis = ax
+    size = tn if kind == "node" else nin_t
+    blk = tuple(size if d == axis else shape[d] for d in range(rank))
+    idx = (lambda i, _r=rank, _a=axis:
+           tuple(i if d == _a else 0 for d in range(_r)))
+    return blk, idx
+
+
+def _lead_block(shape, lead):
+    """(block_shape, index_map) tiling the leading axis to ``lead``."""
+    rank = len(shape)
+    blk = (lead,) + tuple(shape[1:])
+    idx = (lambda i, _r=rank: (i,) + (0,) * (_r - 1))
+    return blk, idx
+
+
+def make_simstep_blocked(meta: dict, cfg, tile_fn, finish_fn,
+                         tile_nodes: int, *, flavor: str = "pallas",
+                         interpret: bool = False):
+    """Wrap the tile-decomposed cycle body as a blocked
+    ``run_cycle(tables, core, rand, cycle)`` over ``tile_nodes``-node
+    tiles.
+
+    ``flavor``:
+
+    * ``"pallas"`` — grid ``pallas_call``: one program per tile, tiled
+      BlockSpecs stream the tile's state/table slices HBM→VMEM (the TPU
+      grid pipeline double-buffers consecutive tiles automatically);
+      ``interpret=True`` runs it through the Pallas interpreter (CPU
+      coverage).
+    * ``"xla"`` — the same tile decomposition as a ``jax.vmap`` over
+      reshaped (ntiles, tile, ...) axes — the compiled CPU realization
+      (tile bodies are data-parallel; batching them is value-identical
+      since the body has no cross-tile reductions).
+
+    Both end with the identical jnp ``finish_fn`` epilogue on the
+    re-assembled state.  Requires ``tile_nodes`` to divide the node
+    count.
+    """
+    n, p, v, nin = meta["N"], meta["P"], meta["V"], meta["NIN"]
+    pv = p * v
+    tn = int(tile_nodes)
+    if tn <= 0 or n % tn:
+        raise ValueError(
+            f"sim_tile_nodes={tile_nodes} must be a positive divisor of "
+            f"the node count ({n})")
+    ntiles = n // tn
+    nin_t = tn * pv
+    node_keys, input_keys, scalar_keys = tile_state_keys(cfg)
+    if flavor not in ("pallas", "xla"):
+        raise ValueError(f"unknown blocked flavor {flavor!r}")
+
+    def finish(tables, core, new_ts, mov, parts, cycle):
+        state = dict(core)
+        state.update(new_ts)
+        return finish_fn(tables, state, mov, parts, cycle)
+
+    if flavor == "xla":
+
+        def run_cycle(tables, core, rand, cycle):
+            fs_pre = core["fifo_size"]
+
+            def by_node(x):
+                return x.reshape((ntiles, tn) + x.shape[1:])
+
+            def by_input(x):
+                return x.reshape((ntiles, nin_t) + x.shape[1:])
+
+            t_stk, t_ax = [], []
+            for field, val in zip(type(tables)._fields, tables):
+                ax = TABLE_TILE_AXES[field]
+                if ax is None:
+                    t_stk.append(val)
+                    t_ax.append(None)
+                elif ax[0] == "input":
+                    t_stk.append(by_input(val))
+                    t_ax.append(0)
+                else:  # node-tiled at ax[1]
+                    axis = ax[1]
+                    shp = val.shape
+                    t_stk.append(val.reshape(
+                        shp[:axis] + (ntiles, tn) + shp[axis + 1:]))
+                    t_ax.append(axis)
+            t_stk = type(tables)(*t_stk)
+            t_ax = type(tables)(*t_ax)
+            ts = {k: by_node(core[k]) for k in node_keys}
+            ts.update({k: by_input(core[k]) for k in input_keys})
+            ts.update({k: core[k] for k in scalar_keys})
+            ts_ax = {k: 0 for k in node_keys + input_keys}
+            ts_ax.update({k: None for k in scalar_keys})
+            rand_stk = {k: by_node(val) for k, val in rand.items()}
+            node0s = jnp.arange(ntiles, dtype=jnp.int32) * tn
+            new_ts, mov, parts = jax.vmap(
+                tile_fn, in_axes=(t_ax, ts_ax, 0, None, None, 0))(
+                t_stk, ts, rand_stk, fs_pre, jnp.asarray(cycle, jnp.int32),
+                node0s)
+            new_ts = {k: val.reshape((-1,) + val.shape[2:])
+                      for k, val in new_ts.items()}
+            return finish(tables, core, new_ts,
+                          mov.reshape(n, p, MOV_W), parts.sum(0), cycle)
+
+        return run_cycle
+
+    # ----------------------------- pallas ----------------------------- #
+    def run_cycle(tables, core, rand, cycle):
+        rkeys = sorted(rand)
+        fs_pre = core["fifo_size"]
+        ins, in_specs = [], []
+        for field, val in zip(type(tables)._fields, tables):
+            blk, idx = _table_block(field, val.shape, tn, nin_t)
+            ins.append(val)
+            in_specs.append(pl.BlockSpec(blk, idx))
+        state_keys = node_keys + input_keys
+        for k in state_keys:
+            lead = tn if k in node_keys else nin_t
+            blk, idx = _lead_block(core[k].shape, lead)
+            ins.append(core[k])
+            in_specs.append(pl.BlockSpec(blk, idx))
+        for k in scalar_keys:  # scalars ride as (1,) refs
+            ins.append(jnp.asarray(core[k])[None])
+            in_specs.append(pl.BlockSpec((1,), lambda i: (0,)))
+        for k in rkeys:  # all draws are node-keyed
+            blk, idx = _lead_block(rand[k].shape, tn)
+            ins.append(rand[k])
+            in_specs.append(pl.BlockSpec(blk, idx))
+        ins.append(fs_pre)
+        in_specs.append(pl.BlockSpec((nin,), lambda i: (0,)))
+        ins.append(jnp.asarray(cycle, jnp.int32)[None])
+        in_specs.append(pl.BlockSpec((1,), lambda i: (0,)))
+
+        out_shape, out_specs = [], []
+        for k in state_keys:
+            lead = tn if k in node_keys else nin_t
+            blk, idx = _lead_block(core[k].shape, lead)
+            out_shape.append(jax.ShapeDtypeStruct(core[k].shape,
+                                                  core[k].dtype))
+            out_specs.append(pl.BlockSpec(blk, idx))
+        out_shape.append(jax.ShapeDtypeStruct((n, p, MOV_W), jnp.int32))
+        out_specs.append(pl.BlockSpec((tn, p, MOV_W), lambda i: (i, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((ntiles, N_PART), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, N_PART), lambda i: (i, 0)))
+
+        nt, nst = len(tables), len(state_keys)
+        nsc, nr = len(scalar_keys), len(rkeys)
+
+        def body(*refs):
+            vals = [r[...] for r in refs[:len(ins)]]
+            t = type(tables)(*vals[:nt])
+            ts = dict(zip(state_keys, vals[nt:nt + nst]))
+            ts.update({k: v[0] for k, v in
+                       zip(scalar_keys, vals[nt + nst:nt + nst + nsc])})
+            rd = dict(zip(rkeys, vals[nt + nst + nsc:
+                                      nt + nst + nsc + nr]))
+            fs = vals[-2]
+            cyc = vals[-1][0]
+            node0 = pl.program_id(0) * tn
+            new_ts, mov, parts = tile_fn(t, ts, rd, fs, cyc, node0)
+            outs = refs[len(ins):]
+            for ref, k in zip(outs[:nst], state_keys):
+                ref[...] = new_ts[k]
+            outs[nst][...] = mov
+            outs[nst + 1][...] = parts[None]
+
+        outs = pl.pallas_call(
+            body, grid=(ntiles,), in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape, interpret=interpret)(*ins)
+        new_ts = dict(zip(state_keys, outs[:nst]))
+        mov, parts = outs[nst], outs[nst + 1]
+        return finish(tables, core, new_ts, mov, parts.sum(0), cycle)
 
     return run_cycle

@@ -1,21 +1,41 @@
-"""Fused per-cycle flit-step: the simulator hot path as one pass.
+"""Fused per-cycle flit-step: the simulator hot path, tile-decomposed.
 
-:func:`make_cycle_fn` builds the full per-cycle transition — packet
+:func:`make_cycle_parts` builds the full per-cycle transition — packet
 generation, source-queue pushes, flit injection, table-routed port
 selection, switch allocation, flit movement, credit/lock updates and
-statistics — as ONE jnp function over the packed flit records.  The
-same body serves both backends (dispatched by
+statistics — as TWO jnp functions over the packed flit records:
+
+* ``tile_fn`` — everything a node range can do on its own slice of the
+  state (stages 1–6 below, *except* the network receive-pushes): one
+  tile of nodes plus their input-VC FIFOs, reading only one whole-array
+  operand (``fs_pre``, the pre-cycle FIFO occupancy, for credit checks
+  that target neighbour inputs).  Besides its updated slice it emits a
+  ``mov`` record per (node, output port) — the granted winner flit with
+  its routing decision, the "halo" of flits about to cross tile
+  boundaries — and a small vector of integer partial sums.
+* ``finish_fn`` — the cross-tile epilogue on the re-assembled state:
+  receive-side FIFO pushes (a flit granted toward a neighbour lands in
+  that neighbour's input, which may live in another tile), watchdog
+  livelock throttling, and all global statistics/telemetry, consuming
+  only ``mov`` + the partials.
+
+The same parts serve every backend (dispatched by
 :mod:`repro.kernels.simstep.ops`):
 
-* dense fallback — XLA jit-compiles the body directly (the CPU path);
-* Pallas — :mod:`repro.kernels.simstep.kernel` hands every
-  table/state/rand array to a single kernel invocation and calls this
-  body on the loaded values, so the whole cycle runs as one on-chip
-  pass with no HBM round-trips between the pipeline stages.
+* dense fallback — :func:`make_cycle_fn` composes ``tile_fn`` over the
+  whole network (one tile) with ``finish_fn``; XLA jit-compiles it
+  directly (the CPU path);
+* whole-array Pallas — :mod:`repro.kernels.simstep.kernel` hands every
+  operand to a single-program ``pallas_call`` running the same
+  composition on chip;
+* blocked Pallas — the kernel module grids ``tile_fn`` over node tiles
+  with per-tile BlockSpecs (double-buffered HBM→VMEM streaming) and
+  runs ``finish_fn`` outside the kernel, so networks whose state
+  exceeds VMEM still run the Pallas path.
 
 **Exact-equivalence contract.**  The unfused oracle is
-``repro.noc.sim._make_step``; every place this body differs from it is
-an integer-exact or provably bit-identical rewrite:
+``repro.noc.sim._make_step``; every place these bodies differ from it
+is an integer-exact or provably bit-identical rewrite:
 
 * destination sampling — the O(N²) dense CDF compare-and-count becomes
   a vectorized binary search.  CDF rows are cumsums of non-negative
@@ -23,21 +43,33 @@ an integer-exact or provably bit-identical rewrite:
   equals the dense ``(cdf <= u).sum(1)`` count.
 * ``next_seq`` and the reorder bookkeeping — dense one-hot row updates
   become int32 scatters at the same (per-row unique) indices.
+* credit/adaptive reads go through ``fs_pre`` (the pre-cycle FIFO
+  sizes) instead of the live post-injection array.  Equal by
+  construction: every *consumed* read targets a network receive port
+  (via the ``recv_port`` table, which never maps to the local port),
+  and same-cycle injection only touches local-port FIFOs.  Unconsumed
+  reads (invalid heads, missing-port sentinels clipped in range) are
+  masked by ``valid``/``elig`` before they can propagate — exactly as
+  in the oracle.
+* receive pushes moved after allocation of *all* tiles — order-safe
+  because push slots derive from post-pop ``fifo_start``/``fifo_size``
+  (the oracle's own pops-then-pushes order) and each cycle's push
+  indices are unique (point-to-point links: one winner per channel).
 
-The rewrites are *size-gated* (``n >= _WIDE_N``): their per-op dispatch
-overhead only pays for itself once the O(N²) terms dominate, so small
-meshes run the literal dense formulation and large meshes the scatter/
-search one — both exact, so the gate can never change a result, only
-the op schedule.
+The per-tile/epilogue split itself changes no values: switch
+allocation is per-node (argmin over a node's own inputs), all stage
+1–6 state writes land in the owning tile, and the integer partial sums
+are order-independent.
 
 Everything else is copied operation-for-operation (same op order, same
 dtypes, same clip/sentinel conventions).  RNG is hoisted out of the
 body: :func:`split_rand` consumes the per-lane key with the identical
 split/draw sequence as the unfused step, and the drawn uniforms enter
-the body as data — required by the Pallas path (no key ops inside a
+the body as data — required by the Pallas paths (no key ops inside a
 kernel) and bit-preserving by construction.  The differential battery
 (``tests/test_simstep_kernel.py``) pins fused == unfused from
-randomized mid-flight states across topologies and algorithms.
+randomized mid-flight states across topologies, algorithms and all
+three dispatch paths.
 """
 
 from __future__ import annotations
@@ -66,8 +98,8 @@ _WIDE_N = 256
 # ``SimConfig.telemetry`` the state additionally carries the
 # ``repro.obs.probe.TEL_KEYS`` ring buffers, and with
 # ``SimConfig.watchdog`` the ``repro.noc.watchdog.WD_KEYS`` counters;
-# the kernel wrapper is generic over the state dict's keys, so both
-# flow through both backends unchanged.
+# the kernel wrappers are generic over the state dict's keys, so both
+# flow through every backend unchanged.
 CORE_KEYS = (
     "flits", "fifo_start", "fifo_size", "lock_op", "lock_ov", "out_held",
     "rr", "qpkts", "q_start", "q_size", "prog", "next_seq", "exp_seq",
@@ -76,6 +108,48 @@ CORE_KEYS = (
     "dropped", "eject_total", "meas_cnt", "rate", "cycle0", "inject_until",
     "measure_until",
 )
+
+# --------------------------------------------------------------------- #
+# tile-decomposition layout (shared with kernel.py's BlockSpecs and
+# ops.py's capacity math — ONE source of truth for what streams per tile)
+# --------------------------------------------------------------------- #
+# State keys tile_fn reads/writes, by leading axis: node-major (N, ...)
+# vs input-major (NIN, ...); scalars ride alongside read-only.
+TILE_NODE_KEYS = ("out_held", "rr", "qpkts", "q_start", "q_size", "prog",
+                  "next_seq")
+TILE_INPUT_KEYS = ("flits", "fifo_start", "fifo_size", "lock_op", "lock_ov")
+TILE_SCALAR_KEYS = ("rate", "cycle0", "inject_until")
+
+
+def tile_state_keys(cfg: SimConfig):
+    """(node_keys, input_keys, scalar_keys) the tile body touches for
+    this config — the watchdog adds one array to each tiled class."""
+    node = TILE_NODE_KEYS + (("wd_throttle",) if cfg.watchdog else ())
+    inp = TILE_INPUT_KEYS + (("wd_stall",) if cfg.watchdog else ())
+    return node, inp, TILE_SCALAR_KEYS
+
+
+# How each ``_Tables`` field blocks over a node tile: axis kind is
+# "node" (leading dim N, or axis 1 for the (O, N, N) port tables),
+# "input" (leading dim NIN), or None (whole-array: either tiny or
+# genuinely global).  ``chan_src_n``/``chan_src_p`` are epilogue-only
+# but kept here so the kernel wrappers stay generic over all fields.
+TABLE_TILE_AXES = dict(
+    port=("node", 1), choice=("node", 0), neighbor=("node", 0),
+    recv_port=("node", 0), cdf=("node", 0), p_gen=("node", 0),
+    coords=None, strides=None, n_of=("input", 0), p_of=("input", 0),
+    v_of=("input", 0), chan_src_n=None, chan_src_p=None,
+    chan_of=("node", 0), chan_bw=None, esc_port=("node", 0),
+)
+
+# tile_fn's ``mov`` halo record per (node, out-port): the NF flit words
+# of the granted winner, its routing decision (op, ov, route_phase) and
+# the grant flag — everything the epilogue needs for receive pushes,
+# watchdog livelock handling and statistics.
+MOV_W = NF + 4
+# tile_fn's integer partial sums (order-independent across tiles).
+N_PART = 5
+(PART_GEN, PART_PUSH, PART_SHED, PART_INJ, PART_STALL) = range(N_PART)
 
 
 def split_rand(key, algo: Algo, n: int, ndim: int):
@@ -98,11 +172,26 @@ def split_rand(key, algo: Algo, n: int, ndim: int):
     return key, rand
 
 
-def make_cycle_fn(meta: dict, cfg: SimConfig):
-    """Build ``cycle_fn(tables, state, rand, cycle) -> state`` — the
-    fused per-cycle transition over the core state arrays (no PRNG
-    key; ``rand`` carries this cycle's draws from :func:`split_rand`,
-    ``cycle`` is the in-chunk cycle index)."""
+def make_cycle_parts(meta: dict, cfg: SimConfig):
+    """Build the tile-decomposed per-cycle transition:
+    ``(tile_fn, finish_fn)``.
+
+    ``tile_fn(t, ts, rand, fs_pre, cycle, node0) -> (new_ts, mov, parts)``
+        runs stages 1–6 (minus receive pushes) for one node tile.
+        ``t`` is a ``_Tables`` whose fields are sliced to the tile per
+        :data:`TABLE_TILE_AXES`; ``ts`` the tile's state slice
+        (:func:`tile_state_keys`) plus the read-only scalars; ``rand``
+        this cycle's draws sliced to the tile's nodes; ``fs_pre`` the
+        whole-network PRE-cycle ``fifo_size``; ``cycle`` the in-chunk
+        cycle index; ``node0`` the tile's first absolute node id
+        (python int or traced scalar).  ``new_ts`` holds the updated
+        node/input keys only; ``mov`` is (tn, P, MOV_W) int32; ``parts``
+        (N_PART,) int32.
+
+    ``finish_fn(t, state, mov, parts, cycle) -> state``
+        the epilogue over the re-assembled full state (``t`` unsliced,
+        ``mov`` (N, P, MOV_W), ``parts`` summed over tiles).
+    """
     algo = Algo(cfg.algo)
     n, p, v, nin = meta["N"], meta["P"], meta["V"], meta["NIN"]
     p_local = meta["P_LOCAL"]
@@ -115,6 +204,9 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
     two_phase = algo in (Algo.VALIANT, Algo.ROMM)
     tel_epoch = resolved_epoch(cfg)  # 0 ⇔ telemetry off
     watchdog = bool(cfg.watchdog)
+    # the O(N²)-rewrite gate stays a function of the NETWORK size, not
+    # the tile size: both formulations are exact, so this choice can
+    # never change a result, only the op schedule
     wide = n >= _WIDE_N
     # binary-search iteration count: the [0, n] interval at least halves
     # every guarded step, so bit_length(n) steps always converge
@@ -124,10 +216,11 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         """Upper-bound binary search per source row: the count of CDF
         entries <= ud — bit-identical to the unfused dense
         ``(cdf <= ud[:, None]).sum(1)`` because each row is
-        non-decreasing (cumsum of non-negative float32)."""
-        rows = jnp.arange(n)
-        lo = jnp.zeros(n, jnp.int32)
-        hi = jnp.full((n,), n, jnp.int32)
+        non-decreasing (cumsum of non-negative float32).  ``cdf`` may be
+        a row-slice (tile) of the full table; columns stay full-width."""
+        rows = jnp.arange(cdf.shape[0])
+        lo = jnp.zeros(cdf.shape[0], jnp.int32)
+        hi = jnp.full((cdf.shape[0],), n, jnp.int32)
         for _ in range(search_iters):
             mid = (lo + hi) // 2
             le = cdf[rows, jnp.clip(mid, 0, n - 1)] <= ud
@@ -136,48 +229,56 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
             hi = jnp.where(upd & ~le, mid, hi)
         return lo
 
-    def fifo_push(state, idx, ok, records):
+    def fifo_push(state, idx, ok, records, nfull):
         """Append packed flit ``records`` (K, NF) to FIFOs ``idx`` where
-        ``ok`` — ONE scatter with a contiguous NF-word payload."""
+        ``ok`` — ONE scatter with a contiguous NF-word payload.
+        ``nfull`` is the FIFO count of the (possibly tile-sliced)
+        arrays; out-of-range ⇒ dropped."""
         slot = (state["fifo_start"][idx] + state["fifo_size"][idx]) % b
-        safe_idx = jnp.where(ok, idx, nin)  # out of range ⇒ dropped
+        safe_idx = jnp.where(ok, idx, nfull)
         state["flits"] = state["flits"].at[safe_idx, slot].set(
             records, mode="drop")
         state["fifo_size"] = state["fifo_size"].at[safe_idx].add(
             1, mode="drop")
         return state
 
-    def gen_metadata(t, rand, src, dst):
+    def gen_metadata(t, rand, src_l, src_a, dst):
         """Per-algo packet metadata (order, inter) from the hoisted
-        draws — same arithmetic as the unfused ``gen_metadata``."""
+        draws — same arithmetic as the unfused ``gen_metadata``.
+        ``src_l`` indexes tile-sliced tables (choice), ``src_a`` the
+        whole-array ones (coords); identical when the tile is the whole
+        network."""
+        tn = src_l.shape[0]
         if algo == Algo.XY:
-            order = jnp.zeros(n, jnp.int32)
+            order = jnp.zeros(tn, jnp.int32)
         elif algo == Algo.YX:
-            order = jnp.full((n,), num_orders - 1, jnp.int32)
+            order = jnp.full((tn,), num_orders - 1, jnp.int32)
         elif algo == Algo.O1TURN:
             order = jnp.where(rand["ob"], num_orders - 1, 0).astype(
                 jnp.int32)
         elif algo == Algo.BIDOR:
-            order = t.choice[src, dst]
+            order = t.choice[src_l, dst]
         else:
-            order = jnp.zeros(n, jnp.int32)
+            order = jnp.zeros(tn, jnp.int32)
         if algo == Algo.VALIANT:
             inter = rand["ri"]
         elif algo == Algo.ROMM:
-            cs, cd = t.coords[src], t.coords[dst]
+            cs, cd = t.coords[src_a], t.coords[dst]
             lo = jnp.minimum(cs, cd)
             hi = jnp.maximum(cs, cd)
             ic = lo + (rand["ur"] * (hi - lo + 1)).astype(jnp.int32)
             ic = jnp.clip(ic, lo, hi)
             inter = (ic * t.strides).sum(-1)
         else:
-            inter = jnp.full((n,), -1, jnp.int32)
+            inter = jnp.full((tn,), -1, jnp.int32)
         return order, inter
 
     def oddeven_route(t, cur, src, target, free_by_port):
         """Chiu's minimal adaptive odd-even ROUTE + credit-based selection.
 
         Ports: 0=+x(E) 1=−x(W) 2=+y 3=−y.  Returns the chosen port.
+        ``cur``/``src``/``target`` are absolute node ids (coords is a
+        whole-array table).
         """
         cx = t.coords[cur, 0]
         sx = t.coords[src, 0]
@@ -198,124 +299,135 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         prefer_y = y_ok & ((~x_ok) | (fy > fx))
         return jnp.where(prefer_y, y_port, x_port), x_ok, y_ok
 
-    def cycle_fn(t, state, rand, cycle):
-        # iotas built inside the body: under the Pallas trace they are
+    def tile_fn(t, ts, rand, fs_pre, cycle, node0):
+        # iotas built inside the body: under a Pallas trace they are
         # kernel ops, not captured host constants (which pallas_call
-        # rejects); under the dense jit XLA folds them away identically
-        n_arange = jnp.arange(n)
-        nin_arange = jnp.arange(nin)
-        cycle = state["cycle0"] + cycle    # absolute cycle across segments
-        measuring = (cycle >= cfg.warmup) & (cycle < state["measure_until"])
-        state["meas_cnt"] += measuring.astype(jnp.int32)
+        # rejects); under the dense jit XLA folds them away identically.
+        # Row indices are TILE-LOCAL (they address the sliced arrays);
+        # ``na`` carries the absolute node ids for everything that
+        # compares against or stamps node identities.
+        tn = t.p_gen.shape[0]
+        nin_t = tn * pv
+        nl = jnp.arange(tn)                 # local node rows
+        na = node0 + nl                     # absolute node ids
+        til = jnp.arange(nin_t)             # local input rows
+        nli = til // pv                     # local node of each input
+        cycle = ts["cycle0"] + cycle        # absolute cycle
+        new_ts = {k: ts[k] for k in ts
+                  if k not in TILE_SCALAR_KEYS}
 
         # ---------------- 1. packet generation (open loop) -------------- #
         u, ud = rand["u"], rand["ud"]
-        gen = (u < (t.p_gen * (state["rate"] / l))) \
-            & (cycle < state["inject_until"])
+        gen = (u < (t.p_gen * (ts["rate"] / l))) \
+            & (cycle < ts["inject_until"])
         if watchdog:
             # livelock throttle: mask generation at throttled sources —
-            # mask only (draws are hoisted), identical to the unfused step
-            gen = gen & (state["wd_throttle"] <= 0)
-            state["wd_throttle"] = jnp.maximum(state["wd_throttle"] - 1, 0)
+            # mask only (draws are hoisted), identical to the unfused
+            # step.  The throttle SET (a cross-tile scatter from moving
+            # flits) lives in finish_fn; oracle ordering is preserved
+            # because the oracle's same-cycle set is likewise invisible
+            # to this read (it happens in stage 6).
+            gen = gen & (ts["wd_throttle"] <= 0)
+            new_ts["wd_throttle"] = jnp.maximum(ts["wd_throttle"] - 1, 0)
         raw_dst = (sample_dst(t.cdf, ud) if wide
                    else (t.cdf <= ud[:, None]).sum(1))
         dst = jnp.clip(raw_dst, 0, n - 1).astype(jnp.int32)
-        order, inter = gen_metadata(t, rand, n_arange, dst)
-        space = state["q_size"] < q
+        order, inter = gen_metadata(t, rand, nl, na, dst)
+        space = ts["q_size"] < q
         push = gen & space
-        seq = state["next_seq"][n_arange, dst]
+        seq = ts["next_seq"][nl, dst]
         # row s bumps column dst[s] (rows distinct): scatter or one-hot
         if wide:
-            state["next_seq"] = state["next_seq"].at[n_arange, dst].add(
+            new_ts["next_seq"] = ts["next_seq"].at[nl, dst].add(
                 push.astype(jnp.int32))
         else:
-            state["next_seq"] = state["next_seq"] + (
-                push[:, None] & (n_arange[None, :] == dst[:, None]))
-        slot = (state["q_start"] + state["q_size"]) % q
-        row = jnp.where(push, n_arange, n)  # drop when not pushing
+            new_ts["next_seq"] = ts["next_seq"] + (
+                push[:, None] & (jnp.arange(n)[None, :] == dst[:, None]))
+        slot = (ts["q_start"] + ts["q_size"]) % q
+        row = jnp.where(push, nl, tn)  # drop when not pushing
         qrec = jnp.stack(
-            [dst, inter, order, jnp.full((n,), cycle, jnp.int32), seq], -1)
-        state["qpkts"] = state["qpkts"].at[row, slot].set(qrec, mode="drop")
-        state["q_size"] = state["q_size"] + push
-        state["offered"] += jnp.where(measuring, gen.sum(), 0)
-        state["dropped"] += jnp.where(measuring, (gen & ~space).sum(), 0)
+            [dst, inter, order, jnp.full((tn,), cycle, jnp.int32), seq], -1)
+        new_ts["qpkts"] = ts["qpkts"].at[row, slot].set(qrec, mode="drop")
+        new_ts["q_size"] = ts["q_size"] + push
 
         # ---------------- 2. flit injection (1/cycle/node) -------------- #
-        hs = state["q_start"]
-        hpkt = state["qpkts"][n_arange, hs]  # (N, NQ)
+        hs = ts["q_start"]
+        hpkt = new_ts["qpkts"][nl, hs]  # (tn, NQ)
         h_dst = hpkt[:, Q_DST]
         h_inter = hpkt[:, Q_INTER]
         h_order = hpkt[:, Q_ORDER]
         h_seq = hpkt[:, Q_SEQ]
         h_time = hpkt[:, Q_TIME]
-        fl_head = state["prog"] == 0
-        fl_tail = state["prog"] == l - 1
-        phase0 = (h_inter < 0) | (h_inter == n_arange)
+        fl_head = ts["prog"] == 0
+        fl_tail = ts["prog"] == l - 1
+        phase0 = (h_inter < 0) | (h_inter == na)
         if algo in (Algo.XY, Algo.YX):
-            vc_in = (n_arange + h_dst) % v
+            vc_in = (na + h_dst) % v
         elif algo in (Algo.O1TURN, Algo.BIDOR):
             vc_in = h_order % v
         elif two_phase:
             vc_in = phase0.astype(jnp.int32) % v
         else:  # ODDEVEN: local VC with more space
-            base = (n_arange * p + p_local) * v
-            sizes = jnp.stack([state["fifo_size"][base + k]
+            base = (nl * p + p_local) * v
+            sizes = jnp.stack([ts["fifo_size"][base + k]
                                for k in range(v)], 1)
             vc_in = jnp.argmin(sizes, 1).astype(jnp.int32)
-        lf_idx = (n_arange * p + p_local) * v + vc_in
-        can = (state["q_size"] > 0) & (state["fifo_size"][lf_idx] < b)
+        lf_idx = (nl * p + p_local) * v + vc_in
+        can = (new_ts["q_size"] > 0) & (ts["fifo_size"][lf_idx] < b)
         inj_rec = jnp.stack(
-            [n_arange, h_dst, h_inter, h_seq, h_time,
-             jnp.zeros(n, jnp.int32), h_order, fl_head.astype(jnp.int32),
+            [na, h_dst, h_inter, h_seq, h_time,
+             jnp.zeros(tn, jnp.int32), h_order, fl_head.astype(jnp.int32),
              fl_tail.astype(jnp.int32), phase0.astype(jnp.int32)], -1)
-        state = fifo_push(state, lf_idx, can, inj_rec)
-        state["prog"] = jnp.where(can, state["prog"] + 1, state["prog"])
-        done = can & (state["prog"] >= l)
-        state["prog"] = jnp.where(done, 0, state["prog"])
-        state["q_start"] = jnp.where(done, (hs + 1) % q, hs)
-        state["q_size"] = state["q_size"] - done
-        state["injected"] += can.sum()
+        new_ts = fifo_push(new_ts, lf_idx, can, inj_rec, nin_t)
+        new_ts["prog"] = jnp.where(can, ts["prog"] + 1, ts["prog"])
+        done = can & (new_ts["prog"] >= l)
+        new_ts["prog"] = jnp.where(done, 0, new_ts["prog"])
+        new_ts["q_start"] = jnp.where(done, (hs + 1) % q, hs)
+        new_ts["q_size"] = new_ts["q_size"] - done
 
         # ---------------- 3. head-of-line + routing --------------------- #
-        st_ = state["fifo_start"]
-        g_all = state["flits"][nin_arange, st_]  # (NIN, NF) one gather
+        st_ = ts["fifo_start"]
+        g_all = new_ts["flits"][til, st_]  # (NIN_T, NF) one gather
         g = dict(src=g_all[:, F_SRC], dst=g_all[:, F_DST],
                  inter=g_all[:, F_INTER], seq=g_all[:, F_SEQ],
                  time=g_all[:, F_TIME], hops=g_all[:, F_HOPS],
                  order=g_all[:, F_ORDER], head=g_all[:, F_HEAD] != 0,
                  tail=g_all[:, F_TAIL] != 0, phase=g_all[:, F_PHASE] != 0)
-        valid = state["fifo_size"] > 0
+        valid = new_ts["fifo_size"] > 0
         route_phase = g["phase"] | (g["inter"] < 0) | (g["inter"] == t.n_of)
         target = jnp.where(route_phase, g["dst"], g["inter"])
         target = jnp.clip(target, 0, n - 1)
         at_dest = target == t.n_of
-        locked = state["lock_op"] >= 0
+        locked = ts["lock_op"] >= 0
 
-        # receiver free space per (input, port): for adaptive selection
+        # receiver free space per (input, port): for adaptive selection.
+        # Reads go through the PRE-cycle whole-network snapshot; every
+        # consumed location is a network receive port (untouched by
+        # same-cycle injection), so this equals the oracle's live read.
         if algo == Algo.ODDEVEN:
-            recv_base = (t.neighbor * p + t.recv_port) * v  # (N, P)
+            recv_base = (t.neighbor * p + t.recv_port) * v  # (tn, P)
             free_pv = jnp.stack(
-                [b - state["fifo_size"][recv_base + k] for k in range(v)],
-                -1)  # (N, P, V)
-            free_port_total = free_pv.sum(-1)  # (N, P)
+                [b - fs_pre[recv_base + k] for k in range(v)],
+                -1)  # (tn, P, V)
+            free_port_total = free_pv.sum(-1)  # (tn, P)
             op_ad, _, _ = oddeven_route(
-                t, t.n_of, g["src"], target, free_port_total[t.n_of])
+                t, t.n_of, g["src"], target, free_port_total[nli])
             # VC choice: freer VC at the chosen port, must be un-held
-            held = state["out_held"][t.n_of, op_ad] >= 0  # (NIN, V)
-            f = free_pv[t.n_of, op_ad]  # (NIN, V)
+            held = ts["out_held"][nli, op_ad] >= 0  # (NIN_T, V)
+            f = free_pv[nli, op_ad]  # (NIN_T, V)
             f = jnp.where(held, -1, f)
             ov_route = jnp.argmax(f, -1).astype(jnp.int32)
             op_route = op_ad
         else:
             if algo == Algo.XY:
-                eff_order = jnp.zeros(nin, jnp.int32)
+                eff_order = jnp.zeros(nin_t, jnp.int32)
             elif algo == Algo.YX:
-                eff_order = jnp.full((nin,), num_orders - 1, jnp.int32)
+                eff_order = jnp.full((nin_t,), num_orders - 1, jnp.int32)
             elif two_phase:
-                eff_order = jnp.zeros(nin, jnp.int32)
+                eff_order = jnp.zeros(nin_t, jnp.int32)
             else:
                 eff_order = g["order"]
-            op_route = t.port[eff_order, t.n_of, target]
+            op_route = t.port[eff_order, nli, target]
             if algo in (Algo.XY, Algo.YX):
                 ov_route = t.v_of
             elif two_phase:
@@ -324,25 +436,25 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
                 ov_route = g["order"] % v
         op = jnp.where(at_dest, p_local, op_route)
         ov = jnp.where(at_dest, 0, ov_route)
-        op = jnp.where(locked, state["lock_op"], op)
-        ov = jnp.where(locked, state["lock_ov"], ov)
+        op = jnp.where(locked, ts["lock_op"], op)
+        ov = jnp.where(locked, ts["lock_ov"], ov)
         if watchdog:
             # deadlock escape: stalled heads misroute one hop via the
             # acyclic DOR escape table on the highest VC (escape lane) —
             # same ops as the unfused step
-            esc = (state["wd_stall"] >= cfg.wd_stall_cycles) \
+            esc = (ts["wd_stall"] >= cfg.wd_stall_cycles) \
                 & valid & g["head"] & ~locked & ~at_dest
-            op = jnp.where(esc, t.esc_port[t.n_of, target], op)
+            op = jnp.where(esc, t.esc_port[nli, target], op)
             ov = jnp.where(esc, v - 1, ov)
 
         # ---------------- 4. eligibility -------------------------------- #
         is_eject = op == p_local
-        nei = t.neighbor[t.n_of, jnp.clip(op, 0, p - 1)]
-        rp = t.recv_port[t.n_of, jnp.clip(op, 0, p - 1)]
+        nei = t.neighbor[nli, jnp.clip(op, 0, p - 1)]
+        rp = t.recv_port[nli, jnp.clip(op, 0, p - 1)]
         recv_idx = (nei * p + rp) * v + ov
-        has_credit = is_eject | (state["fifo_size"][
+        has_credit = is_eject | (fs_pre[
             jnp.clip(recv_idx, 0, nin - 1)] < b)
-        vc_free = state["out_held"][t.n_of, jnp.clip(op, 0, p - 1), ov] == -1
+        vc_free = ts["out_held"][nli, jnp.clip(op, 0, p - 1), ov] == -1
         needs_alloc = g["head"] & ~locked & ~is_eject
         cycf = cycle.astype(jnp.float32)
         chan_live = (jnp.floor((cycf + 1.0) * t.chan_bw)
@@ -350,78 +462,119 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         chan_live = jnp.concatenate(
             [chan_live, jnp.zeros((1,), bool)])  # sentinel: no channel
         chan_ok = is_eject | chan_live[
-            t.chan_of[t.n_of, jnp.clip(op, 0, p - 1)]]
+            t.chan_of[nli, jnp.clip(op, 0, p - 1)]]
         elig = valid & has_credit & chan_ok & (vc_free | ~needs_alloc)
 
         # ---------------- 5. switch allocation (round-robin) ------------ #
-        # all output ports allocated at once: score (N, PV, P), winner per
-        # (node, port) column — ports are independent, so this is exactly
-        # the per-port round-robin pick
-        in_local = nin_arange % pv  # input index within its node
+        # all output ports allocated at once: score (tn, PV, P), winner
+        # per (node, port) column — ports are independent, so this is
+        # exactly the per-port round-robin pick; allocation never crosses
+        # a node, so it never crosses a tile either
+        in_local = til % pv  # input index within its node
         clip_op = jnp.clip(op, 0, p - 1)
-        elig2 = elig.reshape(n, pv)
-        op2 = op.reshape(n, pv)
+        elig2 = elig.reshape(tn, pv)
+        op2 = op.reshape(tn, pv)
         mask_po = elig2[:, :, None] & (op2[:, :, None]
                                        == jnp.arange(p)[None, None, :])
         score = (jnp.arange(pv)[None, :, None]
-                 - state["rr"][:, None, :]) % pv
+                 - ts["rr"][:, None, :]) % pv
         score = jnp.where(mask_po, score, _BIG)
-        win = jnp.argmin(score, 1).astype(jnp.int32)      # (N, P)
+        win = jnp.argmin(score, 1).astype(jnp.int32)      # (tn, P)
         ok = score.min(1) < _BIG
         grants = jnp.where(ok, win, -1)
-        state["rr"] = jnp.where(ok, (win + 1) % pv, state["rr"])
+        new_ts["rr"] = jnp.where(ok, (win + 1) % pv, ts["rr"])
 
-        # ---------------- 6. move granted flits ------------------------- #
-        granted = grants >= 0  # (N, P)
+        # ---------------- 6. move granted flits (tile part) ------------- #
+        granted = grants >= 0  # (tn, P)
         # input-centric pop flag: input i moved iff it won its output port
-        popped = elig & (grants[t.n_of, clip_op] == in_local)
+        popped = elig & (grants[nli, clip_op] == in_local)
         win_nin = jnp.where(granted,
-                            n_arange[:, None] * pv + grants, nin)  # drop idx
-        win_flat = jnp.clip(win_nin, 0, nin - 1).reshape(-1)
+                            nl[:, None] * pv + grants, nin_t)  # drop idx
+        win_flat = jnp.clip(win_nin, 0, nin_t - 1).reshape(-1)
         # winner records + routing decision, ONE gather of NF+3 words
         g_ext = jnp.concatenate(
             [g_all, op[:, None], ov[:, None],
              route_phase.astype(jnp.int32)[:, None]], -1)
-        w_ext = g_ext[win_flat].reshape(n, p, NF + 3)
+        w_ext = g_ext[win_flat].reshape(tn, p, NF + 3)
+        # pops (elementwise — ``popped`` marks at most one flit per input)
+        new_ts["fifo_start"] = jnp.where(popped, (st_ + 1) % b, st_)
+        new_ts["fifo_size"] = new_ts["fifo_size"] - popped
+        # receive-side pushes happen in finish_fn: the destination input
+        # may belong to another tile.  ``mov`` carries everything needed.
+        # wormhole locks (elementwise): set on head (non-tail), clear on
+        # tail
+        set_lock_i = popped & g["head"] & ~g["tail"]
+        clr_lock_i = popped & g["tail"]
+        new_ts["lock_op"] = jnp.where(
+            set_lock_i, op, jnp.where(clr_lock_i, -1, ts["lock_op"]))
+        new_ts["lock_ov"] = jnp.where(
+            set_lock_i, ov, jnp.where(clr_lock_i, -1, ts["lock_ov"]))
+        # out_held bookkeeping (elementwise over (tn, P, V); net ports
+        # only)
+        w_op = w_ext[..., NF]
+        w_all = w_ext[..., :NF]
+        net = granted & (w_op != p_local)
+        w_head = w_all[..., F_HEAD] != 0
+        w_tail = w_all[..., F_TAIL] != 0
+        w_ov = w_ext[..., NF + 1]
+        hold_set = granted & w_head & ~w_tail & net
+        hold_clr = granted & w_tail & net
+        vmask = ((hold_set | hold_clr)[..., None]
+                 & (jnp.arange(v)[None, None, :] == w_ov[..., None]))
+        hold_val = jnp.where(hold_set, grants, -1)
+        new_ts["out_held"] = jnp.where(vmask, hold_val[..., None],
+                                       ts["out_held"])
+        stall_trips = jnp.int32(0)
+        if watchdog:
+            # stall bookkeeping — identical op for op to the unfused
+            # oracle; the livelock throttle/trip (from moving flits,
+            # cross-tile) completes in finish_fn
+            new_stall = jnp.where(valid & ~popped, ts["wd_stall"] + 1, 0)
+            stall_trips = (new_stall == cfg.wd_stall_cycles).sum()
+            new_ts["wd_stall"] = new_stall
+
+        mov = jnp.concatenate(
+            [w_ext, granted.astype(jnp.int32)[..., None]], -1)
+        parts = jnp.stack([gen.sum(), push.sum(), (gen & ~space).sum(),
+                           can.sum(), stall_trips]).astype(jnp.int32)
+        return new_ts, mov, parts
+
+    def finish_fn(t, state, mov, parts, cycle):
+        n_arange = jnp.arange(n)
+        cycle = state["cycle0"] + cycle    # absolute cycle
+        measuring = (cycle >= cfg.warmup) & (cycle < state["measure_until"])
+        state["meas_cnt"] += measuring.astype(jnp.int32)
+        state["offered"] += jnp.where(measuring, parts[PART_GEN], 0)
+        state["dropped"] += jnp.where(measuring, parts[PART_SHED], 0)
+        state["injected"] += parts[PART_INJ]
+
+        # ------------- 6b. receive-side pushes (cross-tile) ------------- #
+        w_ext = mov[..., :NF + 3]
+        granted = mov[..., NF + 3] != 0    # (N, P)
         w_all = w_ext[..., :NF]
         w_op = w_ext[..., NF]
         w_ov = w_ext[..., NF + 1]
         w_phase = w_ext[..., NF + 2]
-        w = dict(head=w_all[..., F_HEAD] != 0, tail=w_all[..., F_TAIL] != 0)
-        # pops (elementwise — ``popped`` marks at most one flit per input)
-        state["fifo_start"] = jnp.where(popped, (st_ + 1) % b, st_)
-        state["fifo_size"] = state["fifo_size"] - popped
-        # pushes (network ports only): one packed scatter
+        # pushes (network ports only): one packed scatter.  Slot indices
+        # derive from post-pop fifo_start/fifo_size (Phase A already
+        # popped), matching the oracle's pops-then-pushes order; the
+        # per-cycle push targets are unique (one winner per channel), so
+        # scatter order across tiles cannot matter.
         net = granted & (w_op != p_local)
         dest_nei = t.neighbor[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
         dest_rp = t.recv_port[n_arange[:, None], jnp.clip(w_op, 0, p - 1)]
         dest_idx = (dest_nei * p + dest_rp) * v + w_ov
         push_rec = w_all.at[..., F_HOPS].add(1)
-        push_rec = push_rec.at[..., F_PHASE].set(w_phase.astype(jnp.int32))
+        push_rec = push_rec.at[..., F_PHASE].set(w_phase)
         state = fifo_push(state, dest_idx.reshape(-1), net.reshape(-1),
-                          push_rec.reshape(-1, NF))
-        # wormhole locks (elementwise): set on head (non-tail), clear on tail
-        set_lock_i = popped & g["head"] & ~g["tail"]
-        clr_lock_i = popped & g["tail"]
-        state["lock_op"] = jnp.where(
-            set_lock_i, op, jnp.where(clr_lock_i, -1, state["lock_op"]))
-        state["lock_ov"] = jnp.where(
-            set_lock_i, ov, jnp.where(clr_lock_i, -1, state["lock_ov"]))
-        # out_held bookkeeping (elementwise over (N, P, V); net ports only)
-        hold_set = granted & w["head"] & ~w["tail"] & net
-        hold_clr = granted & w["tail"] & net
-        vmask = ((hold_set | hold_clr)[..., None]
-                 & (jnp.arange(v)[None, None, :] == w_ov[..., None]))
-        hold_val = jnp.where(hold_set, grants, -1)
-        state["out_held"] = jnp.where(vmask, hold_val[..., None],
-                                      state["out_held"])
+                          push_rec.reshape(-1, NF), nin)
         if watchdog:
-            # stall / trip / throttle bookkeeping — identical op for op
-            # to the unfused oracle's watchdog block
-            new_stall = jnp.where(valid & ~popped, state["wd_stall"] + 1, 0)
+            # livelock trip/throttle from the moving flits — identical
+            # values to the oracle: the stage-1 decrement (tile phase)
+            # read pre-cycle throttles, and this set overwrites it, so
+            # final = where(livelocked-source, C, decremented) either way
             state["wd_trips"] = state["wd_trips"].at[0].add(
-                (new_stall == cfg.wd_stall_cycles).sum())
-            state["wd_stall"] = new_stall
+                parts[PART_STALL])
             hops_now = push_rec[..., F_HOPS]
             lv = net & (hops_now > cfg.wd_hop_limit)
             lv_src = jnp.where(lv, w_all[..., F_SRC], n)
@@ -495,14 +648,15 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
         # Identical op for op to the unfused oracle's block: reads
         # existing cycle values, writes only the tel_* ring buffers,
         # consumes no RNG — core statistics stay bit-identical with
-        # telemetry on or off, on both backends.
+        # telemetry on or off, on every backend.
         if tel_epoch:
             slot = (cycle // tel_epoch) % cfg.tel_slots
             state["tel_cycles"] = state["tel_cycles"].at[slot].add(1)
             state["tel_chan"] = state["tel_chan"].at[slot].add(
                 net[t.chan_src_n, t.chan_src_p].astype(jnp.int32))
             state["tel_counts"] = state["tel_counts"].at[slot].add(
-                jnp.stack([gen.sum(), push.sum(), (gen & ~space).sum(),
+                jnp.stack([parts[PART_GEN], parts[PART_PUSH],
+                           parts[PART_SHED],
                            tail_ej.sum()]).astype(jnp.int32))
             nb = cfg.tel_occ_bins
             obin = jnp.minimum(state["q_size"].sum() * nb // (n * q),
@@ -512,5 +666,31 @@ def make_cycle_fn(meta: dict, cfg: SimConfig):
                 slot, jnp.where(tail_ej, hbin, cfg.lat_bins)].add(
                 1, mode="drop")
         return state
+
+    return tile_fn, finish_fn
+
+
+def make_cycle_fn(meta: dict, cfg: SimConfig):
+    """Build ``cycle_fn(tables, state, rand, cycle) -> state`` — the
+    fused per-cycle transition over the core state arrays (no PRNG
+    key; ``rand`` carries this cycle's draws from :func:`split_rand`,
+    ``cycle`` is the in-chunk cycle index).
+
+    This is the single-tile composition of :func:`make_cycle_parts`
+    (the whole network as one tile at ``node0 = 0``), so the dense
+    fallback, the whole-array Pallas kernel and the blocked grid all
+    execute the SAME decomposed body — the blocked path cannot diverge
+    from the others by construction.
+    """
+    tile_fn, finish_fn = make_cycle_parts(meta, cfg)
+    node_keys, input_keys, scalar_keys = tile_state_keys(cfg)
+
+    def cycle_fn(t, state, rand, cycle):
+        fs_pre = state["fifo_size"]
+        ts = {k: state[k] for k in node_keys + input_keys + scalar_keys}
+        new_ts, mov, parts = tile_fn(t, ts, rand, fs_pre, cycle, 0)
+        state = dict(state)
+        state.update(new_ts)
+        return finish_fn(t, state, mov, parts, cycle)
 
     return cycle_fn

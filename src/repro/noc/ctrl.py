@@ -136,12 +136,25 @@ class TrafficEstimator:
     epochs keeps the estimate current under drift while smoothing
     sampling noise — exactly the "statistical information" path of paper
     §4.1, but gathered online.
+
+    ``prior`` is the offline matrix the initial plan was built from: it
+    backs :attr:`matrix` until the first packets are observed, so a
+    cold-start replan (a fault signalled before any delivery) plans
+    from the best statistics available instead of requiring every
+    caller to carry its own fallback.  The prior never mixes into the
+    EMA — the first observed epoch replaces it outright, exactly as
+    before — and an all-zero observation window simply keeps the
+    current estimate (the empty-window divide is guarded here, in both
+    :meth:`update` and :attr:`matrix`, not at call sites).
     """
 
-    def __init__(self, num_nodes: int, ema: float = 0.5):
+    def __init__(self, num_nodes: int, ema: float = 0.5,
+                 prior: np.ndarray | None = None):
         self.ema = float(ema)
         self._m: np.ndarray | None = None
         self._n = int(num_nodes)
+        self._prior = (np.asarray(prior, np.float64).copy()
+                       if prior is not None else None)
 
     def update(self, pair_counts: np.ndarray) -> None:
         """Fold one epoch's (N, N) pair-count delta into the estimate."""
@@ -159,10 +172,13 @@ class TrafficEstimator:
 
     @property
     def matrix(self) -> np.ndarray | None:
-        """Current normalized estimate (None until the first packets)."""
-        if self._m is None:
+        """Current normalized estimate — the observed EMA once any
+        packets have been seen, else the offline prior; None only when
+        neither carries any demand."""
+        m = self._m if self._m is not None else self._prior
+        if m is None:
             return None
-        m = self._m.copy()
+        m = m.copy()
         np.fill_diagonal(m, 0.0)
         s = m.sum()
         return m / s if s > 0 else None
@@ -488,7 +504,11 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
     fault_pending = False
     cur_unroutable = None    # active admission-control mask (shed pairs)
 
-    estimator = TrafficEstimator(topo.num_nodes, ema=rc.ema)
+    # the offline matrix rides along as the estimator's cold-start
+    # prior (never the ground-truth *current* matrix — that would be
+    # the oracle): a fault before any delivery still gets a plan
+    estimator = TrafficEstimator(topo.num_nodes, ema=rc.ema,
+                                 prior=traffic)
     detector = DriftDetector(threshold=rc.drift_threshold)
     replans: list[Replan] = []
 
@@ -670,14 +690,13 @@ def run_controlled(topo: Topology, traffic: np.ndarray, cfg: SimConfig,
             # real fabrics); traffic drift must be *detected*
             trigger = "fault" if fault_pending else "drift"
             do = fault_pending or drifted
+            # estimator.matrix backs off to the offline prior until the
+            # first packets arrive, so a cold-start fault replans from
+            # the plan-time statistics; None only when there is no
+            # demand to plan for at all
             m = estimator.matrix
             if m is None:
-                # no packets observed yet: fall back to the offline
-                # statistics the initial plan was built from (never the
-                # ground-truth current matrix — that would be the oracle)
-                m = np.asarray(traffic, np.float64) if fault_pending \
-                    else None
-                do = do and m is not None
+                do = False
         if not do:
             continue
         drift_dist = detector.last_distance

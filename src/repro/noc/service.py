@@ -91,8 +91,10 @@ def _event_desc(ev) -> dict:
 # SimConfig fields that never change results — observability probes are
 # bit-identity-neutral (tests/test_obs.py), so toggling telemetry on a
 # spec must resume the SAME job, exactly like multi_device below.
+# sim_tile_nodes only picks the kernel schedule (whole/blocked/dense are
+# bit-identical, tests/test_simstep_kernel.py), so it rides along too.
 _OBS_FIELDS = frozenset({"telemetry", "tel_epoch", "tel_slots",
-                         "tel_occ_bins"})
+                         "tel_occ_bins", "sim_tile_nodes"})
 
 
 def spec_fingerprint(spec: CampaignSpec) -> str:

@@ -151,6 +151,33 @@ def build_tables(topo: Topology, traffic: np.ndarray,
     return tables, meta
 
 
+def abstract_tables(meta: dict) -> _Tables:
+    """The :class:`_Tables` a cell traces, as shapes only — one
+    :class:`jax.ShapeDtypeStruct` per field, derived from ``meta``
+    without building a topology or plan.
+
+    Single source of truth for the kernel package's capacity math
+    (``repro.kernels.simstep.ops.state_footprint_bytes`` and the blocked
+    tile chooser): the VMEM gate sizes the *actual* traced operands
+    instead of a hand-maintained byte formula.  A drift test
+    (``tests/test_simstep_kernel.py``) pins every field's shape and
+    dtype against real :func:`build_tables` output across the topology
+    zoo, so this mirror cannot silently disagree with reality."""
+    n, p, nin, c = meta["N"], meta["P"], meta["NIN"], meta["C"]
+    nd, o = meta["NDIM"], meta["O"]
+
+    def s(shape, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    return _Tables(
+        port=s((o, n, n)), choice=s((n, n)), neighbor=s((n, p)),
+        recv_port=s((n, p)), cdf=s((n, n), jnp.float32),
+        p_gen=s((n,), jnp.float32), coords=s((n, nd)), strides=s((nd,)),
+        n_of=s((nin,)), p_of=s((nin,)), v_of=s((nin,)),
+        chan_src_n=s((c,)), chan_src_p=s((c,)), chan_of=s((n, p)),
+        chan_bw=s((c,), jnp.float32), esc_port=s((n, n)))
+
+
 def source_queue_meta(tables: _Tables,
                       cfg: SimConfig) -> tuple[np.ndarray, float]:
     """(io_mask, qcap) for :func:`queue_occupancy` — one ``p_gen`` device
@@ -743,7 +770,9 @@ def _cfg_key(cfg: SimConfig) -> tuple:
         packet_len=cfg.packet_len, src_queue_pkts=cfg.src_queue_pkts,
         cycles=cfg.cycles, warmup=cfg.warmup, drain=cfg.drain,
         lat_bins=cfg.lat_bins, lat_bin_width=cfg.lat_bin_width,
-        use_kernel=bool(cfg.use_kernel), telemetry=bool(cfg.telemetry),
+        use_kernel=bool(cfg.use_kernel),
+        sim_tile_nodes=int(cfg.sim_tile_nodes),
+        telemetry=bool(cfg.telemetry),
         tel_epoch=cfg.tel_epoch, tel_slots=cfg.tel_slots,
         tel_occ_bins=cfg.tel_occ_bins, watchdog=bool(cfg.watchdog),
         wd_stall_cycles=cfg.wd_stall_cycles,

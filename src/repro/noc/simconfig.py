@@ -64,6 +64,17 @@ class SimConfig:
     # the differential-testing oracle (tests/test_simstep_kernel.py) and
     # the simstep_scale benchmark baseline.  Both are bit-identical.
     use_kernel: bool = True
+    # Blocked simstep kernel (repro.kernels.simstep): tile the per-cycle
+    # body over node ranges of this size so only one tile's flit/queue
+    # records are resident on chip at a time (double-buffered HBM→VMEM
+    # streaming on TPU/GPU; a vmapped-tiles XLA flavor on CPU).  Must
+    # divide the node count.  0 = auto: the dispatcher
+    # (repro.kernels.simstep.ops.make_step) picks whole-array when the
+    # state fits the VMEM budget, else the largest fitting tile, else
+    # the fused dense body.  Every path is bit-identical
+    # (tests/test_simstep_kernel.py), so — like telemetry — this knob
+    # is excluded from the service's spec fingerprint.
+    sim_tile_nodes: int = 0
     # In-sim telemetry probes (repro.obs.probe): when on, the per-cycle
     # transition additionally accumulates fixed-size ring buffers of
     # time-resolved statistics (per-channel load, offered/accepted/shed/
@@ -98,6 +109,9 @@ class SimConfig:
             raise ValueError(
                 f"warmup ({self.warmup}) + drain ({self.drain}) leaves no "
                 f"measurement window inside cycles ({self.cycles})")
+        if self.sim_tile_nodes < 0:
+            raise ValueError(
+                f"sim_tile_nodes ({self.sim_tile_nodes}) must be >= 0")
 
     @property
     def measure(self) -> int:

@@ -1,15 +1,15 @@
 """Regenerate the golden campaign fixtures.
 
 Usage:  PYTHONPATH=src python tests/goldens/regen.py
-            [--out DIR] [--sim-path {fused,unfused}]
+            [--out DIR] [--sim-path {blocked,fused,unfused}]
 
 Writes ``campaign_4x4.json`` / ``ctrl_4x4.json`` next to this file — or
 into ``--out DIR`` (e.g. in CI, which regenerates into a scratch dir and
 uploads the diff against the committed fixtures as a workflow artifact).
 ``--sim-path`` selects the per-cycle transition (the fused flit-step
-kernel, the default, or the unfused oracle); CI regenerates with BOTH
-and diffs them, attesting the bit-identity contract on the pinned
-fixtures themselves.
+kernel, the default; the unfused oracle; or the blocked node-tile
+kernel); CI regenerates with EACH and cross-diffs them, attesting the
+bit-identity contract on the pinned fixtures themselves.
 Overwrite the committed fixtures ONLY when a simulator change
 intentionally alters behaviour, and say so in the commit message — the
 golden test exists to make unintended changes loud.
@@ -32,13 +32,20 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "campaign_4x4.json")
 CTRL_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "ctrl_4x4.json")
 
 
-# --sim-path choices: both per-cycle transitions must regenerate the
-# SAME fixtures (the fused kernel is bit-identical to the unfused
-# oracle), so CI regenerates with each and diffs the two.
-SIM_PATHS = {"fused": True, "unfused": False}
+# --sim-path choices: every per-cycle transition must regenerate the
+# SAME fixtures (the fused kernel — whole-array or blocked over node
+# tiles — is bit-identical to the unfused oracle), so CI regenerates
+# with each and cross-diffs them.  Each entry maps the base SimConfig
+# onto that path; "blocked" pins two 8-node tiles on the 4x4 mesh.
+SIM_PATHS = {
+    "fused": lambda cfg: cfg.replace(use_kernel=True),
+    "unfused": lambda cfg: cfg.replace(use_kernel=False),
+    "blocked": lambda cfg: cfg.replace(use_kernel=True,
+                                       sim_tile_nodes=8),
+}
 
 
-def golden_spec(use_kernel: bool = True):
+def golden_spec(to_path=SIM_PATHS["fused"]):
     from repro.core import mesh2d
     from repro.noc import Algo, CampaignSpec, SimConfig
 
@@ -48,12 +55,11 @@ def golden_spec(use_kernel: bool = True):
         patterns=("uniform", "tornado"),
         rates=(0.15, 0.5),
         seeds=(0, 1),
-        base=SimConfig(cycles=1000, warmup=300, drain=100,
-                       use_kernel=use_kernel),
+        base=to_path(SimConfig(cycles=1000, warmup=300, drain=100)),
     )
 
 
-def ctrl_spec(use_kernel: bool = True):
+def ctrl_spec(to_path=SIM_PATHS["fused"]):
     """Pinned fault-scenario campaign: one central link retrains at 25%
     width mid-measure; the stale and online control policies face it."""
     from repro.core import mesh2d
@@ -68,7 +74,7 @@ def ctrl_spec(use_kernel: bool = True):
         patterns=("uniform",),
         rates=(0.35,),
         seeds=(0, 1),
-        base=SimConfig(cycles=2400, warmup=400, use_kernel=use_kernel),
+        base=to_path(SimConfig(cycles=2400, warmup=400)),
         scenarios=(
             Scenario("linkfail_stale", events=fail, policy="stale",
                      replan=rc),
@@ -78,10 +84,10 @@ def ctrl_spec(use_kernel: bool = True):
     )
 
 
-def compute_goldens(use_kernel: bool = True) -> dict:
+def compute_goldens(to_path=SIM_PATHS["fused"]) -> dict:
     from repro.noc import run_campaign
 
-    res = run_campaign(golden_spec(use_kernel))
+    res = run_campaign(golden_spec(to_path))
     points = {}
     for p in res.points:
         r = p.result
@@ -107,10 +113,10 @@ def compute_goldens(use_kernel: bool = True) -> dict:
     }
 
 
-def compute_ctrl_goldens(use_kernel: bool = True) -> dict:
+def compute_ctrl_goldens(to_path=SIM_PATHS["fused"]) -> dict:
     from repro.noc import run_campaign
 
-    res = run_campaign(ctrl_spec(use_kernel))
+    res = run_campaign(ctrl_spec(to_path))
     points = {}
     for p in res.points:
         r = p.result
@@ -148,12 +154,13 @@ def main(argv=None):
     ap.add_argument("--sim-path", default="fused",
                     choices=sorted(SIM_PATHS),
                     help="per-cycle transition to regenerate with: the "
-                         "fused kernel (default, the simulator default) "
-                         "or the unfused oracle — both must produce "
-                         "identical fixtures, which CI attests by "
-                         "regenerating with each and diffing")
+                         "fused kernel (default, the simulator "
+                         "default), the unfused oracle, or the blocked "
+                         "node-tile kernel — all must produce identical "
+                         "fixtures, which CI attests by regenerating "
+                         "with each and cross-diffing")
     args = ap.parse_args(argv)
-    use_kernel = SIM_PATHS[args.sim_path]
+    to_path = SIM_PATHS[args.sim_path]
     golden_path, ctrl_path = GOLDEN_PATH, CTRL_GOLDEN_PATH
     if args.out:
         os.makedirs(args.out, exist_ok=True)
@@ -161,13 +168,13 @@ def main(argv=None):
                                    os.path.basename(GOLDEN_PATH))
         ctrl_path = os.path.join(args.out,
                                  os.path.basename(CTRL_GOLDEN_PATH))
-    goldens = compute_goldens(use_kernel)
+    goldens = compute_goldens(to_path)
     with open(golden_path, "w") as f:
         json.dump(goldens, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {len(goldens['points'])} golden points to "
           f"{golden_path} ({args.sim_path} sim path)")
-    ctrl = compute_ctrl_goldens(use_kernel)
+    ctrl = compute_ctrl_goldens(to_path)
     with open(ctrl_path, "w") as f:
         json.dump(ctrl, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -266,3 +266,42 @@ def test_rate_scale_drift_event():
     # injection stops at the event: far fewer flits than the full run
     full = run_sweep(TOPO, UNI, CFG.replace(algo=Algo.XY), [0.35])[0]
     assert r.injected_flits < full.injected_flits * 0.6
+
+
+def test_estimator_prior_backs_cold_start_and_empty_windows():
+    """The offline prior owns the cold-start fallback: matrix() serves
+    it (diagonal zeroed, normalized) until the first packets, an
+    all-zero window keeps the current estimate instead of dividing by
+    it, and the first real observation replaces the prior outright."""
+    est = TrafficEstimator(4, prior=np.ones((4, 4)))
+    m = est.matrix
+    assert m is not None and np.isfinite(m).all()
+    assert m.sum() == pytest.approx(1.0)
+    assert np.all(np.diag(m) == 0)
+    est.update(np.zeros((4, 4)))          # empty window: guarded no-op
+    np.testing.assert_array_equal(est.matrix, m)
+    c = np.zeros((4, 4))
+    c[0, 1] = 5.0
+    est.update(c)
+    assert est.matrix[0, 1] == pytest.approx(1.0)
+    assert TrafficEstimator(4).matrix is None       # nothing to serve
+    assert TrafficEstimator(4, prior=np.zeros((4, 4))).matrix is None
+
+
+def test_cold_start_fault_replans_before_any_packet():
+    """Regression for the cycle-0 cold start: a fault in the very first
+    epoch with ZERO injected packets (rate 0) must still replan — the
+    estimator serves the offline prior, and the resulting table clears
+    deadlock certification (replan() raises CertificationError
+    otherwise).  Previously the zero-observation window left matrix()
+    None and only a caller-side special case kept fault triggers alive."""
+    fail = (LinkFail(cycle=1, links=FAIL_LINKS, bw_scale=0.25),)
+    cfg = CFG.replace(cycles=1200, warmup=100)
+    out = run_controlled(
+        TOPO, UNI, cfg,
+        Scenario("cold", events=fail, policy="online",
+                 replan=ReplanConfig(epoch=400)),
+        rates=[0.0], bidor_table=PLAN.table)
+    assert out.replans and out.replans[0].trigger == "fault"
+    assert out.replans[0].cycle <= 400
+    assert out.replans[0].unroutable_pairs == 0

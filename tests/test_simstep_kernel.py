@@ -212,6 +212,221 @@ def test_fused_is_the_default_and_flag_reaches_runner():
     assert dict(k_f)["use_kernel"] is True
 
 
+def _proper_tile(meta) -> int:
+    """Largest tile that divides N without being the whole network —
+    the multi-program grid actually has to stitch tiles together."""
+    n = meta["N"]
+    return max(d for d in range(1, n) if n % d == 0)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_blocked_bit_identical_from_fresh_state(topo_name, algo):
+    """Every (topology, algorithm) cell through the BLOCKED path (the
+    node-tile grid body, compiled ``vmap`` realization on CPU): 150
+    cycles from fresh state, full state pytree equal bit for bit
+    against the unfused oracle — the third leg of the battery."""
+    if algo == Algo.ODDEVEN and TOPOS[topo_name].ndim != 2:
+        pytest.skip("odd-even is 2D-only")
+    tables, meta, cfg_u, cfg_f = _cell(topo_name, algo)
+    cfg_b = cfg_f.replace(sim_tile_nodes=_proper_tile(meta))
+    points = [(0.25, 0), (0.8, 1)]
+    out_u = jax.device_get(sim.get_runner(meta, cfg_u, 150)(
+        tables, sim.make_states(meta, cfg_u, points)))
+    out_b = jax.device_get(sim.get_runner(meta, cfg_b, 150)(
+        tables, sim.make_states(meta, cfg_b, points)))
+    _assert_states_equal(
+        out_u, out_b,
+        f"blocked/{topo_name}/{algo.name} tile={cfg_b.sim_tile_nodes}")
+
+
+@pytest.mark.parametrize("tile", [1, 4, 16])
+def test_blocked_tile_sizes_straddle_gate(tile):
+    """Tile sizes bracketing the grid's edge cases — one node per
+    program, a middle split, and a single tile spanning the whole
+    network (grid of 1) — all bit-identical on mesh4x4/BiDOR."""
+    tables, meta, cfg_u, cfg_f = _cell("mesh4x4", Algo.BIDOR)
+    cfg_b = cfg_f.replace(sim_tile_nodes=tile)
+    points = [(0.6, 2)]
+    out_u = jax.device_get(sim.get_runner(meta, cfg_u, 100)(
+        tables, sim.make_states(meta, cfg_u, points)))
+    out_b = jax.device_get(sim.get_runner(meta, cfg_b, 100)(
+        tables, sim.make_states(meta, cfg_b, points)))
+    _assert_states_equal(out_u, out_b, f"blocked-tile{tile}/BIDOR")
+
+
+@pytest.mark.parametrize("algo", [Algo.XY, Algo.BIDOR, Algo.ODDEVEN])
+def test_blocked_pallas_interpret_matches_unfused(algo):
+    """The actual multi-program Pallas kernel (grid over node tiles,
+    interpret mode on CPU — same kernel the compiled TPU/GPU blocked
+    path lowers) against the unfused oracle."""
+    tables, meta, cfg_u, _ = _cell("mesh4x4", algo)
+    cfg_b = cfg_u.replace(sim_tile_nodes=8)
+    step_u = sim._make_step(meta, cfg_u)
+    step_p = simstep.make_step(meta, cfg_b, interpret=True)
+    st0 = sim.fresh_state(meta, cfg_u)
+    st0["rate"] = jnp.float32(0.5)
+    st0["key"] = sim.point_key(3, 0.5)
+
+    def run(step, state):
+        state, _ = jax.lax.scan(lambda s, c: step(tables, s, c), state,
+                                jnp.arange(80))
+        return jax.device_get(state)
+
+    _assert_states_equal(run(step_u, st0), run(step_p, st0),
+                         f"blocked-pallas-interpret/{algo.name}")
+
+
+@pytest.mark.parametrize("interpret", [False, True])
+def test_blocked_telemetry_watchdog_parity(interpret):
+    """Telemetry rings and watchdog counters cross tile boundaries (the
+    epilogue owns them): parity with observability fully enabled, on
+    both the compiled vmap realization and the Pallas interpreter."""
+    topo = TOPOS["mesh4x4"]
+    tm = traffic.uniform(topo)
+    cfg_u = SimConfig(algo=Algo.BIDOR, cycles=4000, warmup=50,
+                      use_kernel=False, telemetry=True, watchdog=True)
+    table = build_plan(topo, tm).table
+    tables, meta = sim.build_tables(topo, tm, table, cfg_u.num_vcs)
+    cfg_b = cfg_u.replace(sim_tile_nodes=4)
+    step_u = sim._make_step(meta, cfg_u)
+    step_b = simstep.make_step(meta, cfg_b, interpret=interpret)
+    st0 = sim.fresh_state(meta, cfg_u)
+    st0["rate"] = jnp.float32(0.9)
+    st0["key"] = sim.point_key(5, 0.9)
+
+    def run(step, state):
+        state, _ = jax.lax.scan(lambda s, c: step(tables, s, c), state,
+                                jnp.arange(100))
+        return jax.device_get(state)
+
+    _assert_states_equal(run(step_u, st0), run(step_b, st0),
+                         f"blocked-obs interpret={interpret}")
+
+
+def test_resolve_path_dispatch_ladder():
+    """The whole/blocked/dense ladder around the VMEM gate: generous
+    budget → whole-array, budget under the footprint → largest fitting
+    node tile, starved budget → dense; CPU auto → dense; explicit pins
+    beat everything."""
+    from repro.kernels.simstep import ops as simstep_ops
+
+    cfg = SimConfig()
+    _, meta = sim.build_tables(TOPOS["mesh4x4"],
+                               traffic.uniform(TOPOS["mesh4x4"]),
+                               None, cfg.num_vcs)
+    foot = simstep_ops.state_footprint_bytes(meta, cfg)
+    assert simstep_ops.resolve_path(
+        meta, cfg, supported=True, budget=foot) == ("whole", 0, False)
+    path, tile, interp = simstep_ops.resolve_path(
+        meta, cfg, supported=True, budget=foot - 1)
+    assert path == "blocked" and tile > 0 and meta["N"] % tile == 0
+    assert not interp
+    assert simstep_ops.blocked_tile_bytes(meta, cfg, tile) <= foot - 1
+    assert simstep_ops.resolve_path(
+        meta, cfg, supported=True, budget=64) == ("dense", 0, False)
+    assert simstep_ops.resolve_path(
+        meta, cfg, supported=False)[0] == "dense"
+    assert simstep_ops.resolve_path(
+        meta, cfg.replace(sim_tile_nodes=8),
+        supported=False) == ("blocked", 8, False)
+    assert simstep_ops.resolve_path(
+        meta, cfg.replace(sim_tile_nodes=8), use_pallas=False,
+        supported=True) == ("dense", 0, False)
+
+
+def test_resolve_path_64x64_runs_blocked_on_pallas_backends():
+    """At 64x64 the whole-array state is ~50x the VMEM budget; the auto
+    ladder must land on the blocked kernel with a tile that divides the
+    network (meta built symbolically — the gate only reads shapes)."""
+    from repro.kernels.simstep import ops as simstep_ops
+
+    cfg = SimConfig()
+    n = 64 * 64
+    meta = dict(N=n, P=5, V=cfg.num_vcs, NIN=n * 5 * cfg.num_vcs,
+                P_LOCAL=4, NDIM=2, O=1, C=4 * 64 * 63)
+    assert (simstep_ops.state_footprint_bytes(meta, cfg)
+            > simstep_ops.VMEM_BUDGET_BYTES)
+    path, tile, interp = simstep_ops.resolve_path(meta, cfg,
+                                                  supported=True)
+    assert path == "blocked" and tile > 0 and n % tile == 0
+    assert (simstep_ops.blocked_tile_bytes(meta, cfg, tile)
+            <= simstep_ops.VMEM_BUDGET_BYTES)
+
+
+def test_vmem_budget_env_override(monkeypatch):
+    """SIMSTEP_VMEM_BUDGET rebinds the gate without code changes: a
+    tiny budget pushes the 4x4 auto path off the whole-array kernel."""
+    from repro.kernels.simstep import ops as simstep_ops
+
+    cfg = SimConfig()
+    _, meta = sim.build_tables(TOPOS["mesh4x4"],
+                               traffic.uniform(TOPOS["mesh4x4"]),
+                               None, cfg.num_vcs)
+    monkeypatch.delenv("SIMSTEP_VMEM_BUDGET", raising=False)
+    assert simstep_ops.vmem_budget_bytes() == \
+        simstep_ops.VMEM_BUDGET_BYTES
+    monkeypatch.setenv("SIMSTEP_VMEM_BUDGET", "4096")
+    assert simstep_ops.vmem_budget_bytes() == 4096
+    path, tile, _ = simstep_ops.resolve_path(meta, cfg, supported=True)
+    assert path != "whole"
+
+
+def test_footprint_matches_retired_formula():
+    """One-time cross-check of the eval_shape-derived footprint against
+    the retired hand-maintained byte formula (deleted from ops.py in
+    favor of deriving from the real state).  The formula ignored a few
+    small vectors by design, so the derived count sits within 1% —
+    close enough to prove the derivation counts the same state, exact
+    enough to catch a unit slip (words vs bytes, a dropped array)."""
+    from repro.kernels.simstep import ops as simstep_ops
+
+    def retired_formula(meta, cfg):  # frozen verbatim from PR 5's ops.py
+        n, p, v, nin, c = (meta["N"], meta["P"], meta["V"], meta["NIN"],
+                           meta["C"])
+        o = meta["O"]
+        words = (nin * cfg.buf_per_vc * 10
+                 + n * cfg.src_queue_pkts * 5
+                 + 3 * n * n
+                 + n * p * v + n * p
+                 + 8 * nin + 10 * n + 5 * c
+                 + o * n * n + 3 * n * n)
+        if cfg.telemetry:
+            words += cfg.tel_slots * (c + 1 + 4 + cfg.tel_occ_bins
+                                      + cfg.lat_bins)
+        if cfg.watchdog:
+            words += nin + n + 2
+        return 4 * words
+
+    for topo_name in sorted(TOPOS):
+        topo = TOPOS[topo_name]
+        for cfg in (SimConfig(),
+                    SimConfig(telemetry=True, watchdog=True)):
+            _, meta = sim.build_tables(topo, traffic.uniform(topo),
+                                       None, cfg.num_vcs)
+            derived = simstep_ops.state_footprint_bytes(meta, cfg)
+            frozen = retired_formula(meta, cfg)
+            assert abs(derived - frozen) / frozen < 0.01, \
+                (topo_name, cfg.telemetry, derived, frozen)
+
+
+def test_abstract_tables_match_build_tables():
+    """The symbolic table mirror the capacity math sizes against the
+    arrays cells actually trace: every field's shape and dtype, across
+    the topology zoo (with and without a BiDOR plan table)."""
+    for topo_name in sorted(TOPOS):
+        topo = TOPOS[topo_name]
+        tm = traffic.uniform(topo)
+        for table in (None, build_plan(topo, tm).table):
+            tables, meta = sim.build_tables(topo, tm, table,
+                                            SimConfig().num_vcs)
+            abstract = sim.abstract_tables(meta)
+            for field, real, spec in zip(tables._fields, tables,
+                                         abstract):
+                assert real.shape == spec.shape, (topo_name, field)
+                assert real.dtype == spec.dtype, (topo_name, field)
+
+
 def test_split_rand_matches_unfused_key_schedule():
     """The hoisted RNG consumes the lane key exactly like the unfused
     step: new key == first subkey of the 5-way split, and the draws
